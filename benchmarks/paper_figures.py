@@ -1,0 +1,303 @@
+"""One benchmark per paper table/figure (DESIGN.md §7 index).
+
+Each function returns a list of (name, us_per_call, derived) rows where
+``derived`` carries the figure's headline metric; ``run.py`` prints the
+CSV.  Simulator-driven figures use the calibrated discrete-event model
+(no RDMA hardware here); JAX-measured figures run real collectives on
+virtual devices via subprocess (device count is process-global).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import cost_model, topology, transport_sim
+
+GiB = 1 << 30
+MiB = 1 << 20
+
+
+def _bw(gbps: float) -> str:
+    return f"{gbps:.2f}GB/s"
+
+
+def fig3_datapath_overhead():
+    """Fig. 3: memcpy time per mechanism, 2 GB SendRecv NV<->V1."""
+    topo = topology.paper_testbed()
+    nv, v1 = topo.clusters[0], topo.clusters[1]
+    t0 = time.perf_counter_ns()
+    cmp = transport_sim.memcpy_comparison(nv, v1, 2 * GiB)
+    dt = (time.perf_counter_ns() - t0) / 1e3
+    return [("fig3_d2h_h2d_ms", dt, f"{cmp['host_d2h_h2d_s']*1e3:.1f}ms"),
+            ("fig3_2x_d2d_ms", dt, f"{cmp['hetccl_2x_d2d_s']*1e3:.1f}ms"),
+            ("fig3_ratio", dt, f"{cmp['ratio']:.2f}x(paper>=3.8x)")]
+
+
+def fig11_p2p_bandwidth():
+    """Fig. 11: SendRecv bandwidth per mechanism + alpha-beta fit."""
+    topo = topology.paper_testbed()
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    rows = []
+    sizes = [1 * MiB, 16 * MiB, 256 * MiB, 2 * GiB]
+    for mech in ("native", "hetccl", "host"):
+        src, dst = (nv, nv) if mech == "native" else (nv, v3)
+        for n in sizes:
+            t0 = time.perf_counter_ns()
+            tr = transport_sim.simulate_p2p(src, dst, n, mech)
+            dt = (time.perf_counter_ns() - t0) / 1e3
+            rows.append((f"fig11_{mech}_{n // MiB}MiB", dt,
+                         _bw(tr.bandwidth_Bps / 1e9)))
+    het = transport_sim.simulate_p2p(nv, v3, 2 * GiB, "hetccl")
+    host = transport_sim.simulate_p2p(nv, v3, 2 * GiB, "host")
+    wire = min(nv.nic_Bps, v3.nic_Bps)
+    rows.append(("fig11_hetccl_vs_gloo", 0.0,
+                 f"{het.bandwidth_Bps / host.bandwidth_Bps:.1f}x(paper>=6x)"))
+    rows.append(("fig11_frac_slowest_hw", 0.0,
+                 f"{het.bandwidth_Bps / wire * 100:.1f}%(paper 91.4%)"))
+    times = [transport_sim.simulate_p2p(nv, v3, s, "hetccl").time_s
+             for s in sizes]
+    alpha, beta = transport_sim.fit_alpha_beta(sizes, times)
+    rows.append(("fig11_alpha_fit_ms", 0.0,
+                 f"{alpha*1e3:.3f}ms(paper 0.10-0.40ms)"))
+    return rows
+
+
+def fig12_13_hetero_collectives():
+    """Fig. 12/13: heterogeneous AllGather/AllReduce vs the slower
+    vendor's homogeneous collective — 2-node setups as in the paper."""
+    import dataclasses as dc
+
+    topo = topology.paper_testbed()
+    two = [dc.replace(c, n_nodes=2) for c in topo.clusters]
+    rows = []
+    pairs = [(0, 1), (0, 2), (0, 3), (2, 3)]
+    n = 256 * MiB
+    for coll, fig in (("all_gather", "fig12"), ("all_reduce", "fig13")):
+        for a, b in pairs:
+            pair = topology.HetTopology((two[a], two[b]))
+            est = cost_model.estimate_hier_collective(
+                pair, coll, n, n_chunks=cost_model.optimal_chunks(pair, coll, n))
+            slower = max(
+                (cost_model.ring_all_gather_time(c, n) if coll == "all_gather"
+                 else cost_model.ring_all_reduce_time(c, n))
+                for c in pair.clusters)
+            lo = min(100, slower / est.sequential_s * 100)   # no overlap
+            hi = min(100, slower / est.pipelined_s * 100)    # full overlap
+            rows.append((f"{fig}_{pair.clusters[0].name[:6]}+"
+                         f"{pair.clusters[1].name[:7]}", 0.0,
+                         f"{lo:.0f}-{hi:.0f}%of_hom"))
+    rows.append(("fig12_paper_claim", 0.0, "85.7-97.8%"))
+    rows.append(("fig13_paper_claim", 0.0, "up_to_70.8%"))
+    return rows
+
+
+def fig14_c2c_vs_native():
+    """Fig. 14: the 2+2 C2C breakdown vs native flat collectives on the
+    SAME homogeneous hardware (4 A800 nodes) — isolates the algorithm's
+    own overhead (host-proxy alphas, doubled combining volume)."""
+    import dataclasses as dc
+
+    nv = topology.paper_testbed().clusters[0]
+    half = dc.replace(nv, n_nodes=2, name="nv2")
+    topo = topology.HetTopology((half, dc.replace(half, name="nv2b")))
+    native = dc.replace(nv, n_nodes=4)
+    n = 256 * MiB
+    rows = []
+    for coll in ("all_gather", "all_reduce"):
+        est = cost_model.estimate_hier_collective(topo, coll, n, n_chunks=16)
+        t_native = (cost_model.ring_all_gather_time(native, n)
+                    if coll == "all_gather"
+                    else cost_model.ring_all_reduce_time(native, n))
+        lo = min(100, t_native / est.sequential_s * 100)
+        hi = min(100, t_native / est.pipelined_s * 100)
+        rows.append((f"fig14_c2c_{coll}", 0.0, f"{lo:.0f}-{hi:.0f}%of_native"))
+    rows.append(("fig14_paper_claim", 0.0, "97.4%AG/59.1%AR"))
+    return rows
+
+
+def fig15_multinic():
+    """Fig. 15: collective bandwidth vs #NICs per node."""
+    topo = topology.paper_testbed()
+    nv = topo.clusters[0]
+    total = 1 * GiB
+    rows = []
+    t1 = None
+    for k in (1, 2, 4, 8):
+        t = transport_sim.simulate_c2c_cpy(nv, nv, total, nics_in_use=k)
+        t1 = t1 or t
+        rows.append((f"fig15_nics{k}", 0.0,
+                     f"{total / t / 1e9:.1f}GB/s({t1 / t:.1f}x)"))
+    return rows
+
+
+def table7_volume_optimality():
+    """Table 7: C2C volumes are the information-theoretic minimum for
+    ring exchange (checked against brute counting)."""
+    topo = topology.tpu_multipod(2, 4)
+    n = 1000
+    rows = []
+    for coll, expect in [("all_reduce", 2 * n * 1 // 2),
+                         ("all_gather", 4 * n),
+                         ("all_to_all", 4 * n)]:
+        send, recv = cost_model.c2c_volume(coll, n, topo, 0)
+        rows.append((f"table7_{coll}", 0.0,
+                     f"send{send}B(min{expect}B)"))
+    return rows
+
+
+def fig16_training_speedup():
+    """Fig. 16: per-step speedup HetCCL vs host-forwarding for the
+    paper's Table-8 setups (setup1: 1xA800 + 1xV1 node, Llama3-3B;
+    setup2: 2+2 nodes, Llama3-8B).  Step time = compute (40% MFU over
+    the mixed fleet) + DP gradient sync; the paper's PP handoffs ride
+    the same transport and scale the same way."""
+    import dataclasses as dc
+
+    topo = topology.paper_testbed()
+    rows = []
+    # Table 8: PP ACROSS the vendor groups (DP inside each with native
+    # CCLs), so the cross-vendor traffic is the microbatch activations,
+    # fwd + bwd, once per step.
+    for name, params, d_model, gbs, nv_nodes, v1_nodes in (
+            ("llama3_3b", 3.2e9, 3072, 128, 1, 1),
+            ("llama3_8b", 8.0e9, 4096, 256, 2, 2)):
+        sub = topology.HetTopology((
+            dc.replace(topo.clusters[0], n_nodes=nv_nodes),
+            dc.replace(topo.clusters[1], n_nodes=v1_nodes)))
+        seq = 4096
+        act_bytes = int(gbs * seq * d_model * 2 * 2)   # fwd + bwd handoffs
+        t_het = cost_model.c2c_step_time(sub, "send_recv",
+                                         act_bytes, 2e-4, 16)
+        t_host = cost_model.flat_host_forwarding_time(sub, "send_recv",
+                                                      act_bytes)
+        flops = 6 * params * gbs * seq
+        agg = sum(c.n_ranks * c.tflops * 1e12 for c in sub.clusters) * 0.4
+        t_comp = flops / agg
+        speed = (t_host - t_het) / (t_comp + t_host) * 100
+        rows.append((f"fig16_{name}", 0.0,
+                     f"{speed:.1f}%step_time_saving"))
+    rows.append(("fig16_paper_claim", 0.0, "9.1%/16.9%"))
+    return rows
+
+
+def fig17_scalability():
+    """Fig. 17: heterogeneous scaling — throughput of mixed clusters vs
+    homogeneous 2-node baselines (compute-weighted with comm overhead)."""
+    topo = topology.paper_testbed()
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    rows = []
+
+    def tput(clusters, n_nodes_each):
+        import dataclasses as dc
+        cs = tuple(dc.replace(c, n_nodes=k)
+                   for c, k in zip(clusters, n_nodes_each) if k)
+        sub = topology.HetTopology(cs)
+        agg = sum(c.n_ranks * c.tflops for c in cs)
+        grad = int(2 * 8e9) // max(1, sub.n_ranks)
+        if len(cs) > 1:
+            comm = cost_model.estimate_hier_collective(
+                sub, "all_reduce", grad, n_chunks=8).pipelined_s
+        else:
+            comm = cost_model.ring_all_reduce_time(cs[0], grad)
+        t_comp = 6 * 8e9 * 512 * 4096 / (agg * 1e12 * 0.4)
+        return 1.0 / (t_comp + comm)
+
+    base_nv = tput((nv,), (2,))
+    base_v3 = tput((v3,), (2,))
+    het2 = tput((nv, v3), (1, 1))
+    het4 = tput((nv, v3), (2, 2))
+    het8 = tput((nv, v3), (4, 4))
+    rows.append(("fig17_het2_vs_nv2", 0.0, f"{het2 / base_nv * 100:.0f}%"))
+    rows.append(("fig17_het4_vs_nv2", 0.0,
+                 f"+{(het4 / base_nv - 1) * 100:.0f}%(paper+56%)"))
+    rows.append(("fig17_het8_vs_het4", 0.0,
+                 f"+{(het8 / het4 - 1) * 100:.0f}%(paper+51%)"))
+    return rows
+
+
+def fig18_19_serving():
+    """Fig. 18/19: disaggregated serving TTFT/throughput — KV-cache
+    transfer per mechanism for Qwen2-7B.  vLLM moves the cache layer-
+    by-layer (28 blocking handoffs on the host path; HetCCL pipelines
+    them through the RDMA pool), and under the 100-request burst the
+    prefill server serializes (prefill + transfer) per request, so mean
+    TTFT scales with the service time."""
+    topo = topology.paper_testbed()
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    n_layers = 28
+    layer_bytes = int(2 * 4 * 128 * 2048 * 2)     # k+v per layer, 2k prompt
+    rows = []
+    svc = {}
+    for mech in ("native", "hetccl", "host"):
+        src, dst = (nv, nv) if mech == "native" else (nv, v3)
+        per_layer = transport_sim.simulate_p2p(src, dst, layer_bytes, mech)
+        t = per_layer.time_s * n_layers        # layer-serialized handoffs
+        svc[mech] = t
+        rows.append((f"fig18_kv_transfer_{mech}", 0.0, f"{t*1e3:.2f}ms"))
+    prefill = 0.120                             # 7B @ 2k prompt compute
+    # saturated burst: mean TTFT proportional to per-request service
+    s_het, s_host = prefill + svc["hetccl"], prefill + svc["host"]
+    rows.append(("fig18_ttft_reduction", 0.0,
+                 f"{(1 - s_het / s_host)*100:.0f}%(paper 65%)"))
+    dec_step = 0.03
+    tput_gain = (1 / (dec_step + svc["hetccl"] / 8)
+                 - 1 / (dec_step + svc["host"] / 8)) \
+        / (1 / (dec_step + svc["host"] / 8))
+    rows.append(("fig19_tput_gain", 0.0, f"+{tput_gain*100:.0f}%(paper+19%)"))
+    return rows
+
+
+def fig10_wrapper_overhead():
+    """Fig. 10: the vendor-CCL wrapper adds <=2% — in our mapping the
+    hier breakdown inside ONE cluster degenerates to the native
+    collective.  Measured as real wall time of hier_psum (pod_axis=None)
+    vs a raw lax.psum on 8 virtual devices (subprocess: the device
+    count is process-global and benches must see 1 device)."""
+    import json
+    import subprocess
+    import sys
+
+    code = r"""
+import os, time, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from repro.core.collectives import CommConfig, hier_psum
+mesh = jax.make_mesh((8,), ("data",))
+cfg = CommConfig(mode="hier", pod_axis=None, intra_axis="data")
+x = jnp.ones((8, 1 << 20), jnp.float32)
+flat = jax.jit(jax.shard_map(lambda v: lax.psum(v, "data"), mesh=mesh,
+                             in_specs=P("data"), out_specs=P(), check_vma=False))
+hier = jax.jit(jax.shard_map(lambda v: hier_psum(v, cfg), mesh=mesh,
+                             in_specs=P("data"), out_specs=P(), check_vma=False))
+flat(x).block_until_ready(); hier(x).block_until_ready()
+def t(f):
+    t0 = time.perf_counter()
+    for _ in range(30): f(x).block_until_ready()
+    return (time.perf_counter() - t0) / 30
+print(json.dumps({"flat": t(flat), "hier": t(hier)}))
+"""
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=300,
+                          env={"PYTHONPATH": "src", "HOME": "/root",
+                               "PATH": "/usr/bin:/bin"})
+    line = proc.stdout.strip().splitlines()[-1]
+    d = json.loads(line)
+    ovh = (d["hier"] - d["flat"]) / d["flat"] * 100
+    return [("fig10_wrapper_overhead", d["hier"] * 1e6,
+             f"{ovh:+.1f}%walltime(paper<=2%)")]
+
+
+ALL_FIGURES = [
+    ("fig3", fig3_datapath_overhead),
+    ("fig10", fig10_wrapper_overhead),
+    ("fig11", fig11_p2p_bandwidth),
+    ("fig12_13", fig12_13_hetero_collectives),
+    ("fig14", fig14_c2c_vs_native),
+    ("fig15", fig15_multinic),
+    ("fig16", fig16_training_speedup),
+    ("fig17", fig17_scalability),
+    ("fig18_19", fig18_19_serving),
+    ("table7", table7_volume_optimality),
+]

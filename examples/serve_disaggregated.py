@@ -1,0 +1,89 @@
+"""Disaggregated prefill/decode serving across pods (paper §6.2.2).
+
+Pod 0 plays the prefill cluster, pod 1 the decode cluster; the KV cache
+crosses the pod boundary through the HetCCL SendRecv (ppermute over the
+pod axis), optionally int8-compressed.  Generation continuing from the
+transferred cache must match same-pod generation token-for-token.
+
+    PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_test_mesh, runtime_for_mesh
+from repro.models import Model
+from repro.serve import make_kv_transfer, make_serve_steps
+from repro.serve.serve_step import kv_transfer_body
+
+mesh = make_test_mesh()  # (pod=2, data=2, model=2)
+rt = runtime_for_mesh(mesh, moe_capacity_factor=8.0)
+cfg = get_config("qwen2.5-3b", smoke=True)
+model = Model(cfg, rt)
+
+params = model.init(jax.random.key(0))
+B, S, GEN = 4, 16, 8
+prompt = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+prefill, decode, caches_shape = make_serve_steps(model, mesh, B, S + GEN)
+transfer = make_kv_transfer(model, mesh, caches_shape, B)
+transfer_q = make_kv_transfer(model, mesh, caches_shape, B, compress="int8")
+
+tok, caches = prefill(params, prompt)
+print("prefill done; first sampled token per request:", np.asarray(tok[:, 0]))
+
+# ship copies across the pod boundary first: decode() donates its cache.
+# The batch is sharded over (pod, data), so requests travel with their
+# caches: pod 1 takes over pod 0's requests (and vice versa — the 2-pod
+# ring is a swap); globally that's a half-swap permutation.
+moved = transfer(caches)       # pod 0 -> pod 1 (symmetric ring)
+moved_q = transfer_q(caches)   # same, int8 on the wire
+tok_move = jax.jit(jax.shard_map(
+    functools.partial(kv_transfer_body, rt=rt), mesh=mesh,
+    in_specs=(P(("pod", "data")),), out_specs=P(("pod", "data")),
+    check_vma=False))
+tok_moved = tok_move(tok[:, :1])
+
+
+def swap_halves(a):
+    return np.concatenate([a[B // 2:], a[:B // 2]])
+
+
+# -- same-pod generation (reference) ----------------------------------------
+ref_caches, ref_tok = caches, tok
+ref_out = []
+for _ in range(GEN):
+    ref_out.append(np.asarray(ref_tok[:, :1]))
+    ref_tok, ref_caches = decode(params, ref_tok[:, :1], ref_caches)
+
+# -- disaggregated: the peer pod continues the received requests -------------
+out_tok, out_caches = tok_moved, moved
+dis_out = []
+for _ in range(GEN):
+    dis_out.append(np.asarray(out_tok[:, :1]))
+    out_tok, out_caches = decode(params, out_tok[:, :1], out_caches)
+
+same = all((swap_halves(a) == b).all() for a, b in zip(ref_out, dis_out))
+print(f"disaggregated generation matches same-pod (mod ownership swap): "
+      f"{same}")
+assert same
+
+# -- int8-compressed transfer ------------------------------------------------
+qt, qc = tok_move(tok[:, :1]), moved_q
+q_out = []
+for _ in range(GEN):
+    q_out.append(np.asarray(qt[:, :1]))
+    qt, qc = decode(params, qt[:, :1], qc)
+agree = float(np.mean([np.mean(swap_halves(a) == b)
+                       for a, b in zip(ref_out, q_out)]))
+print(f"int8 KV transfer token agreement: {agree*100:.0f}% "
+      f"(4x wire bytes saved)")

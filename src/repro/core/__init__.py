@@ -1,0 +1,29 @@
+"""HetCCL core: the paper's contribution in JAX.
+
+Hierarchical heterogeneous collectives (topology abstraction,
+cluster-level primitives, Algorithm-1 breakdowns, pipelined execution),
+the α–β cost model, DCN-hop compression, and the discrete-event
+transport simulator for the paper's §4.1 mechanism.
+"""
+
+from .collectives import (  # noqa: F401
+    CommConfig,
+    FlatShardMeta,
+    hier_all_gather,
+    hier_all_to_all,
+    hier_psum,
+    hier_psum_scatter,
+    tree_hier_psum,
+    tree_hier_psum_mean,
+    tree_hier_psum_scatter,
+    tree_hier_unscatter,
+)
+from .topology import (  # noqa: F401
+    Cluster,
+    HetTopology,
+    LinkSpec,
+    paper_testbed,
+    proportional_split,
+    tpu_multipod,
+    tpu_pod_cluster,
+)

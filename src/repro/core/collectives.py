@@ -1,0 +1,239 @@
+"""Heterogeneous collectives: Algorithm 1 + Table 7 as JAX functions.
+
+Every global collective is the 3-step hierarchical breakdown
+
+    start homColl (intra-pod, ICI)  ->  C2C (pod axis, DCN)  ->  end homColl
+
+exposed next to a ``flat`` single-collective baseline so the schedule
+can be A/B'd with everything else fixed (the paper's Gloo/flat-NCCL
+comparisons).  All functions run inside shard_map.
+
+The pytree entry points bucket leaves into one flat fp32/bf16 buffer per
+dtype before communicating (gradient bucketing): one α per phase instead
+of one per leaf, and clean, parseable HLO for the roofline analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import compression, primitives
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """How cross-device reduction/gather traffic is scheduled.
+
+    mode:
+      * ``flat``  — single native collective over all data-parallel axes
+                    (the homogeneous-library emulation; baseline).
+      * ``hier``  — paper-faithful AllReduceH: ReduceScatter(intra) ->
+                    c2cRed(pod) -> AllGather(intra).
+      * ``hier_pipelined`` — hier with the C2C step chunked and software-
+                    pipelined against the intra steps (paper §4.3.2).
+    compression: optional codec for the pod (DCN) hop only — ``bf16`` or
+      ``int8`` (error feedback handled by the caller); beyond-paper.
+    """
+
+    mode: str = "hier"
+    pod_axis: str | None = "pod"
+    intra_axis: str = "data"
+    n_chunks: int = 4
+    compression: str | None = None
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return ((self.pod_axis,) if self.pod_axis else ()) + (self.intra_axis,)
+
+
+def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    pad = (-x.size) % multiple
+    if pad:
+        x = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    return x.reshape(-1), pad
+
+
+def _pod_reduce(shard: jax.Array, cfg: CommConfig) -> jax.Array:
+    """The c2cRed step, with optional DCN-only compression."""
+    if cfg.pod_axis is None:
+        return shard
+    if cfg.compression is None:
+        return primitives.c2c_red(shard, cfg.pod_axis)
+    return compression.compressed_psum(shard, cfg.pod_axis, cfg.compression)
+
+
+# ---------------------------------------------------------------------------
+# AllReduceH on one array
+# ---------------------------------------------------------------------------
+
+def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
+    """Global all-reduce over (pod, intra) axes via the Table-7 breakdown.
+
+    DCN cost per chip: 2·(x.nbytes/intra_size)·(P-1)/P — an intra_size×
+    reduction versus the flat single all-reduce."""
+    if cfg.mode == "flat":
+        return lax.psum(x, cfg.dp_axes)
+    intra = cfg.intra_axis
+    isize = primitives.axis_size(intra)
+    flat, pad = _pad_to(x.astype(x.dtype), isize)
+    if cfg.mode == "hier_pipelined" and cfg.pod_axis is not None and cfg.n_chunks > 1:
+        from . import pipelined  # local import to avoid cycle
+        out = pipelined.pipelined_hier_psum(flat, cfg)
+    else:
+        shard = primitives.hom_reduce_scatter(flat, intra)      # start homColl
+        shard = _pod_reduce(shard, cfg)                          # c2cRed
+        out = primitives.hom_all_gather(shard, intra)            # end homColl
+    if pad:
+        out = out[:-pad]
+    return out.reshape(x.shape)
+
+
+def hier_psum_scatter(x: jax.Array, cfg: CommConfig) -> jax.Array:
+    """ReduceScatterH over the intra axis + c2cRed over pods: returns the
+    per-device 1/intra_size flat shard, globally summed.  This is the
+    ZeRO-1 entry: the end-AllGather is deferred to the param update."""
+    intra = cfg.intra_axis
+    isize = primitives.axis_size(intra)
+    flat, _ = _pad_to(x, isize)
+    if cfg.mode == "flat":
+        shard = primitives.hom_reduce_scatter(flat, intra)
+        if cfg.pod_axis is not None:
+            shard = lax.psum(shard, cfg.pod_axis)
+        return shard
+    shard = primitives.hom_reduce_scatter(flat, intra)
+    return _pod_reduce(shard, cfg)
+
+
+def hier_all_gather_flat(shard: jax.Array, cfg: CommConfig,
+                         orig_size: int) -> jax.Array:
+    """Inverse of hier_psum_scatter: AllGather the flat shard over the
+    intra axis and trim padding (the deferred end homColl)."""
+    out = primitives.hom_all_gather(shard, cfg.intra_axis)
+    return out[:orig_size]
+
+
+# ---------------------------------------------------------------------------
+# AllGatherH (Table 7 row 2): c2cCpy of raw shards, then intra Bcast.
+# ---------------------------------------------------------------------------
+
+def hier_all_gather(x: jax.Array, cfg: CommConfig, gather_dim: int = 0) -> jax.Array:
+    """Gather shards over (pod, intra): pod-ring the *raw* shard first
+    (one copy crosses DCN, Table-7-optimal), then the intra AllGather
+    doubles as the end Bcast."""
+    if cfg.mode == "flat" or cfg.pod_axis is None:
+        return primitives.hom_all_gather(x, cfg.dp_axes, gather_dim)
+    g = gather_dim
+    pods = primitives.c2c_cpy(x, cfg.pod_axis)               # (P, *x) over DCN
+    alld = lax.all_gather(pods, cfg.intra_axis, axis=0, tiled=False)  # (D, P, *x)
+    alld = jnp.swapaxes(alld, 0, 1)                           # (P, D, *x)
+    alld = jnp.moveaxis(alld, (0, 1), (g, g + 1))             # x[:g],P,D,x[g:]
+    P_, D_ = primitives.axis_size(cfg.pod_axis), primitives.axis_size(cfg.intra_axis)
+    new_shape = x.shape[:g] + (P_ * D_ * x.shape[g],) + x.shape[g + 1:]
+    return alld.reshape(new_shape)
+
+
+# ---------------------------------------------------------------------------
+# AllToAllH: intra all_to_all then pod all_to_all (ring-scheduled by XLA)
+# ---------------------------------------------------------------------------
+
+def hier_all_to_all(x: jax.Array, cfg: CommConfig, split_dim: int,
+                    concat_dim: int) -> jax.Array:
+    if cfg.mode == "flat" or cfg.pod_axis is None:
+        return primitives.hom_all_to_all(x, cfg.dp_axes, split_dim, concat_dim)
+    y = primitives.hom_all_to_all(x, cfg.intra_axis, split_dim, concat_dim)
+    return primitives.hom_all_to_all(y, cfg.pod_axis, split_dim, concat_dim)
+
+
+# ---------------------------------------------------------------------------
+# Pytree entry points with dtype-bucketed fusion
+# ---------------------------------------------------------------------------
+
+def _bucket(tree: Any) -> tuple[dict[Any, jax.Array], Any, list]:
+    """Flatten a pytree into one 1-D buffer per dtype."""
+    leaves, treedef = jax.tree.flatten(tree)
+    buckets: dict[Any, list[jax.Array]] = {}
+    meta = []
+    for lf in leaves:
+        buckets.setdefault(lf.dtype, []).append(lf.reshape(-1))
+        meta.append((lf.dtype, lf.shape, lf.size))
+    joined = {dt: jnp.concatenate(parts) for dt, parts in buckets.items()}
+    return joined, treedef, meta
+
+
+def _unbucket(joined: dict, treedef, meta) -> Any:
+    offs = {dt: 0 for dt in joined}
+    leaves = []
+    for dt, shape, size in meta:
+        off = offs[dt]
+        leaves.append(lax.dynamic_slice_in_dim(joined[dt], off, size).reshape(shape))
+        offs[dt] = off + size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def tree_hier_psum(tree: Any, cfg: CommConfig) -> Any:
+    """Gradient sync: bucketed AllReduceH over the whole pytree."""
+    joined, treedef, meta = _bucket(tree)
+    out = {dt: hier_psum(buf, cfg) for dt, buf in joined.items()}
+    return _unbucket(out, treedef, meta)
+
+
+def tree_hier_psum_mean(tree: Any, cfg: CommConfig) -> Any:
+    n = 1
+    for ax in cfg.dp_axes:
+        n = n * primitives.axis_size(ax)
+    summed = tree_hier_psum(tree, cfg)
+    return jax.tree.map(lambda g: (g / n).astype(g.dtype), summed)
+
+
+# --- ZeRO-1 flat-shard view ------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatShardMeta:
+    """Static metadata for the bucketed flat view of a pytree."""
+    treedef: Any
+    meta: tuple          # ((dtype, shape, size), ...)
+    total: int           # unpadded total elements (single dtype assumed)
+    padded: int
+
+    def unflatten(self, flat: jax.Array) -> Any:
+        leaves = []
+        off = 0
+        for dt, shape, size in self.meta:
+            leaves.append(lax.dynamic_slice_in_dim(flat, off, size)
+                          .reshape(shape).astype(dt))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+def tree_flatten_f32(tree: Any, intra_size: int) -> tuple[jax.Array, FlatShardMeta]:
+    """Concatenate all leaves (cast to f32) into one padded flat buffer."""
+    leaves, treedef = jax.tree.flatten(tree)
+    meta = tuple((lf.dtype, lf.shape, lf.size) for lf in leaves)
+    flat = jnp.concatenate([lf.reshape(-1).astype(jnp.float32) for lf in leaves])
+    total = flat.size
+    pad = (-total) % intra_size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat, FlatShardMeta(treedef, meta, total, total + pad)
+
+
+def tree_hier_psum_scatter(tree: Any, cfg: CommConfig) -> tuple[jax.Array, FlatShardMeta]:
+    """Grad sync for ZeRO-1: returns the summed flat f32 shard
+    (size padded/intra_size) plus metadata to reconstruct params."""
+    isize = primitives.axis_size(cfg.intra_axis)
+    flat, fmeta = tree_flatten_f32(tree, isize)
+    shard = hier_psum_scatter(flat, cfg)
+    return shard, fmeta
+
+
+def tree_hier_unscatter(shard: jax.Array, fmeta: FlatShardMeta,
+                        cfg: CommConfig) -> Any:
+    flat = primitives.hom_all_gather(shard, cfg.intra_axis)
+    return fmeta.unflatten(flat[:fmeta.total])

@@ -1,0 +1,131 @@
+"""DCN-hop gradient compression (beyond-paper optimization).
+
+The hierarchical breakdown makes the pod (DCN) hop carry tiny
+1/intra_size shards; compressing *only that hop* shrinks the slowest
+link's traffic 2–4x more while the lossless ICI phases keep full
+precision.  Error feedback (Karimireddy et al., arXiv:1901.09847) keeps
+SGD convergence: the quantization residual is added back into the next
+step's gradient.
+
+Codecs:
+  * ``bf16`` — round-to-nearest bf16 on the wire (2x), lossless enough
+               for grads that are already bf16-scaled.
+  * ``int8`` — per-chunk symmetric int8 with an f32 scale (≈4x); the
+               psum runs in int32 partial sums so the reduction is exact
+               given the shared scale (scale = global max via pmax).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_CHUNK = 1024  # scale granularity for int8
+
+
+def _ring_int8_sum(q: jax.Array, axis: str) -> jax.Array:
+    """Sum int8 payloads over ``axis`` with int8 on the wire: a reduce
+    ring of ppermutes accumulating locally in int32."""
+    world = lax.psum(1, axis)
+    if world <= 1:
+        return q.astype(jnp.int32)
+    perm = [(i, (i + 1) % world) for i in range(world)]
+
+    def body(_, acc_cur):
+        acc, cur = acc_cur
+        nxt = lax.ppermute(cur, axis, perm)          # int8 on the wire
+        return acc + nxt.astype(jnp.int32), nxt
+
+    summed, _ = lax.fori_loop(0, world - 1, body, (q.astype(jnp.int32), q))
+    return summed
+
+
+def compressed_psum(x: jax.Array, axis: str, codec: str) -> jax.Array:
+    """All-reduce ``x`` over ``axis`` with wire compression.  Exposes the
+    same signature as lax.psum on 1-D inputs."""
+    if codec == "bf16":
+        return lax.psum(x.astype(jnp.bfloat16), axis).astype(x.dtype)
+    if codec == "int8":
+        return _int8_psum(x, axis)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _int8_psum(x: jax.Array, axis: str) -> jax.Array:
+    """All-reduce with int8 WIRE bytes: the payload crosses the (DCN)
+    axis as int8 via a reduce ring of ppermutes, accumulating locally in
+    int32, with one shared f32 scale per block (pmax'd so the integer
+    sums are exact).  A plain psum of int32 would quadruple the wire."""
+    orig = x.dtype
+    xf = x.astype(jnp.float32).reshape(-1)
+    n = xf.size
+    pad = (-n) % _CHUNK
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
+    blocks = xf.reshape(-1, _CHUNK)
+    # shared scale across the axis so integer partial sums stay exact
+    amax = lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+
+    summed = _ring_int8_sum(q, axis)
+    out = summed.astype(jnp.float32) * scale[:, None]
+    out = out.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(x.shape).astype(orig)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Standalone per-chunk int8 quantization (used by the Pallas
+    kernel's reference path and the serving KV-cache transfer)."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-xf.size) % _CHUNK
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
+    blocks = xf.reshape(-1, _CHUNK)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, size: int,
+                    dtype=jnp.float32) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+    return out.astype(dtype)
+
+
+def psum_ef(x: jax.Array, residual: jax.Array, axis: str,
+            codec: str) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback compressed all-reduce: the wire carries the
+    compressed payload, the local quantization error is returned as the
+    next step's residual.
+
+        corrected = x + residual
+        wire      = psum(encode(corrected))          # compressed payload
+        residual' = corrected - decode(encode(corrected))
+    """
+    corrected = x + residual
+    if codec == "bf16":
+        enc = corrected.astype(jnp.bfloat16)
+        summed = lax.psum(enc, axis).astype(x.dtype)
+        return summed, corrected - enc.astype(corrected.dtype)
+    if codec == "int8":
+        cf = corrected.astype(jnp.float32).reshape(-1)
+        pad = (-cf.size) % _CHUNK
+        if pad:
+            cf = jnp.concatenate([cf, jnp.zeros((pad,), jnp.float32)])
+        blocks = cf.reshape(-1, _CHUNK)
+        amax = lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+        local_dec = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+        summed = (_ring_int8_sum(q, axis).astype(jnp.float32)
+                  * scale[:, None]).reshape(-1)
+        if pad:
+            summed, local_dec = summed[:-pad], local_dec[:-pad]
+        new_res = (corrected.reshape(-1).astype(jnp.float32) - local_dec)
+        return (summed.reshape(x.shape).astype(x.dtype),
+                new_res.reshape(x.shape).astype(residual.dtype))
+    raise ValueError(codec)

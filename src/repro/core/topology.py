@@ -1,0 +1,208 @@
+"""Hierarchical topology abstraction for heterogeneous clusters (paper §4.2.1).
+
+The heterogeneous cluster is modeled as an ordered list of homogeneous
+``Cluster``s (one per vendor device group, possibly subdivided for
+bandwidth balance, §4.4).  Each cluster knows its ranks, its *border
+ranks* (the ranks with minimum NUMA distance to an RDMA NIC — the ranks
+that terminate cross-cluster links), and its link bandwidths.  The
+global communicator (Comm_H) is the concatenation of clusters; each
+cluster owns a homogeneous communicator (Comm_C) and a border
+communicator (Comm_B).
+
+On the TPU mapping (DESIGN.md §2), a *pod* is a cluster: the intra-pod
+ICI mesh plays the role of the vendor fabric and the DCN uplinks play
+the role of the cross-cluster RDMA channels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """An α–β link: latency_s + bytes / bandwidth_Bps."""
+
+    latency_s: float
+    bandwidth_Bps: float
+
+    def time(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """A homogeneous device sub-cluster (one vendor group or a balanced
+    subdivision of one).
+
+    ``nic_Bps`` is per-border-rank cross-cluster bandwidth;
+    ``intra_Bps`` per-rank scale-up bandwidth inside the cluster;
+    ``tflops`` per-device bf16 compute, for end-to-end step modeling.
+    """
+
+    name: str
+    n_nodes: int
+    devs_per_node: int
+    nics_per_node: int
+    nic_Bps: float          # per NIC
+    intra_Bps: float        # per-device scale-up bandwidth
+    tflops: float = 100.0
+    # staging-copy engine into the RDMA buffer pool (data path c): GPU
+    # copy engines sustain ~50 GB/s — calibrated so Fig. 3's measured
+    # (d2h+h2d)/(2·d2d) ≈ 3.8x holds.
+    d2d_Bps: float = 50.0e9
+    h2d_Bps: float = 20.0e9        # pinned-buffer PCIe (not used by Gloo)
+    # CPU-forwarding path constants: pageable bounce-buffer copies and
+    # TCP-stack wire efficiency (Gloo does not pin or pipeline).
+    h2d_pageable_Bps: float = 10.5e9
+    tcp_wire_eff: float = 0.6
+    alpha_native_s: float = 0.05e-3   # vendor-CCL P2P latency (paper §6.1.1)
+    alpha_hetccl_s: float = 0.20e-3   # host-proxy control latency, 1.2-2.4x native
+    alpha_host_s: float = 1.73e-3     # Gloo CPU-forwarding latency
+
+    @property
+    def n_ranks(self) -> int:
+        return self.n_nodes * self.devs_per_node
+
+    @property
+    def border_ranks(self) -> tuple[int, ...]:
+        """Local indices of border ranks: one rank per NIC, chosen as the
+        ranks with minimum NUMA distance (here: round-robin over the
+        node's devices, matching one-NIC-per-NUMA-domain placement)."""
+        out = []
+        for node in range(self.n_nodes):
+            base = node * self.devs_per_node
+            stride = max(1, self.devs_per_node // max(1, self.nics_per_node))
+            for nic in range(min(self.nics_per_node, self.devs_per_node)):
+                out.append(base + nic * stride)
+        return tuple(out)
+
+    @property
+    def n_border(self) -> int:
+        return len(self.border_ranks)
+
+    @property
+    def cross_Bps(self) -> float:
+        """Total cross-cluster bandwidth (all NICs)."""
+        return self.n_nodes * self.nics_per_node * self.nic_Bps
+
+
+@dataclasses.dataclass(frozen=True)
+class HetTopology:
+    """The global heterogeneous topology Comm_H = ordered clusters."""
+
+    clusters: tuple[Cluster, ...]
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+    @property
+    def n_ranks(self) -> int:
+        return sum(c.n_ranks for c in self.clusters)
+
+    def cluster_of_rank(self, rank: int) -> tuple[int, int]:
+        """Global rank -> (cluster index, local rank)."""
+        off = 0
+        for ci, c in enumerate(self.clusters):
+            if rank < off + c.n_ranks:
+                return ci, rank - off
+            off += c.n_ranks
+        raise ValueError(f"rank {rank} out of range {self.n_ranks}")
+
+    def ring_order(self) -> tuple[int, ...]:
+        """Cluster-level ring (paper: c2cCpy only exchanges with the
+        previous and next cluster, minimizing total C2C volume)."""
+        return tuple(range(self.n_clusters))
+
+    def bottleneck_cross_Bps(self) -> float:
+        """Cross-cluster step is synchronous: bounded by the minimum
+        total NIC bandwidth among clusters (paper §4.4)."""
+        return min(c.cross_Bps for c in self.clusters)
+
+    def balanced_subgroups(self, tol: float = 0.34) -> "HetTopology":
+        """§4.4: divide larger vendor groups into subgroups with roughly
+        equal total cross-cluster bandwidth, so no cluster idles while
+        the bottleneck cluster drains."""
+        target = self.bottleneck_cross_Bps()
+        new: list[Cluster] = []
+        for c in self.clusters:
+            k = max(1, int(round(c.cross_Bps / target)))
+            k = min(k, c.n_nodes)  # can only split at node granularity
+            while k > 1 and c.n_nodes % k != 0:
+                k -= 1
+            if k == 1 or c.cross_Bps <= target * (1.0 + tol):
+                new.append(c)
+                continue
+            per = c.n_nodes // k
+            for i in range(k):
+                new.append(dataclasses.replace(c, name=f"{c.name}.{i}", n_nodes=per))
+        return HetTopology(tuple(new))
+
+
+def proportional_split(total_bytes: int, bandwidths: Sequence[float],
+                       granularity: int = 1) -> list[int]:
+    """Divide a C2C transfer across border ranks proportionally to their
+    NIC bandwidth (paper §4.2.2, c2cCpy load balance).  The split is
+    quantized to ``granularity`` bytes; remainders go to the fastest
+    links first.  sum(result) == total_bytes."""
+    assert total_bytes >= 0 and len(bandwidths) > 0
+    tot_bw = float(sum(bandwidths))
+    raw = [total_bytes * (bw / tot_bw) for bw in bandwidths]
+    out = [int(r // granularity) * granularity for r in raw]
+    rem = total_bytes - sum(out)
+    order = sorted(range(len(bandwidths)), key=lambda i: -bandwidths[i])
+    i = 0
+    while rem > 0:
+        take = min(granularity, rem)
+        out[order[i % len(order)]] += take
+        rem -= take
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+def paper_testbed() -> HetTopology:
+    """Table 6 of the paper (bandwidths in bytes/s; 1 Gbps = 0.125 GB/s)."""
+    G = 0.125e9
+    return HetTopology((
+        Cluster("nvidia_a800", n_nodes=4, devs_per_node=8, nics_per_node=8,
+                nic_Bps=200 * G, intra_Bps=4.8e12 / 8, tflops=312.0),
+        Cluster("vendor1", n_nodes=2, devs_per_node=16, nics_per_node=1,
+                nic_Bps=100 * G, intra_Bps=192e9 / 16, tflops=32.0),
+        Cluster("vendor2", n_nodes=2, devs_per_node=8, nics_per_node=8,
+                nic_Bps=400 * G, intra_Bps=100e9, tflops=256.0),
+        Cluster("vendor3", n_nodes=4, devs_per_node=8, nics_per_node=8,
+                nic_Bps=400 * G, intra_Bps=240e9 / 8, tflops=200.0),
+    ))
+
+
+# TPU v5e constants used throughout the roofline analysis (system prompt).
+V5E_PEAK_FLOPS = 197e12          # bf16 per chip
+V5E_HBM_BPS = 819e9              # HBM bandwidth per chip
+V5E_ICI_LINK_BPS = 50e9          # per ICI link
+V5E_ICI_LINKS = 4                # 2D torus: 4 links/chip on v5e
+V5E_DCN_BPS = 6.25e9             # assumed per-chip DCN (≈ 50 Gbps); documented
+V5E_VMEM_BYTES = 128 * 1024**2   # ~128 MiB vector memory per chip
+
+
+def tpu_pod_cluster(name: str, n_chips: int = 256, dcn_Bps: float = V5E_DCN_BPS) -> Cluster:
+    """One TPU v5e pod viewed as a homogeneous cluster; every chip has a
+    DCN uplink, so every rank is a border rank (the common modern case
+    the paper calls out in §4.3.2)."""
+    return Cluster(name, n_nodes=n_chips, devs_per_node=1, nics_per_node=1,
+                   nic_Bps=dcn_Bps,
+                   intra_Bps=V5E_ICI_LINK_BPS * V5E_ICI_LINKS / 2,  # bidirectional ring usable
+                   tflops=V5E_PEAK_FLOPS / 1e12,
+                   d2d_Bps=V5E_HBM_BPS,
+                   alpha_native_s=1e-6, alpha_hetccl_s=5e-6, alpha_host_s=1e-3)
+
+
+def tpu_multipod(n_pods: int = 2, chips_per_pod: int = 256) -> HetTopology:
+    return HetTopology(tuple(
+        tpu_pod_cluster(f"pod{i}", chips_per_pod) for i in range(n_pods)))

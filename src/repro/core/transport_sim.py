@@ -1,0 +1,157 @@
+"""Discrete-event simulator of the HetCCL P2P transport (paper §4.1).
+
+The container has no RDMA NICs and one CPU device, so the paper's
+*mechanism* — host-driven control plane + on-device data path, chunked
+through a pre-registered RDMA buffer pool — is reproduced as an
+event-driven model with three pipelined resources per transfer:
+
+    sender d2d engine  ->  RNIC wire  ->  receiver d2d engine
+
+CPU-forwarding (Gloo, Fig. 2(b)) replaces the d2d engines with PCIe
+d2h/h2d legs; vendor-native GDR (Fig. 2(a)) skips the staging copies.
+Buffer-pool back-pressure is modeled: a chunk may only start its d2d
+copy-in when one of the ``pool_chunks`` RDMA buffers is free, and a
+buffer frees only when the receiver's copy-out completes (the proxy
+polls the CQ and releases the slot, Fig. 5).
+
+This simulator drives the Fig. 3 / Fig. 5 / Fig. 11 / Fig. 15
+benchmarks; the closed-form α–β model in ``cost_model`` is validated
+against it in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+from .topology import Cluster, proportional_split
+
+
+@dataclasses.dataclass
+class TransferTrace:
+    mechanism: str
+    nbytes: int
+    time_s: float
+    per_chunk_events: list[tuple[str, int, float, float]]  # (stage, chunk, start, end)
+
+    @property
+    def bandwidth_Bps(self) -> float:
+        return self.nbytes / self.time_s if self.time_s > 0 else float("inf")
+
+    def stage_busy_s(self, stage: str) -> float:
+        return sum(e - s for st, _, s, e in self.per_chunk_events if st == stage)
+
+
+def _pipeline(nbytes: int, chunk_bytes: int, pool_chunks: int,
+              stage_rates: list[float], stage_alphas: list[float],
+              mechanism: str, control_alpha: float,
+              serialize_all: bool = False) -> TransferTrace:
+    """Event-driven 3-stage chunk pipeline with buffer-pool back-pressure.
+
+    stage_rates: bytes/s of each stage.  stage_alphas: per-chunk fixed
+    overhead of each stage (WR post / CQ poll / proxy wakeups).  If
+    ``serialize_all`` the stages of one chunk and across chunks are fully
+    serialized (naive non-pipelined host path)."""
+    n_chunks = max(1, math.ceil(nbytes / chunk_bytes))
+    sizes = [chunk_bytes] * (n_chunks - 1) + [nbytes - chunk_bytes * (n_chunks - 1)]
+    n_stages = len(stage_rates)
+    stage_free = [control_alpha] * n_stages       # resource availability time
+    chunk_done = [0.0] * n_chunks                 # completion per chunk (last stage)
+    # buffer slot release times (min-heap): slot frees when copy-out ends
+    slots = [control_alpha] * max(1, pool_chunks)
+    heapq.heapify(slots)
+    events: list[tuple[str, int, float, float]] = []
+    stage_names = {3: ("copy_in", "wire", "copy_out"), 2: ("wire", "copy_out"), 1: ("wire",)}[n_stages] \
+        if n_stages in (1, 2, 3) else tuple(f"s{i}" for i in range(n_stages))
+    prev_end = control_alpha
+    for ci, sz in enumerate(sizes):
+        slot_ready = heapq.heappop(slots)
+        t = max(slot_ready, control_alpha) if not serialize_all else max(slot_ready, prev_end)
+        for si in range(n_stages):
+            start = max(t, stage_free[si])
+            dur = stage_alphas[si] + sz / stage_rates[si]
+            end = start + dur
+            stage_free[si] = end
+            events.append((stage_names[si], ci, start, end))
+            t = end
+        chunk_done[ci] = t
+        prev_end = t
+        heapq.heappush(slots, t)  # slot frees at copy-out completion
+    total = max(chunk_done)
+    return TransferTrace(mechanism, nbytes, total, events)
+
+
+def simulate_p2p(src: Cluster, dst: Cluster, nbytes: int, mechanism: str,
+                 chunk_bytes: int = 4 << 20, pool_bytes: int = 64 << 20,
+                 wr_alpha_s: float = 2e-6) -> TransferTrace:
+    """One SendRecv between a border rank of ``src`` and of ``dst``."""
+    wire = min(src.nic_Bps, dst.nic_Bps)
+    pool_chunks = max(1, pool_bytes // chunk_bytes)
+    if mechanism == "native":
+        # GDR: NIC reads device memory directly; single-stage wire.
+        return _pipeline(nbytes, chunk_bytes, pool_chunks, [wire],
+                         [wr_alpha_s], mechanism, src.alpha_native_s)
+    if mechanism == "hetccl":
+        # Fig. 2(c): d2d copy-in -> wire -> d2d copy-out, chunk-pipelined.
+        return _pipeline(nbytes, chunk_bytes, pool_chunks,
+                         [src.d2d_Bps, wire, dst.d2d_Bps],
+                         [wr_alpha_s] * 3, mechanism, src.alpha_hetccl_s)
+    if mechanism == "host":
+        # Fig. 2(b): d2h (pageable PCIe) -> TCP wire -> h2d; Gloo neither
+        # pins buffers nor pipelines across the bounce buffer —
+        # serialized per chunk at pageable-copy + TCP-stack rates.
+        return _pipeline(nbytes, chunk_bytes, pool_chunks,
+                         [src.h2d_pageable_Bps, wire * src.tcp_wire_eff,
+                          dst.h2d_pageable_Bps],
+                         [wr_alpha_s * 10] * 3, mechanism, src.alpha_host_s,
+                         serialize_all=True)
+    raise ValueError(mechanism)
+
+
+def simulate_c2c_cpy(src: Cluster, dst: Cluster, total_bytes: int,
+                     mechanism: str = "hetccl", chunk_bytes: int = 4 << 20,
+                     nics_in_use: int | None = None) -> float:
+    """c2cCpy (paper Fig. 7): the cluster-to-cluster volume is divided
+    proportionally to NIC bandwidth over the destination border ranks;
+    each (src border, dst border) pair runs an independent chunk
+    pipeline; the primitive completes when the slowest pair drains."""
+    n_src = src.n_border if nics_in_use is None else min(nics_in_use * src.n_nodes, src.n_border)
+    n_dst = dst.n_border if nics_in_use is None else min(nics_in_use * dst.n_nodes, dst.n_border)
+    pairs = min(n_src, n_dst)
+    if pairs == 0:
+        return float("inf")
+    bws = [min(src.nic_Bps, dst.nic_Bps)] * pairs
+    split = proportional_split(total_bytes, bws, granularity=256)
+    t = 0.0
+    for part in split:
+        if part == 0:
+            continue
+        tr = simulate_p2p(src, dst, part, mechanism, chunk_bytes)
+        t = max(t, tr.time_s)
+    return t
+
+
+def memcpy_comparison(src: Cluster, dst: Cluster, nbytes: int) -> dict:
+    """Fig. 3: time spent in memory copies per mechanism for one
+    transfer. d2h+h2d (pageable host path) vs 2x d2d (hetccl path)."""
+    host = nbytes / src.h2d_pageable_Bps + nbytes / dst.h2d_pageable_Bps
+    dev = nbytes / src.d2d_Bps + nbytes / dst.d2d_Bps
+    return {"host_d2h_h2d_s": host, "hetccl_2x_d2d_s": dev,
+            "ratio": host / dev if dev > 0 else float("inf")}
+
+
+def fit_alpha_beta(sizes: list[int], times: list[float]) -> tuple[float, float]:
+    """Linear regression t = α + n/B over (size, time) pairs — the
+    paper's Fig. 11 synthesis; returns (alpha_s, bandwidth_Bps)."""
+    n = len(sizes)
+    assert n >= 2 and n == len(times)
+    xs = [float(s) for s in sizes]
+    mx = sum(xs) / n
+    my = sum(times) / n
+    cov = sum((x - mx) * (y - my) for x, y in zip(xs, times))
+    var = sum((x - mx) ** 2 for x in xs)
+    slope = cov / var
+    alpha = my - slope * mx
+    beta = 1.0 / slope if slope > 0 else float("inf")
+    return alpha, beta

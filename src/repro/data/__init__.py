@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, Prefetcher, batches, synth_batch  # noqa: F401

@@ -1,0 +1,116 @@
+"""Deterministic synthetic data pipeline with prefetch + straggler
+mitigation.
+
+Every batch is a pure function of (seed, step, host) — restart-safe and
+elastic: after a resize, host h of H' reads shard h/H' of the same
+global stream, so resuming at step s reproduces the exact global batch
+regardless of topology (the elastic-restore contract).
+
+Prefetch runs in a daemon thread with a bounded queue; a slow storage
+read (simulated via ``inject_delay_s`` in tests) only stalls training
+once the queue drains — and ``get(timeout)`` can skip a straggling
+batch entirely (bounded-wait), logging the skip, which is the data-side
+straggler mitigation at cluster scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+    enc_seq: int = 0          # >0: also emit encoder frame embeddings
+    d_model: int = 0
+    prefetch: int = 4
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+def synth_batch(cfg: DataConfig, step: int) -> dict:
+    """The batch host `host_id` contributes at `step` (pure function).
+
+    Token streams are zipfian-ish (mirrors real token frequency) with a
+    learnable structure: labels are the next token of the same stream,
+    so models can actually overfit it in tests."""
+    rows = []
+    base = np.random.SeedSequence([cfg.seed, step])
+    child = np.random.default_rng(base.spawn(cfg.n_hosts)[cfg.host_id])
+    # zipf-ish ranks clipped into vocab
+    z = child.zipf(1.3, size=(cfg.host_batch, cfg.seq_len + 1))
+    toks = np.minimum(z - 1, cfg.vocab_size - 1).astype(np.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.enc_seq:
+        batch["enc"] = child.normal(
+            size=(cfg.host_batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+class Prefetcher:
+    """Bounded-queue background loader with straggler skip."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0,
+                 inject_delay_s: float = 0.0):
+        self.cfg = cfg
+        self._q: queue.Queue = queue.Queue(maxsize=cfg.prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._delay = inject_delay_s
+        self.skipped: list[int] = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            if self._delay:
+                time.sleep(self._delay)
+            batch = synth_batch(self.cfg, step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self, timeout: float | None = None) -> tuple[int, dict]:
+        """Next (step, batch); on timeout the batch is recorded as
+        skipped and the wait continues with the following one."""
+        while True:
+            try:
+                return self._q.get(timeout=timeout)
+            except queue.Empty:
+                self.skipped.append(self._step)
+                timeout = max(0.5, (timeout or 0.5) * 2)  # backoff, keep trying
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+def batches(cfg: DataConfig, start_step: int = 0) -> Iterator[tuple[int, dict]]:
+    step = start_step
+    while True:
+        yield step, synth_batch(cfg, step)
+        step += 1

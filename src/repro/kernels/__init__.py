@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the framework's compute hot-spots:
+#   flash_attention.py  — fused causal/SWA GQA attention (MXU-tiled)
+#   ssd.py              — Mamba2 SSD chunk kernel
+#   quant.py            — int8 block quant/dequant (DCN-hop compression)
+# ops.py: jit'd dispatch wrappers; ref.py: pure-jnp oracles.

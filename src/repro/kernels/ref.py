@@ -1,0 +1,177 @@
+"""Pure-jnp oracles for every Pallas kernel (and the models' fallback
+compute paths).  These are the ground truth the kernels are validated
+against (interpret=True on CPU) across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle: plain softmax attention with masks
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, dh); k/v: (B, Skv, K, dh), H % K == 0 -> (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    rep = H // K
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(dh)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) oracle — chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 64, h0=None):
+    """Chunked SSD (Mamba-2, arXiv:2405.21060 listing 1, jnp port).
+
+    x : (b, s, h, p)   inputs per head
+    dt: (b, s, h)      discretization steps (already softplus'd, >0)
+    A : (h,)           negative decay rates
+    B : (b, s, g, n)   input  projections (g groups; heads share g)
+    C : (b, s, g, n)   output projections
+    h0: (b, h, p, n)   optional initial state
+    -> y (b, s, h, p), final state (b, h, p, n)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (b, s, h, n)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    # chunked views
+    xc = xf.reshape(b, nc, q, h, p)
+    dtc = dtf.reshape(b, nc, q, h)
+    Bc = Bf.reshape(b, nc, q, h, n)
+    Cc = Cf.reshape(b, nc, q, h, n)
+
+    dA = dtc * Af                                          # (b, nc, q, h)
+    dA_cs = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+
+    # 1) intra-chunk (diagonal blocks): causal "attention" with decay
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # (b,nc,q_i,q_j,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the discarded upper triangle has positive exponents
+    # whose overflow would poison the backward pass through the where.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * L
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # 2) chunk states: decay-weighted outer products at chunk end
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b, nc, q, h)
+    states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end, dtc, Bc, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))             # (b, nc, h)
+    init = jnp.zeros((b, h, p, n), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def scan_fn(hprev, inp):
+        dec, st = inp                                       # (b,h), (b,h,p,n)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev                                  # emit state *before* chunk
+
+    decs = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc, b, h)
+    sts = jnp.moveaxis(states, 1, 0)                        # (nc, b, h, p, n)
+    h_last, h_before = lax.scan(scan_fn, init, (decs, sts))
+    h_before = jnp.moveaxis(h_before, 0, 1)                 # (b, nc, h, p, n)
+
+    # 4) inter-chunk contribution
+    in_decay = jnp.exp(dA_cs)                                # decay from chunk start
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Cc, in_decay, h_before)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_last.astype(jnp.float32)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD update.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h);
+    B_t/C_t: (b, g, n) -> y_t (b, h, p), new state.
+    """
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bf = jnp.repeat(B_t.astype(jnp.float32), rep, axis=1)   # (b, h, n)
+    Cf = jnp.repeat(C_t.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (b, h)
+    upd = (dt_t.astype(jnp.float32)[..., None, None]
+           * x_t.astype(jnp.float32)[..., None] * Bf[:, :, None, :])
+    new = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new, Cf)
+    return y.astype(x_t.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d oracle (Mamba front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, bias=None):
+    """x: (b, s, ch); w: (ch, width) -> (b, s, ch), left-padded causal."""
+    b, s, ch = x.shape
+    width = w.shape[1]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros((b, s, ch), jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + s] * w[:, i].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization oracle (gradient compression / KV transfer)
+# ---------------------------------------------------------------------------
+
+def quant_int8_block(x, block: int = 1024):
+    """x: flat (N,) -> (q int8 (N//block, block), scales (N//block,))."""
+    assert x.ndim == 1 and x.size % block == 0
+    blocks = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_int8_block(q, scale):
+    return (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm oracle
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,230 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the virtual device count before ANY other import — jax locks
+the device count on first init.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, cell_applicable, get_config, get_shape  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, runtime_for_mesh  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.serve.serve_step import _axes_for_batch, cache_specs  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type
+    correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_enc_layers:
+            out["enc"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                              jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_enc_layers:
+            out["enc"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                              jnp.float32)
+        return out
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = active
+    params, D = tokens processed)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # one token per request
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               comm_mode: str = "fsdp", sp: bool = False,
+               use_pallas: bool = False, n_chunks: int = 4,
+               compression: str | None = None,
+               capacity_factor: float = 1.25,
+               remat_policy: str = "none"):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = mesh_axis_sizes(mesh)
+    n_chips = int(jnp.prod(jnp.asarray(list(sizes.values()))))
+    pod_size = n_chips // sizes.get("pod", 1)
+
+    is_train = shape.kind == "train"
+    fsdp = is_train and comm_mode == "fsdp"
+    rt = runtime_for_mesh(mesh, fsdp=fsdp, sp=sp, use_pallas=use_pallas,
+                          remat_policy=remat_policy,
+                          moe_capacity_factor=capacity_factor)
+    model = Model(cfg, rt)
+    if fsdp:
+        model = model.with_fsdp(sizes["data"])
+
+    pshape = jax.eval_shape(model.init, jax.random.key(0))
+    model.prepare(pshape)
+    ins = input_specs(cfg, shape)
+
+    t0 = time.time()
+    if is_train:
+        tcfg = TrainConfig(comm_mode=comm_mode, n_chunks=n_chunks,
+                           dcn_compression=compression)
+        build, _ = make_train_step(model, tcfg, mesh=mesh, donate=False)
+        step, _ = build(pshape)
+        if tcfg.comm_mode == "hier_zero1":
+            from repro.train import optimizer as opt_lib
+            # the flat master is built from LOCAL (TP-sharded) leaves per
+            # model column, scattered over data: global dim = local shard
+            # x (data x model)
+            isize, tpsize = sizes["data"], sizes.get("model", 1)
+            specs = model.param_specs(pshape)
+            local_total = 0
+            for leaf, spec in zip(jax.tree.leaves(pshape),
+                                  jax.tree.leaves(specs)):
+                n = 1
+                for d, s in enumerate(leaf.shape):
+                    names = (tuple(spec)[d]
+                             if d < len(tuple(spec)) else None)
+                    div = 1
+                    if names is not None:
+                        for nm in (names if isinstance(names, tuple)
+                                   else (names,)):
+                            div *= sizes[nm]
+                    n *= s // div
+                local_total += n
+            padded_local = -(-local_total // isize) * isize
+            shard_n = padded_local // isize
+            gdim = shard_n * isize * tpsize
+            shard = jax.ShapeDtypeStruct((gdim,), jnp.float32)
+            opt_shape = opt_lib.ZeroState(shard, shard, shard,
+                                          jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            from repro.train import optimizer as opt_lib
+            opt_shape = jax.eval_shape(opt_lib.adam_init, pshape)
+        lowered = step.lower(pshape, opt_shape, ins)
+    else:
+        from repro.serve.serve_step import make_serve_steps
+        prefill, decode, caches_shape = make_serve_steps(
+            model, mesh, shape.global_batch, shape.seq_len)
+        if shape.kind == "prefill":
+            args = (pshape, ins["tokens"]) + ((ins["enc"],) if "enc" in ins else ())
+            lowered = prefill.lower(*args)
+        else:
+            lowered = decode.lower(pshape, ins["token"], caches_shape)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    costs = hlo_analysis.analyze_module(
+        hlo, n_chips, pod_size,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)))
+    mflops = model_flops_for(cfg, shape)
+    roof = hlo_analysis.roofline_terms(costs, n_chips, mflops)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "comm_mode": comm_mode, "sp": sp, "status": "ok",
+        "remat_policy": remat_policy, "compression": compression,
+        "capacity_factor": capacity_factor, "use_pallas": use_pallas,
+        "n_chunks": n_chunks,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            # memory_analysis reports PER-DEVICE byte counts
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_per_device_gib": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                / 2**30, 3),
+        },
+        "xla_cost": {"flops": float(ca.get("flops", 0.0)),
+                     "bytes": float(ca.get("bytes accessed", 0.0))},
+        "roofline": roof.to_dict(),
+        "collectives": hlo_analysis.summarize_ops(costs.collectives),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="fsdp",
+                    choices=["flat", "hier", "hier_pipelined", "hier_zero1",
+                             "fsdp"])
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--chunks", type=int, default=4)
+    ap.add_argument("--compression", default=None,
+                    choices=[None, "bf16", "int8"])
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--remat-policy", default="none",
+                    choices=["none", "save_collectives"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    try:
+        res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
+                         comm_mode=args.mode, sp=args.sp,
+                         use_pallas=args.pallas, n_chunks=args.chunks,
+                         compression=args.compression,
+                         capacity_factor=args.capacity_factor,
+                         remat_policy=args.remat_policy)
+    except Exception as e:  # noqa: BLE001
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "comm_mode": args.mode, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+    js = json.dumps(res, indent=1)
+    print(js)
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(js)
+    if res["status"] == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

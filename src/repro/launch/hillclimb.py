@@ -1,0 +1,74 @@
+"""Perf-iteration driver for the three hillclimb cells (§Perf).
+
+Each entry is one hypothesis->change iteration: a dryrun invocation with
+a variant flag set, results tagged under results/perf/.  The narrative
+(hypothesis, napkin math, confirmation) lives in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+CELLS = {
+    # (arch, shape, mesh): ordered iterations [(tag, extra_args)]
+    ("qwen2.5-3b", "train_4k", "multi"): [
+        ("it0_flat", ["--mode", "flat"]),                    # Gloo-flat baseline
+        ("it1_hier", ["--mode", "hier"]),                    # paper AllReduceH
+        ("it2_hier_pipelined", ["--mode", "hier_pipelined", "--chunks", "8"]),
+        ("it3_hier_zero1", ["--mode", "hier_zero1"]),
+        ("it4_fsdp", ["--mode", "fsdp"]),
+        ("it5_fsdp_int8", ["--mode", "fsdp", "--compression", "int8"]),
+        ("it6_fsdp_int8_sp", ["--mode", "fsdp", "--compression", "int8",
+                              "--sp"]),
+    ],
+    ("olmo-1b", "train_4k", "single"): [
+        ("it0_base", ["--mode", "hier"]),
+        ("it1_save_coll", ["--mode", "hier", "--remat-policy",
+                           "save_collectives"]),
+        ("it2_sp", ["--mode", "hier", "--remat-policy", "save_collectives",
+                    "--sp"]),
+        ("it3_zero1", ["--mode", "hier_zero1", "--remat-policy",
+                       "save_collectives", "--sp"]),
+    ],
+    ("qwen3-moe-30b-a3b", "train_4k", "single"): [
+        # it1 (EP token dedup, 16x) is a code change: before/after
+        # captured as ep_dup vs it1 in EXPERIMENTS.md.
+        ("it1_ep_dedup", ["--mode", "fsdp"]),
+        ("it2_cap1.0", ["--mode", "fsdp", "--capacity-factor", "1.0"]),
+        ("it3_sp", ["--mode", "fsdp", "--capacity-factor", "1.0", "--sp"]),
+        ("it4_save_coll", ["--mode", "fsdp", "--capacity-factor", "1.0",
+                           "--sp", "--remat-policy", "save_collectives"]),
+    ],
+}
+
+
+def main():
+    out_dir = pathlib.Path("results/perf")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for (arch, shape, mesh), iters in CELLS.items():
+        for tag, extra in iters:
+            out = out_dir / f"{arch}__{shape}__{mesh}__{tag}.json"
+            if out.exists() and json.loads(out.read_text()).get("status") == "ok":
+                print(f"skip {out.name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", str(out), *extra]
+            t0 = time.time()
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=2400)
+            st = "?"
+            if out.exists():
+                st = json.loads(out.read_text()).get("status")
+            print(f"[{time.strftime('%H:%M:%S')}] {arch} {shape} {mesh} "
+                  f"{tag}: {st} ({time.time()-t0:.0f}s)", flush=True)
+            if st != "ok":
+                print((proc.stderr or proc.stdout)[-1500:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant)
+so importing this module never touches jax device state.  The dry-run
+entry point (dryrun.py) sets XLA_FLAGS before any jax import to provide
+512 virtual host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = True):
+    """8-virtual-device mesh for CI-sized multi-device tests."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def runtime_for_mesh(mesh, *, fsdp: bool = False, sp: bool = False,
+                     use_pallas: bool = False, remat: bool = True,
+                     remat_policy: str = "none",
+                     moe_capacity_factor: float = 1.25):
+    """Build the Runtime matching a production/test mesh."""
+    from repro.parallel.sharding import Runtime
+
+    sizes = mesh_axis_sizes(mesh)
+    return Runtime(
+        tp_axis="model" if "model" in sizes else None,
+        dp_axis="data" if "data" in sizes else None,
+        pod_axis="pod" if "pod" in sizes else None,
+        fsdp_axis="data" if (fsdp and "data" in sizes) else None,
+        tp_size=sizes.get("model", 1),
+        sp=sp, remat=remat, remat_policy=remat_policy,
+        use_pallas=use_pallas,
+        moe_capacity_factor=moe_capacity_factor)

@@ -1,0 +1,150 @@
+"""End-to-end training driver: data pipeline -> shard_map train step ->
+metrics, with checkpoint/restart, NaN rollback and straggler logging.
+
+CPU-runnable end-to-end:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+        --steps 100 --mesh test --mode hier
+
+`--mesh test` uses 8 virtual devices (set before jax import); `--mesh
+none` runs single-device; `--mesh production` is the real 16x16 /
+2x16x16 target (dry-run hardware).
+"""
+
+import argparse
+import os
+import sys
+
+
+def _preparse_mesh() -> str:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--mesh", default="none")
+    ns, _ = ap.parse_known_args()
+    return ns.mesh
+
+
+_MESH = _preparse_mesh()
+if _MESH == "test":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+elif _MESH == "production":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data import DataConfig, Prefetcher  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_test_mesh, runtime_for_mesh  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.parallel.sharding import Runtime  # noqa: E402
+from repro.runtime import CheckpointManager, NaNWatchdog, StragglerMonitor  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "test", "production"])
+    ap.add_argument("--mode", default="hier",
+                    choices=["flat", "hier", "hier_pipelined", "hier_zero1",
+                             "fsdp"])
+    ap.add_argument("--compression", default=None, choices=["bf16", "int8"])
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.mesh == "none":
+        mesh = None
+        rt = Runtime(use_pallas=args.pallas)
+    else:
+        mesh = (make_test_mesh() if args.mesh == "test"
+                else make_production_mesh(multi_pod=True))
+        rt = runtime_for_mesh(mesh, fsdp=args.mode == "fsdp",
+                              use_pallas=args.pallas)
+    model = Model(cfg, rt)
+    if args.mode == "fsdp" and mesh is not None:
+        model = model.with_fsdp(dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))["data"])
+
+    tcfg = TrainConfig(comm_mode=args.mode, dcn_compression=args.compression,
+                       opt=OptConfig(lr=args.lr, warmup_steps=20))
+    builder_or_step, init = make_train_step(model, tcfg, mesh=mesh)
+    params, opt = init(jax.random.key(0))
+    if mesh is not None:
+        pshape = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+        step_fn, boot = builder_or_step(pshape)
+        if boot is not None:
+            opt = boot(params)
+    else:
+        step_fn = builder_or_step
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, global_batch=args.global_batch,
+                      seq_len=args.seq, enc_seq=cfg.enc_seq,
+                      d_model=cfg.d_model if cfg.enc_seq else 0)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        start, (params, opt), extra = ckpt.restore((params, opt))
+        print(f"resumed from step {start}")
+
+    watchdog = NaNWatchdog()
+    straggler = StragglerMonitor()
+    pre = Prefetcher(dcfg, start_step=start)
+    losses = []
+    try:
+        t_start = time.time()
+        step = start
+        while step < args.steps:
+            sid, batch = pre.get(timeout=30.0)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            straggler.start()
+            new_params, new_opt, m = step_fn(params, opt, batch)
+            loss = float(m["loss"])
+            slow = straggler.stop()
+            verdict = watchdog.observe(loss)
+            if verdict == "rollback" and ckpt and ckpt.latest_step() is not None:
+                step, (params, opt), _ = ckpt.restore((params, opt))
+                print(f"[health] non-finite/spiking loss -> rolled back to {step}")
+                continue
+            if verdict == "skip":
+                print(f"[health] step {step}: loss {loss} skipped")
+                step += 1
+                continue
+            params, opt = new_params, new_opt
+            losses.append(loss)
+            if step % args.log_every == 0:
+                dt = (time.time() - t_start) / max(1, len(losses))
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(m['grad_norm']):7.3f} "
+                      f"{dt*1e3:7.1f} ms/step"
+                      + (" [straggler]" if slow else ""), flush=True)
+            if ckpt and step and step % args.ckpt_every == 0:
+                ckpt.save_async(step, (params, opt))
+            step += 1
+        if ckpt:
+            ckpt.save(step, (params, opt))
+            ckpt.wait()
+    finally:
+        pre.close()
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
+          f"over {len(losses)} steps")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

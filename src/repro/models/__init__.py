@@ -1,0 +1,4 @@
+"""Model zoo: one composable decoder/enc-dec stack covering all 10
+assigned architectures (dense GQA, MoE, SSD, hybrid, enc-dec, VLM)."""
+
+from .model import Model  # noqa: F401

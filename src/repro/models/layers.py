@@ -1,0 +1,127 @@
+"""Shared neural building blocks (pure-pytree, explicit-SPMD friendly).
+
+All functions take *local* (already sharded) parameter arrays; shapes of
+the params determine local widths, so the same code runs unsharded in
+smoke tests and TP-sharded inside shard_map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp, tp_entry_axis
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "ln_nonparam":       # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + eps)
+        if kind == "ln":
+            out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_head(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free per-head RMS norm (Chameleon QK-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh), positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                            # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (vocab-sharded over TP) and LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab_padded: int, d: int, tp: int, dtype):
+    """Global (padded) embedding table; TP shards dim 0."""
+    tbl = (jax.random.normal(key, (vocab_padded, d), jnp.float32) * 0.02)
+    return tbl.astype(dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, rt: Runtime) -> jax.Array:
+    """Vocab-sharded lookup: mask + local take + psum over TP."""
+    if rt.tp_axis is None:
+        return jnp.take(table, ids, axis=0)
+    vl = table.shape[0]
+    shard = lax.axis_index(rt.tp_axis)
+    off = shard * vl
+    local = ids - off
+    ok = (local >= 0) & (local < vl)
+    emb = jnp.take(table, jnp.where(ok, local, 0), axis=0)
+    emb = jnp.where(ok[..., None], emb, jnp.zeros_like(emb))
+    return reduce_from_tp(emb, rt.tp_axis)
+
+
+def lm_head_logits(x: jax.Array, table: jax.Array, rt: Runtime) -> jax.Array:
+    """Returns *vocab-sharded* logits (B, S, V_local) in f32."""
+    x = copy_to_tp(x, rt.tp_axis)
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (column/row-parallel)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff_local: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, d_ff_local, dtype),
+        "w_up": init_dense(k2, d, d_ff_local, dtype),
+        "w_down": init_dense(k3, d_ff_local, d, dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, rt: Runtime, reduce: bool = True) -> jax.Array:
+    x = copy_to_tp(x, tp_entry_axis(rt))
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    out = h @ p["w_down"]
+    return reduce_from_tp(out, rt.tp_axis) if reduce else out

@@ -1,0 +1,404 @@
+"""Top-level model: init, train/prefill/decode applies, sharding specs.
+
+Parameters are *global* (padded) arrays; ``param_specs`` produces the
+PartitionSpec tree consumed by shard_map's in_specs (TP over "model",
+FSDP over "data"), and ``fsdp_dims`` the per-leaf gather dims used
+inside the layer scan.  The same apply code runs unsharded when
+``rt.tp_axis is None`` (smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Runtime, fsdp_dim, fsdp_gather, gather_sp, scatter_sp
+from . import attention, layers, moe, ssm, transformer
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "w_gate", "w_up", "w_z", "w_x", "w_dt", "w1", "bq", "b1",
+        "dt_bias", "A_log", "D_skip", "norm_scale"}
+_ROW = {"wo", "w_down", "w_out", "w2"}
+_KV = {"wk", "wv", "bk", "bv"}
+_VOCAB = {"embed", "lm_head"}
+_CONV_X = {"conv_w_x", "conv_b_x"}  # sharded with the ssm inner dim (dim 0)
+_REPL = {"scale", "bias", "router", "b2", "conv_w_bc", "conv_b_bc", "pos_emb",
+         "w_bc"}
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, DictKey):
+            return str(k.key)
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(isinstance(k, DictKey) and str(k.key) == "moe" for k in path)
+
+
+def _in_ssm(path) -> bool:
+    return any(isinstance(k, DictKey) and str(k.key) == "ssm" for k in path)
+
+
+def _tp_dim(path, shape, cfg: ModelConfig, tp: int, stacked: bool) -> int | None:
+    """Dim index (into the given shape) sharded over the model axis."""
+    name = _leaf_name(path)
+    off = 1 if stacked else 0
+    nd = len(shape)
+    if _in_moe(path) and name in ("w_gate", "w_up", "w_down"):
+        if moe.strategy(cfg, tp) == "ep":
+            return off  # shard the expert dim
+        # etp: shard d_ff (last dim for gate/up, middle for down)
+        return nd - 1 if name in ("w_gate", "w_up") else off + 1
+    if name in _KV:
+        if cfg.kv_replicated(tp):
+            return None
+        return nd - 1
+    if name in _CONV_X:
+        return off  # (di, width) / (di,): shard the channel dim
+    if name in _COL:
+        return nd - 1
+    if name in _ROW:
+        return off
+    if name in _VOCAB:
+        return off  # handled unstacked (vocab dim 0)
+    return None
+
+
+def _spec_for(path, shape, cfg, tp, fsdp: int, stacked: bool) -> P:
+    name = _leaf_name(path)
+    if _in_ssm(path) and name in ("w_bc",):
+        tp_d = None
+    else:
+        tp_d = _tp_dim(path, shape, cfg, tp, stacked)
+    spec: list = [None] * len(shape)
+    if tp_d is not None and tp > 1:
+        spec[tp_d] = "model"
+    # FSDP on a remaining dim
+    if fsdp > 1:
+        taken = tuple(d for d in range(len(shape))
+                      if spec[d] is not None or (stacked and d == 0))
+        shard_shape = tuple(
+            s // tp if (tp_d is not None and tp > 1 and d == tp_d) else s
+            for d, s in enumerate(shape))
+        fd = fsdp_dim(shard_shape, fsdp, taken)
+        if fd is not None:
+            spec[fd] = "data"
+    return P(*spec)
+
+
+def _fsdp_gather_dim(path, shape, cfg, tp, fsdp: int, stacked: bool) -> int:
+    spec = _spec_for(path, shape, cfg, tp, fsdp, stacked)
+    for d, s in enumerate(spec):
+        if s == "data":
+            return d - (1 if stacked else 0)
+    return -1
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig, rt: Runtime):
+        self.cfg = cfg
+        self.rt = rt
+        self.tp = rt.tp_size if rt.tp_axis else 1
+        self._fsdp_size = 1
+        self._fdims = None       # per-leaf FSDP gather dims (global shapes)
+        self._fdims_enc = None
+
+    def with_fsdp(self, fsdp_size: int) -> "Model":
+        m = Model(self.cfg, self.rt)
+        m._fsdp_size = fsdp_size if self.rt.fsdp_axis else 1
+        return m
+
+    def prepare(self, params_shape: Any) -> None:
+        """Precompute FSDP gather dims from *global* shapes.  Must be
+        called before tracing apply_* under shard_map when FSDP is on
+        (the local-shape view inside shard_map cannot reproduce the
+        global dim choice)."""
+        self._fdims = self.fsdp_dims(params_shape["layers"], stacked=True)
+        if "enc_layers" in params_shape:
+            self._fdims_enc = self.fsdp_dims(params_shape["enc_layers"],
+                                             stacked=True)
+
+    def _get_fdims(self, params, enc: bool = False) -> Any:
+        tree = params["enc_layers" if enc else "layers"]
+        if self.rt.fsdp_axis is None or self._fsdp_size <= 1:
+            return jax.tree.map(lambda _: -1, tree)
+        got = self._fdims_enc if enc else self._fdims
+        assert got is not None, "call model.prepare(global_shapes) before tracing"
+        return got
+
+    # ------------------------------------------------------------- init --
+
+    def init(self, key) -> dict:
+        cfg, tp, dtype = self.cfg, self.tp, self.cfg.dtype
+        keys = jax.random.split(key, 8)
+        Vp = cfg.padded_vocab(tp)
+        params: dict[str, Any] = {
+            "embed": layers.init_embedding(keys[0], Vp, cfg.d_model, tp, dtype),
+        }
+        cross = cfg.n_enc_layers > 0
+        lkeys = jax.random.split(keys[1], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: transformer.init_layer(k, cfg, tp, dtype, cross=cross)
+        )(lkeys)
+        if cross:
+            ekeys = jax.random.split(keys[2], cfg.n_enc_layers)
+            params["enc_layers"] = jax.vmap(
+                lambda k: transformer.init_encoder_layer(k, cfg, tp, dtype)
+            )(ekeys)
+            params["enc_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+            params["pos_emb"] = (jax.random.normal(
+                keys[3], (cfg.max_seq, cfg.d_model), jnp.float32) * 0.01).astype(dtype)
+        params["final_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.init_embedding(keys[4], Vp, cfg.d_model,
+                                                      tp, dtype)
+        return params
+
+    # ------------------------------------------------------------ specs --
+
+    def param_specs(self, params_shape: Any) -> Any:
+        cfg, tp, fsdp = self.cfg, self.tp, self._fsdp_size
+
+        def spec(path, leaf):
+            stacked = any(isinstance(k, DictKey) and str(k.key) in
+                          ("layers", "enc_layers") for k in path)
+            # FSDP only applies to layer params (gathered inside the
+            # scan); top-level leaves (embed/lm_head/norms) stay
+            # data-replicated.
+            return _spec_for(path, leaf.shape, cfg, tp,
+                             fsdp if stacked else 1, stacked)
+
+        return tree_map_with_path(spec, params_shape)
+
+    def fsdp_dims(self, layer_shape_tree: Any, stacked: bool = True) -> Any:
+        """Per-leaf local gather dim (-1 = replicated) for layer params
+        as seen inside the scan body (leading L dim consumed)."""
+        cfg, tp, fsdp = self.cfg, self.tp, self._fsdp_size
+
+        def dim(path, leaf):
+            return _fsdp_gather_dim(path, leaf.shape, cfg, tp, fsdp, stacked)
+
+        return tree_map_with_path(dim, layer_shape_tree)
+
+    # ------------------------------------------------------------ apply --
+
+    def _embed_in(self, params, tokens, pos_offset=None):
+        cfg, rt = self.cfg, self.rt
+        x = layers.embed_lookup(params["embed"], tokens, rt)
+        if cfg.n_enc_layers > 0:  # learned positions (whisper decoder)
+            S = tokens.shape[1]
+            if pos_offset is None:
+                pos = params["pos_emb"][:S]
+            else:
+                pos = lax.dynamic_slice_in_dim(params["pos_emb"], pos_offset, S)
+            x = x + pos[None].astype(x.dtype)
+        return x
+
+    def _encode(self, params, enc_input, fsdp_dims_enc):
+        cfg, rt = self.cfg, self.rt
+        S = enc_input.shape[1]
+        posf = _sinusoidal(S, cfg.d_model)
+        x = enc_input.astype(cfg.dtype) + posf.astype(cfg.dtype)[None]
+        x = transformer.encoder_stack(params["enc_layers"], x, cfg, rt,
+                                      fsdp_dims_enc)
+        return layers.apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def apply_train(self, params, tokens, enc_input=None):
+        """tokens: (B, S) local -> (vocab-sharded logits f32, aux)."""
+        cfg, rt = self.cfg, self.rt
+        x = self._embed_in(params, tokens)
+        fdims = self._get_fdims(params)
+        enc_out = None
+        if cfg.n_enc_layers > 0:
+            enc_out = self._encode(params, enc_input, self._get_fdims(params, enc=True))
+        if rt.sp and rt.tp_axis is not None:
+            x = transformer.scatter_from_full(x, rt)
+        x, aux = transformer.decoder_stack(params["layers"], x, cfg, rt, fdims,
+                                           enc_out=enc_out)
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        if rt.sp and rt.tp_axis is not None:
+            x = gather_sp(x, rt.tp_axis)
+        head = params.get("lm_head", params["embed"])
+        logits = layers.lm_head_logits(x, head, rt)
+        return logits, aux
+
+    # --------------------------------------------------------- serving --
+
+    def make_caches(self, batch: int, seq_len: int, enc_seq: int = 0):
+        cfg, tp = self.cfg, self.tp
+        L = cfg.n_layers
+
+        def one():
+            if cfg.family == "ssm":
+                return ssm.make_ssm_state(cfg, batch, tp)
+            kv = attention.make_cache(cfg, batch, tp, seq_len, cfg.dtype)
+            if cfg.parallel_ssm:
+                return (kv, ssm.make_ssm_state(cfg, batch, tp))
+            if cfg.n_enc_layers > 0:
+                cross = attention.make_cache(cfg, batch, tp, seq_len, cfg.dtype,
+                                             cross=True, enc_seq=enc_seq)
+                return (kv, cross)
+            return kv
+
+        proto = one()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape),
+                            proto)
+
+    def _layer_decode(self, lp, x, cache):
+        cfg, rt = self.cfg, self.rt
+        if cfg.family == "ssm":
+            h = layers.apply_norm(lp["norm_ssm"], x, cfg.norm)
+            out, new = ssm.apply_ssm_decode(lp["ssm"], h, cfg, rt, cache)
+            return x + out, new
+        if cfg.parallel_ssm:
+            kv, st = cache
+            h = layers.apply_norm(lp["norm_attn"], x, cfg.norm)
+            a, kv2 = attention.attention_decode(lp["attn"], h, cfg, rt, kv)
+            s, st2 = ssm.apply_ssm_decode(lp["ssm"], h, cfg, rt, st)
+            x = x + (a + s) * 0.5
+            h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            x = x + layers.apply_mlp(lp["mlp"], h, rt)
+            return x, (kv2, st2)
+        if cfg.n_enc_layers > 0:
+            kv, cross = cache
+            h = layers.apply_norm(lp["norm_attn"], x, cfg.norm)
+            a, kv2 = attention.attention_decode(lp["attn"], h, cfg, rt, kv)
+            x = x + a
+            h = layers.apply_norm(lp["norm_cross"], x, cfg.norm)
+            c, _ = attention.attention_decode(lp["cross"], h, cfg, rt, cross,
+                                              cross=True)
+            x = x + c
+            h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+            x = x + transformer.apply_gelu_mlp(lp["mlp"], h, rt)
+            return x, (kv2, cross)
+        kv = cache
+        h = layers.apply_norm(lp["norm_attn"], x, cfg.norm)
+        a, kv2 = attention.attention_decode(lp["attn"], h, cfg, rt, kv)
+        x = x + a
+        h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+        if cfg.family == "moe":
+            out, _ = moe.apply_moe(lp["moe"], h, cfg, rt)
+            x = x + out
+        else:
+            x = x + layers.apply_mlp(lp["mlp"], h, rt)
+        return x, kv2
+
+    def apply_decode(self, params, token, caches):
+        """One decode step. token: (B, 1) -> (logits (B,1,Vl), caches)."""
+        cfg, rt = self.cfg, self.rt
+        pos = _cache_length(caches, cfg)
+        if cfg.n_enc_layers > 0:
+            x = self._embed_in(params, token, pos_offset=pos)
+        else:
+            x = self._embed_in(params, token)
+        fdims = self._get_fdims(params)
+
+        def body(xx, lp_cache):
+            lp, cache = lp_cache
+            lp = fsdp_gather(lp, fdims, rt.fsdp_axis)
+            xx, new = self._layer_decode(lp, xx, cache)
+            return xx, new
+
+        x, new_caches = lax.scan(body, x, (params["layers"], caches))
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm)
+        head = params.get("lm_head", params["embed"])
+        return layers.lm_head_logits(x, head, rt), new_caches
+
+    def apply_prefill(self, params, tokens, enc_input=None, max_len=None):
+        """Prefill: returns (last-token vocab-sharded logits, caches).
+        ``max_len`` sizes the KV cache (>= S) to leave decode headroom."""
+        cfg, rt = self.cfg, self.rt
+        B, S = tokens.shape
+        max_len = max_len or S
+        x = self._embed_in(params, tokens)
+        fdims = self._get_fdims(params)
+        enc_out = None
+        if cfg.n_enc_layers > 0:
+            enc_out = self._encode(params, enc_input, self._get_fdims(params, enc=True))
+
+        def body(xx, lp):
+            lp = fsdp_gather(lp, fdims, rt.fsdp_axis)
+            new_cache, out = _layer_prefill(lp, xx, cfg, rt, max_len, enc_out)
+            return out, new_cache
+
+        if rt.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, caches = lax.scan(body, x, params["layers"])
+        x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+        head = params.get("lm_head", params["embed"])
+        return layers.lm_head_logits(x, head, rt), caches
+
+
+def _cache_length(caches, cfg: ModelConfig):
+    leaves = jax.tree.leaves(caches)
+    # the `length` scalar is stacked (L,); take layer 0's
+    for lf in leaves:
+        if lf.ndim == 1 and lf.dtype == jnp.int32:
+            return lf[0]
+    return jnp.int32(0)
+
+
+def _layer_prefill(lp, x, cfg: ModelConfig, rt: Runtime, max_len: int, enc_out):
+    if cfg.family == "ssm":
+        h = layers.apply_norm(lp["norm_ssm"], x, cfg.norm)
+        out, st = ssm.apply_ssm(lp["ssm"], h, cfg, rt, return_state=True)
+        return st, x + out
+    if cfg.parallel_ssm:
+        h = layers.apply_norm(lp["norm_attn"], x, cfg.norm)
+        kv0 = attention.make_cache(cfg, x.shape[0], rt.tp_size if rt.tp_axis else 1,
+                                   max_len, cfg.dtype)
+        a, kv = attention.attention_prefill(lp["attn"], h, cfg, rt, kv0)
+        s, st = ssm.apply_ssm(lp["ssm"], h, cfg, rt, return_state=True)
+        x = x + (a + s) * 0.5
+        h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+        x = x + layers.apply_mlp(lp["mlp"], h, rt)
+        return (kv, st), x
+    tp = rt.tp_size if rt.tp_axis else 1
+    kv0 = attention.make_cache(cfg, x.shape[0], tp, max_len, cfg.dtype)
+    h = layers.apply_norm(lp["norm_attn"], x, cfg.norm)
+    a, kv = attention.attention_prefill(lp["attn"], h, cfg, rt, kv0)
+    x = x + a
+    if enc_out is not None:
+        h = layers.apply_norm(lp["norm_cross"], x, cfg.norm)
+        cross0 = attention.make_cache(cfg, x.shape[0], tp, max_len, cfg.dtype,
+                                      cross=True, enc_seq=enc_out.shape[1])
+        c, cross = attention.attention_prefill(lp["cross"], h, cfg, rt, cross0,
+                                               x_cross=enc_out)
+        x = x + c
+        h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+        x = x + transformer.apply_gelu_mlp(lp["mlp"], h, rt)
+        return (kv, cross), x
+    h = layers.apply_norm(lp["norm_mlp"], x, cfg.norm)
+    if cfg.family == "moe":
+        out, _ = moe.apply_moe(lp["moe"], h, cfg, rt)
+        x = x + out
+    else:
+        x = x + layers.apply_mlp(lp["mlp"], h, rt)
+    return kv, x
+
+
+def _sinusoidal(S: int, d: int) -> jax.Array:
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts layer with two sharding strategies.
+
+* ``ep``  (n_experts >= tp, e.g. qwen3-moe 128e/16): classic expert
+  parallelism — experts live on TP devices (E/tp each); tokens are
+  scatter-packed into per-destination capacity buckets and exchanged
+  with one all_to_all over the model axis each way (the Table-2 MoE
+  traffic the paper's AllToAllH handles; at multi-pod scale the a2a
+  stays intra-pod because experts are sharded over the model axis only).
+
+* ``etp`` (n_experts < tp, e.g. mixtral 8e/16): expert-tensor
+  parallelism — every device holds a 1/tp slice of *every* expert's FFN
+  (same memory as EP) and computes all locally-routed tokens against
+  its slice; one TP psum combines.  No all_to_all, no sub-axis
+  collectives, and perfectly balanced regardless of routing skew.
+
+Routing: top-k softmax gating with capacity dropping (GShard) and the
+standard load-balance auxiliary loss (Switch).  Dropped tokens pass
+through via the residual stream.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp, tp_entry_axis
+from . import layers
+
+
+def strategy(cfg: ModelConfig, tp: int) -> str:
+    return "ep" if cfg.n_experts >= tp else "etp"
+
+
+def init_moe(key, cfg: ModelConfig, tp: int, dtype):
+    """Global expert banks (E, D, dff).  The PartitionSpec (model.py)
+    shards the expert dim for ``ep`` or the d_ff dim for ``etp``; this
+    init is strategy-agnostic."""
+    E, D, dff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(D)
+    s_out = 1.0 / math.sqrt(dff)
+    return {
+        "router": layers.init_dense(kr, D, E, jnp.float32),  # replicated, f32
+        "w_gate": (jax.random.normal(kg, (E, D, dff), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, D, dff), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, dff, D), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def _route(p, x2d, cfg: ModelConfig):
+    """x2d: (T, D) -> top-k (weights (T,k), ids (T,k), aux loss)."""
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)           # renormalize
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=0)
+    onehot = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)
+    fe = jnp.mean(onehot, axis=0)
+    aux = E * jnp.sum(fe * me)
+    return w, ids, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, xs):
+    """Batched expert FFN: xs (E_l, C, D) -> (E_l, C, D)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xs, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    return max(8, int(math.ceil(T * k / E * factor / 8.0)) * 8)
+
+
+def _pack(x2d, ids, w, E: int, C: int):
+    """Scatter tokens into per-expert capacity buckets.
+
+    Returns buf (E, C, D) and (slot, keep) (T, k) for the combine
+    gather.  The scatter runs once per routing slot (k is tiny) so the
+    token matrix is never materialized k times."""
+    T, k = ids.shape
+    flat_e = ids.reshape(-1)                              # (T*k,) t-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                  # occupancy index
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0].reshape(T, k)
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, 0)
+    buf = jnp.zeros((E, C, x2d.shape[1]), x2d.dtype)
+    for j in range(k):
+        buf = buf.at[ids[:, j], slot_c[:, j]].add(
+            jnp.where(keep[:, j][:, None], x2d, 0))
+    return buf, (ids, slot_c, keep, w)
+
+
+def _combine(out_buf, route, T: int, k: int, dtype):
+    ids, slot_c, keep, w = route
+    out = jnp.zeros((T, out_buf.shape[-1]), out_buf.dtype)
+    for j in range(k):
+        picked = out_buf[ids[:, j], slot_c[:, j]]
+        picked = jnp.where(keep[:, j][:, None], picked, 0)
+        out = out + picked * w[:, j, None].astype(picked.dtype)
+    return out.astype(dtype)
+
+
+def apply_moe(p, x, cfg: ModelConfig, rt: Runtime):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    x = copy_to_tp(x, tp_entry_axis(rt))
+    x2d = x.reshape(-1, D)
+    T = x2d.shape[0]
+    w, ids, aux = _route(p, x2d, cfg)
+    E, k = cfg.n_experts, cfg.top_k
+    tp = rt.tp_size if rt.tp_axis else 1
+
+    if strategy(cfg, tp) == "etp" or rt.tp_axis is None or tp == 1:
+        # etp: expert outputs are 1/tp partials, so the combine weights
+        # multiply partial sums — their cotangent needs a TP psum, which
+        # copy_to_tp's backward provides.
+        w = copy_to_tp(w, rt.tp_axis)
+        C = _capacity(T, k, E, rt.moe_capacity_factor)
+        buf, route = _pack(x2d, ids, w, E, C)
+        out_buf = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], buf)
+        out = _combine(out_buf, route, T, k, x.dtype)
+        out = reduce_from_tp(out, rt.tp_axis)             # sum 1/tp FFN slices
+        return out.reshape(B, S, D), aux
+
+    # --- ep: all_to_all dispatch over the model axis -----------------------
+    # x (and therefore the routing) is REPLICATED across the model axis;
+    # each model column owns a disjoint 1/tp slice of the tokens, so the
+    # expert compute is not duplicated.  The end all_gather rebuilds the
+    # full token range (and its transpose scatters the cotangent back).
+    el = E // tp                                          # local experts
+    pad_t = (-T) % tp
+    if pad_t:  # tiny decode batches: pad with weight-0 tokens
+        x2d = jnp.concatenate([x2d, jnp.zeros((pad_t, D), x2d.dtype)])
+        ids = jnp.concatenate([ids, jnp.zeros((pad_t, k), ids.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad_t, k), w.dtype)])
+    T_pad = T + pad_t
+    T_loc = T_pad // tp
+    col = lax.axis_index(rt.tp_axis)
+    x_loc = lax.dynamic_slice_in_dim(x2d, col * T_loc, T_loc, axis=0)
+    ids_loc = lax.dynamic_slice_in_dim(ids, col * T_loc, T_loc, axis=0)
+    w_loc = lax.dynamic_slice_in_dim(w, col * T_loc, T_loc, axis=0)
+    C = _capacity(T_loc, k, E, rt.moe_capacity_factor)
+    buf, route = _pack(x_loc, ids_loc, w_loc, E, C)       # (E, C, D)
+    buf = buf.reshape(tp, el, C, D)
+    # a2a: dim0 -> devices; receive (tp, el, C, D) = sources' buckets for
+    # my local experts.
+    recv = lax.all_to_all(buf, rt.tp_axis, split_axis=0, concat_axis=0,
+                          tiled=False)
+    # recv[src] = src's buckets for my local experts; fold sources into
+    # the capacity dim.
+    xs = jnp.swapaxes(recv, 0, 1).reshape(el, tp * C, D)
+    out_loc = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xs)
+    out_loc = jnp.swapaxes(out_loc.reshape(el, tp, C, D), 0, 1)  # (tp, el, C, D)
+    back = lax.all_to_all(out_loc, rt.tp_axis, split_axis=0, concat_axis=0,
+                          tiled=False)
+    out_buf = back.reshape(E, C, D)
+    out = _combine(out_buf, route, T_loc, k, x.dtype)     # (T_loc, D)
+    out = lax.all_gather(out, rt.tp_axis, axis=0, tiled=True)  # (T_pad, D)
+    if pad_t:
+        out = out[:T]
+    return out.reshape(B, S, D), aux

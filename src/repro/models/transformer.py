@@ -1,0 +1,197 @@
+"""Layer composition + stacks for every assigned architecture family.
+
+One ``init_layer``/``apply_layer`` pair handles all families (dense,
+moe, ssm, hybrid, encdec-decoder); stacks scan over stacked layer
+params with optional remat and per-layer FSDP gather.  Caches for
+prefill/decode are pytrees stacked on a leading layer dim and threaded
+through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Runtime, fsdp_gather, gather_sp, scatter_sp
+from . import attention, layers, moe, ssm
+
+
+def _mlp_kind(cfg: ModelConfig) -> str:
+    return "gelu" if cfg.family == "encdec" else "swiglu"
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w1": layers.init_dense(k1, d, d_ff, dtype),
+            "b1": jnp.zeros((d_ff,), dtype),
+            "w2": layers.init_dense(k2, d_ff, d, dtype),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def apply_gelu_mlp(p, x, rt: Runtime, reduce: bool = True):
+    from repro.parallel.sharding import copy_to_tp, reduce_from_tp, tp_entry_axis
+    x = copy_to_tp(x, tp_entry_axis(rt))
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    out = h @ p["w2"]
+    out = reduce_from_tp(out, rt.tp_axis) if reduce else out
+    # b2 is replicated: add after the reduce to avoid tp-times counting
+    return out + p["b2"] if reduce else out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, tp: int, dtype, cross: bool = False):
+    """One decoder layer for any family; ``cross`` adds cross-attention
+    (whisper decoder)."""
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    if cfg.family == "ssm":
+        p["norm_ssm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["ssm"] = ssm.init_ssm(ks[0], cfg, tp, dtype)
+        return p
+    p["norm_attn"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+    p["attn"] = attention.init_attention(ks[0], cfg, tp, dtype)
+    if cfg.parallel_ssm:  # hymba: parallel attn + ssm heads
+        p["ssm"] = ssm.init_ssm(ks[1], cfg, tp, dtype)
+    if cross:
+        p["norm_cross"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = attention.init_attention(ks[2], cfg, tp, dtype, cross=True)
+    p["norm_mlp"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe(ks[3], cfg, tp, dtype)
+    elif _mlp_kind(cfg) == "gelu":
+        p["mlp"] = init_gelu_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_encoder_layer(key, cfg: ModelConfig, tp: int, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm_attn": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init_attention(ks[0], cfg, tp, dtype),
+        "norm_mlp": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _sub(x_res, fn_partial, rt: Runtime):
+    """Apply a TP sublayer to the (possibly sequence-sharded) residual
+    stream: SP gathers the sequence before and reduce-scatters after;
+    non-SP uses the plain psum inside fn (reduce=True)."""
+    if rt.sp and rt.tp_axis is not None:
+        xg = gather_sp(x_res, rt.tp_axis)
+        out = fn_partial(xg, False)         # partial sums, no psum
+        return scatter_sp(out, rt.tp_axis)
+    return fn_partial(x_res, True)
+
+
+def _sub_reduced(x_res, fn_full, rt: Runtime):
+    """SP wrapper for sublayers that psum internally (SSM, MoE): gather
+    the sequence, run, slice this device's shard of the reduced output."""
+    if rt.sp and rt.tp_axis is not None:
+        out = fn_full(gather_sp(x_res, rt.tp_axis))
+        return scatter_from_full(out, rt)
+    return fn_full(x_res)
+
+
+def apply_layer(p, x, cfg: ModelConfig, rt: Runtime, *, enc_out=None,
+                causal: bool = True):
+    """x: (B, S[/tp if SP], D) -> same shape; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = layers.apply_norm(p["norm_ssm"], x, cfg.norm)
+        x = x + _sub_reduced(h, lambda xg: ssm.apply_ssm(p["ssm"], xg, cfg, rt), rt)
+        return x, aux
+
+    h = layers.apply_norm(p["norm_attn"], x, cfg.norm)
+    if cfg.parallel_ssm:  # hymba: attn and SSM heads fuse the same input
+        def both(xg):
+            a = attention.attention_train(p["attn"], xg, cfg, rt, causal=causal)
+            s = ssm.apply_ssm(p["ssm"], xg, cfg, rt)
+            return (a + s) * 0.5
+        x = x + _sub_reduced(h, both, rt)
+    else:
+        x = x + _sub(h, lambda xg, red: attention.attention_train(
+            p["attn"], xg, cfg, rt, causal=causal, reduce=red), rt)
+
+    if enc_out is not None:
+        h = layers.apply_norm(p["norm_cross"], x, cfg.norm)
+        x = x + _sub(h, lambda xg, red: attention.attention_train(
+            p["cross"], xg, cfg, rt, x_cross=enc_out, reduce=red), rt)
+
+    h = layers.apply_norm(p["norm_mlp"], x, cfg.norm)
+    if cfg.family == "moe":
+        aux_box = []
+        def moe_full(xg):
+            out, a = moe.apply_moe(p["moe"], xg, cfg, rt)
+            aux_box.append(a)
+            return out
+        x = x + _sub_reduced(h, moe_full, rt)
+        aux = aux + aux_box[0]
+    elif _mlp_kind(cfg) == "gelu":
+        x = x + _sub(h, lambda xg, red: apply_gelu_mlp(p["mlp"], xg, rt, red), rt)
+    else:
+        x = x + _sub(h, lambda xg, red: layers.apply_mlp(p["mlp"], xg, rt, red), rt)
+    return x, aux
+
+
+def scatter_from_full(out_full, rt: Runtime):
+    """Slice this device's sequence shard from an already-reduced full
+    output (SP path for sublayers that psum internally)."""
+    S = out_full.shape[1]
+    tp = rt.tp_size
+    shard = S // tp
+    idx = lax.axis_index(rt.tp_axis) * shard
+    return lax.dynamic_slice_in_dim(out_full, idx, shard, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def decoder_stack(stacked, x, cfg: ModelConfig, rt: Runtime, fsdp_dims,
+                  *, enc_out=None, causal: bool = True):
+    """scan over stacked layer params.  Returns (x, total_aux)."""
+
+    def body(carry, lp):
+        xx, aux = carry
+        lp = fsdp_gather(lp, fsdp_dims, rt.fsdp_axis)
+        xx, a = apply_layer(lp, xx, cfg, rt, enc_out=enc_out, causal=causal)
+        return (xx, aux + a), None
+
+    if rt.remat:
+        from repro.parallel.sharding import remat_policy_for
+        pol = remat_policy_for(rt)
+        body = jax.checkpoint(body, prevent_cse=False, policy=pol)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def encoder_stack(stacked, x, cfg: ModelConfig, rt: Runtime, fsdp_dims):
+    def body(carry, lp):
+        lp = fsdp_gather(lp, fsdp_dims, rt.fsdp_axis)
+        h = layers.apply_norm(lp["norm_attn"], carry, cfg.norm)
+        carry = carry + _sub(h, lambda xg, red: attention.attention_train(
+            lp["attn"], xg, cfg, rt, causal=False, reduce=red), rt)
+        h = layers.apply_norm(lp["norm_mlp"], carry, cfg.norm)
+        carry = carry + _sub(h, lambda xg, red: apply_gelu_mlp(
+            lp["mlp"], xg, rt, red), rt)
+        return carry, None
+
+    if rt.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = lax.scan(body, x, stacked)
+    return x

@@ -1,0 +1,10 @@
+"""Distribution runtime: explicit TP/SP/FSDP/EP sharding + PP-over-pod."""
+
+from .sharding import (  # noqa: F401
+    Runtime,
+    copy_to_tp,
+    fsdp_gather,
+    gather_sp,
+    reduce_from_tp,
+    scatter_sp,
+)

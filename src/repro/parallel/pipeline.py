@@ -1,0 +1,79 @@
+"""GPipe pipeline parallelism over the pod axis.
+
+The paper's own end-to-end training setup (Appendix B, Table 8) places
+*pipeline* stages across the vendor groups and data-parallelism inside
+each — because PP's stage handoff puts only microbatch activations on
+the slow cross-cluster links.  Our multi-pod mapping does the same: the
+``pod`` axis is the pipeline dimension, stage handoffs are HetCCL
+SendRecv (``ppermute`` over ``pod`` = DCN), and TP/DP stay intra-pod.
+
+SPMD GPipe: every pod steps a shared schedule of T = n_micro +
+n_stages - 1 slots; pod p is active for slots [p, p + n_micro).  Stage
+compute runs every slot (masked when inactive — the classic bubble,
+(S-1)/(M+S-1) of the step); autodiff of the scan + ppermute yields the
+reverse-schedule backward automatically.
+
+Layer-stack params are sharded over ``pod`` on the stacked L dim
+(in_specs P("pod", ...)), so stage p physically owns layers
+[p·L/S, (p+1)·L/S) — no parameter duplication across stages; embed and
+lm_head are pod-replicated and masked to stages 0 / S-1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import Runtime
+
+
+def _ring_fwd(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def gpipe_apply(stage_fn, x_micros: jax.Array, rt: Runtime, n_stages: int):
+    """Run microbatches through the pod pipeline.
+
+    stage_fn: (x (Bm, S, D)) -> (Bm, S, D) — this pod's layer slice.
+    x_micros: (M, Bm, S, D) — only stage 0's value is consumed.
+    Returns (M, Bm, S, D): stage (n_stages-1)'s outputs (garbage on
+    other pods — mask downstream with pp_loss_mask).
+    """
+    M = x_micros.shape[0]
+    p = lax.axis_index(rt.pod_axis)
+    T = M + n_stages - 1
+    perm = _ring_fwd(n_stages)
+
+    def step(carry, t):
+        buf, outs = carry                      # buf: (Bm, S, D) in flight
+        recv = lax.ppermute(buf, rt.pod_axis, perm)      # DCN handoff
+        idx = jnp.clip(t, 0, M - 1)
+        feed = jnp.where(p == 0, x_micros[idx], recv)
+        active = (t >= p) & (t < p + M)
+        out = stage_fn(feed)
+        out = jnp.where(active, out, jnp.zeros_like(out))
+        is_last = p == n_stages - 1
+        slot = jnp.clip(t - (n_stages - 1), 0, M - 1)
+        write = active & is_last
+        outs = lax.dynamic_update_index_in_dim(
+            outs, jnp.where(write, out, outs[slot]), slot, 0)
+        return (out, outs), None
+
+    buf0 = jnp.zeros_like(x_micros[0])
+    outs0 = jnp.zeros_like(x_micros)
+    (_, outs), _ = lax.scan(step, (buf0, outs0), jnp.arange(T))
+    return outs
+
+
+def pp_loss_mask(value, rt: Runtime, n_stages: int):
+    """Keep the last stage's value, zero elsewhere, and broadcast it to
+    all pods (so metrics and the optimizer see one consistent scalar).
+
+    Uses the psum-forward/identity-backward wrapper: under
+    check_vma=False a raw psum's transpose re-psums the cotangent and
+    over-counts gradients."""
+    from repro.parallel.sharding import reduce_from_tp
+    p = lax.axis_index(rt.pod_axis)
+    masked = jnp.where(p == n_stages - 1, value, jnp.zeros_like(value))
+    return reduce_from_tp(masked, rt.pod_axis)

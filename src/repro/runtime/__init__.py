@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager  # noqa: F401
+from .health import NaNWatchdog, StragglerMonitor, WatchdogConfig  # noqa: F401

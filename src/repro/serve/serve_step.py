@@ -1,0 +1,182 @@
+"""Serving: sharded prefill / decode steps + disaggregated KV transfer.
+
+The decode path is the paper's §6.2.2 scenario: prefill on one pod
+(cluster), decode on another, with the KV cache crossing the DCN via the
+HetCCL SendRecv (``kv_transfer``: a pod-axis ppermute, optionally int8-
+compressed — mechanism (c) of Fig. 2 instead of host-forwarding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression
+from repro.models import Model
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMState
+from repro.parallel.sharding import Runtime
+from repro.train.loss import sharded_argmax
+
+
+def batch_spec_axes(global_batch: int, rt: Runtime):
+    """Choose the batch sharding: full dp, data-only, or replicated —
+    long-context single-request decode can't shard batch=1."""
+    sizes = {"full": 1, "data": 1}
+    # static sizes are unknown here; the caller passes mesh axis sizes
+    return None  # resolved in make_*_step with the mesh
+
+
+def _axes_for_batch(mesh, rt: Runtime, global_batch: int):
+    dp = [a for a in (rt.pod_axis, rt.dp_axis) if a]
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if dp and global_batch % size == 0:
+        return tuple(dp)
+    if rt.dp_axis and global_batch % mesh.shape[rt.dp_axis] == 0:
+        return (rt.dp_axis,)
+    return None
+
+
+def globalize_shapes(local_shape_tree: Any, specs: Any, mesh) -> Any:
+    """Scale local (per-device) ShapeDtypeStructs to the global shapes
+    expected by jit.lower: each dim named in the spec multiplies by the
+    product of its mesh axes."""
+    if mesh is None:
+        return local_shape_tree
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def glob(leaf, spec):
+        dims = list(leaf.shape)
+        for d, names in enumerate(tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))):
+            if names is None:
+                continue
+            for nm in (names if isinstance(names, tuple) else (names,)):
+                dims[d] *= sizes[nm]
+        return jax.ShapeDtypeStruct(tuple(dims), leaf.dtype)
+
+    return jax.tree.map(glob, local_shape_tree, specs)
+
+
+def cache_specs(caches_shape: Any, batch_axes, rt: Runtime) -> Any:
+    """PartitionSpec tree for stacked (L, ...) caches."""
+    tp = "model" if rt.tp_axis else None
+
+    def spec(leaf):
+        if leaf.ndim == 1:            # (L,) length scalars
+            return P(None)
+        if leaf.ndim == 5:            # (L, B, W, kl, dh) KV
+            return P(None, batch_axes, None, tp, None)
+        if leaf.ndim == 4:            # (L, B, W-1, ch) conv state
+            return P(None, batch_axes, None, tp)
+        if leaf.ndim == 3:
+            return P(None, batch_axes, tp)
+        return P(*([None] * leaf.ndim))
+
+    def spec5(leaf):                   # ssm state (L, B, H, P, N)
+        return P(None, batch_axes, tp, None, None)
+
+    def pick(path, leaf):
+        # SSM state leaves are f32 4+1D: (L, B, Hl, P, N)
+        if leaf.ndim == 5 and leaf.dtype == jnp.float32:
+            return spec5(leaf)
+        return spec(leaf)
+
+    from jax.tree_util import tree_map_with_path
+    return tree_map_with_path(pick, caches_shape)
+
+
+def make_serve_steps(model: Model, mesh, global_batch: int, seq_len: int):
+    """Returns (prefill_fn, decode_fn, caches_shape) jitted over the mesh."""
+    rt = model.rt
+    cfg = model.cfg
+    baxes = _axes_for_batch(mesh, rt, global_batch)
+    dp_size = 1
+    if baxes:
+        for a in baxes:
+            dp_size *= mesh.shape[a]
+    local_batch = global_batch // dp_size
+
+    def params_shape():
+        return jax.eval_shape(model.init, jax.random.key(0))
+
+    pshape = params_shape()
+    model.prepare(pshape)
+    pspecs = model.param_specs(pshape)
+
+    caches_local = jax.eval_shape(
+        lambda: model.make_caches(local_batch, seq_len,
+                                  enc_seq=cfg.enc_seq))
+    cspecs = cache_specs(caches_local, baxes, rt)
+    caches_shape = globalize_shapes(caches_local, cspecs, mesh)
+
+    tok_spec = P(baxes)
+
+    def prefill_body(params, tokens, enc=None):
+        logits, caches = model.apply_prefill(params, tokens, enc)
+        next_tok = sharded_argmax(logits, rt, cfg.vocab_size)
+        return next_tok, caches
+
+    def decode_body(params, token, caches):
+        logits, new_caches = model.apply_decode(params, token, caches)
+        next_tok = sharded_argmax(logits, rt, cfg.vocab_size)
+        return next_tok, new_caches
+
+    if mesh is None:
+        return (jax.jit(prefill_body), jax.jit(decode_body), caches_shape)
+
+    in_pre = (pspecs, tok_spec) + ((P(baxes),) if cfg.n_enc_layers else ())
+    prefill = jax.jit(jax.shard_map(
+        prefill_body, mesh=mesh, in_specs=in_pre,
+        out_specs=(tok_spec, cspecs), check_vma=False))
+    decode = jax.jit(jax.shard_map(
+        decode_body, mesh=mesh, in_specs=(pspecs, tok_spec, cspecs),
+        out_specs=(tok_spec, cspecs), check_vma=False), donate_argnums=(2,))
+    return prefill, decode, caches_shape
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode: KV transfer across pods (paper §6.2.2)
+# ---------------------------------------------------------------------------
+
+def kv_transfer_body(caches, rt: Runtime, compress: str | None = None,
+                     shift: int = 1):
+    """Move every cache leaf from pod i to pod (i+shift) — the HetCCL
+    device-buffer SendRecv standing in for NCCL/host-forwarding in the
+    vLLM-style disaggregation.  int8 compression quantizes the wire
+    payload (KV tolerates 8-bit well)."""
+    n = lax.psum(1, rt.pod_axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+
+    def move(leaf):
+        if compress == "int8" and leaf.dtype in (jnp.bfloat16, jnp.float32) \
+                and leaf.size >= 1024:
+            flat = leaf.reshape(-1)
+            pad = (-flat.size) % 1024
+            if pad:
+                flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+            q, s = compression.quantize_int8(flat)
+            q2 = lax.ppermute(q, rt.pod_axis, perm)
+            s2 = lax.ppermute(s, rt.pod_axis, perm)
+            out = compression.dequantize_int8(q2, s2, leaf.size, leaf.dtype)
+            return out.reshape(leaf.shape)
+        return lax.ppermute(leaf, rt.pod_axis, perm)
+
+    return jax.tree.map(move, caches)
+
+
+def make_kv_transfer(model: Model, mesh, caches_shape, global_batch: int,
+                     compress: str | None = None):
+    rt = model.rt
+    baxes = _axes_for_batch(mesh, rt, global_batch)
+    cspecs = cache_specs(caches_shape, baxes, rt)
+    fn = functools.partial(kv_transfer_body, rt=rt, compress=compress)
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(cspecs,),
+                                 out_specs=cspecs, check_vma=False))

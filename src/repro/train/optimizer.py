@@ -1,0 +1,108 @@
+"""AdamW — plain (per-leaf, any sharding) and ZeRO-1 (flat-shard) forms.
+
+The ZeRO-1 form consumes the flat f32 gradient shard produced by
+``tree_hier_psum_scatter`` (the AllReduceH start+C2C steps) and defers
+the end-AllGather to the parameter reconstruction — optimizer state
+lives only on the 1/intra_size shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def lr_at(cfg: OptConfig, step) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adam_init(params: Any) -> AdamState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    z2 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(z, z2, jnp.zeros((), jnp.int32))
+
+
+def adam_update(grads: Any, state: AdamState, params: Any, cfg: OptConfig,
+                scale: jax.Array | float = 1.0):
+    """Elementwise AdamW; works on any matching sharding of
+    (grads, state, params).  ``scale`` pre-multiplies grads (1/dp)."""
+    t = state.step + 1
+    lr = lr_at(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / c1
+        vhat = v2 / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (step + decay)
+        return p2.astype(p.dtype), m2, v2
+
+    gl, treedef = jax.tree.flatten(grads)
+    ml = treedef.flatten_up_to(state.mu)
+    vl = treedef.flatten_up_to(state.nu)
+    pl = treedef.flatten_up_to(params)
+    ps, ms, vs = [], [], []
+    for g, m, v, p in zip(gl, ml, vl, pl):
+        p2, m2, v2 = upd(g, m, v, p)
+        ps.append(p2); ms.append(m2); vs.append(v2)
+    return (jax.tree.unflatten(treedef, ps),
+            AdamState(jax.tree.unflatten(treedef, ms),
+                      jax.tree.unflatten(treedef, vs), t))
+
+
+# --- ZeRO-1 flat-shard form -------------------------------------------------
+
+class ZeroState(NamedTuple):
+    flat_param: jax.Array    # f32 master shard (padded_size / intra,)
+    mu: jax.Array
+    nu: jax.Array
+    step: jax.Array
+
+
+def zero_init_from_flatparam(flat_shard: jax.Array) -> ZeroState:
+    return ZeroState(flat_shard.astype(jnp.float32),
+                     jnp.zeros_like(flat_shard, dtype=jnp.float32),
+                     jnp.zeros_like(flat_shard, dtype=jnp.float32),
+                     jnp.zeros((), jnp.int32))
+
+
+def zero_update(grad_shard: jax.Array, st: ZeroState, cfg: OptConfig,
+                scale: jax.Array | float = 1.0) -> ZeroState:
+    t = st.step + 1
+    lr = lr_at(cfg, st.step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** t.astype(jnp.float32)
+    c2 = 1.0 - b2 ** t.astype(jnp.float32)
+    g = grad_shard.astype(jnp.float32) * scale
+    m2 = b1 * st.mu + (1 - b1) * g
+    v2 = b2 * st.nu + (1 - b2) * g * g
+    step = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+    p2 = st.flat_param - lr * (step + cfg.weight_decay * st.flat_param)
+    return ZeroState(p2, m2, v2, t)

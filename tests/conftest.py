@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# exactly 1 device; multi-device tests spawn subprocesses (mdscripts/).
+import pathlib
+import sys
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

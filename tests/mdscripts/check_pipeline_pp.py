@@ -1,0 +1,96 @@
+"""PP-over-pod validation: a 2-stage GPipe MLP over the pod axis must
+reproduce the single-device forward AND gradients exactly (8 virtual
+devices; pod=2, data=2, model=2 — TP stays intra-pod)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import functools  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.parallel.pipeline import gpipe_apply, pp_loss_mask  # noqa: E402
+from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp  # noqa: E402
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rt = Runtime(tp_axis="model", dp_axis="data", pod_axis="pod", tp_size=2)
+
+L, D, FF = 4, 16, 32       # 4 layers -> 2 per stage
+M, Bm, S = 4, 2, 8         # 4 microbatches
+
+rng = np.random.default_rng(0)
+Ws1 = jnp.asarray(rng.normal(size=(L, D, FF)) * 0.3, jnp.float32)
+Ws2 = jnp.asarray(rng.normal(size=(L, FF, D)) * 0.3, jnp.float32)
+X = jnp.asarray(rng.normal(size=(M, Bm * 2, S, D)), jnp.float32)  # data-sharded
+Y = jnp.asarray(rng.normal(size=(M, Bm * 2, S, D)), jnp.float32)
+
+
+def layer(x, w1, w2, tp_axis):
+    # Megatron pattern: col-parallel w1, row-parallel w2 with the
+    # custom-vjp entry/exit markers carrying the TP grad semantics
+    xi = copy_to_tp(x, tp_axis)
+    h = jnp.tanh(xi @ w1)
+    out = reduce_from_tp(h @ w2, tp_axis)
+    return x + out
+
+
+def ref_loss(ws1, ws2, x, y):
+    def apply_all(xm):
+        for i in range(L):
+            xm = layer(xm, ws1[i], ws2[i], None)
+        return xm
+    outs = jax.vmap(apply_all)(x)
+    return jnp.mean((outs - y) ** 2)
+
+
+def pp_loss(ws1_local, ws2_local, x, y):
+    """Inside shard_map: ws*_local are this pod's L/2 layers (TP-sharded
+    over model); x/y are (M, Bm, S, D) local batch shards."""
+    def stage(xm):
+        for i in range(L // 2):
+            xm = layer(xm, ws1_local[i], ws2_local[i], "model")
+        return xm
+
+    outs = gpipe_apply(stage, x, rt, n_stages=2)
+    per = jnp.mean((outs - y) ** 2)
+    loss = pp_loss_mask(per, rt, n_stages=2)
+    # psum-fwd/identity-bwd mean over data (raw pmean over-counts in bwd)
+    return reduce_from_tp(loss, "data") / 2.0
+
+
+def pp_step(ws1, ws2, x, y):
+    (loss, grads) = jax.value_and_grad(pp_loss, argnums=(0, 1))(ws1, ws2, x, y)
+    # explicit DP gradient sync over data (the train step's job)
+    grads = jax.tree.map(lambda g: lax.psum(g, "data"), grads)
+    return loss, grads
+
+
+pp = jax.jit(jax.shard_map(
+    pp_step, mesh=mesh,
+    in_specs=(P("pod", None, "model"), P("pod", "model", None),
+              P(None, "data"), P(None, "data")),
+    out_specs=(P(), (P("pod", None, "model"), P("pod", "model", None))),
+    check_vma=False))
+
+loss_pp, (g1, g2) = pp(Ws1, Ws2, X, Y)
+loss_ref, (g1_ref, g2_ref) = jax.value_and_grad(ref_loss, argnums=(0, 1))(
+    Ws1, Ws2, X, Y)
+
+np.testing.assert_allclose(float(loss_pp), float(loss_ref), rtol=1e-5)
+print(f"OK pp loss == ref ({float(loss_pp):.6f})")
+np.testing.assert_allclose(np.asarray(g1), np.asarray(g1_ref),
+                           rtol=2e-4, atol=2e-5)
+np.testing.assert_allclose(np.asarray(g2), np.asarray(g2_ref),
+                           rtol=2e-4, atol=2e-5)
+print("OK pp gradients == ref for both stages (through the DCN handoffs)")
+
+# the handoff really is pod-axis traffic: check the HLO
+txt = pp.lower(Ws1, Ws2, X, Y).compile().as_text()
+assert "collective-permute" in txt
+print("OK stage handoff lowers to collective-permute (DCN SendRecv)")
+print("ALL-OK")

@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+properties (interpret=True executes the kernel body on CPU)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _qkv(B, Sq, Skv, H, K, dh, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, dh)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Skv, K, dh)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Skv, K, dh)), dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # (B, Sq, Skv, H, K, dh, causal, window, dtype, tol)
+    (2, 256, 256, 4, 2, 64, True, None, jnp.float32, 2e-3),
+    (1, 128, 384, 4, 4, 128, True, None, jnp.float32, 2e-3),
+    (2, 256, 256, 8, 2, 64, True, 96, jnp.float32, 2e-3),
+    (1, 192, 192, 2, 1, 80, False, None, jnp.float32, 2e-3),
+    (1, 256, 256, 4, 1, 128, True, None, jnp.bfloat16, 3e-2),
+    (2, 130, 130, 2, 2, 64, True, 64, jnp.float32, 2e-3),   # ragged blocks
+    (1, 512, 512, 4, 2, 128, True, 128, jnp.bfloat16, 3e-2),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, Sq, Skv, H, K, dh, causal, window, dtype, tol = case
+    q, k, v = _qkv(B, Sq, Skv, H, K, dh, dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < tol, err
+
+
+SSD_CASES = [
+    # (b, s, h, p, g, n, chunk, dtype, tol)
+    (2, 256, 4, 32, 1, 64, 64, jnp.float32, 2e-3),
+    (1, 128, 2, 64, 2, 32, 32, jnp.float32, 2e-3),
+    (1, 256, 8, 64, 1, 128, 128, jnp.float32, 5e-3),
+    (2, 128, 4, 32, 1, 64, 64, jnp.bfloat16, 8e-2),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_vs_oracle(case):
+    b, s, h, p, g, n, chunk, dtype, tol = case
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, s, g, n)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(b, s, g, n)), dtype)
+    y1, h1 = ops.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y0, h0 = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    assert float(jnp.max(jnp.abs(y1.astype(jnp.float32)
+                                 - y0.astype(jnp.float32)))) < tol
+    assert float(jnp.max(jnp.abs(h1 - h0))) < tol
+
+
+def test_ssd_chunked_matches_sequential_scan():
+    """The chunked algorithm equals a literal per-token recurrence."""
+    b, s, h, p, g, n = 1, 64, 2, 16, 1, 32
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.05, 0.3, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(b, s, g, n)), jnp.float32)
+    y_ref, h_ref = ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y_t, state = ref.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                         Bm[:, t], Cm[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(state),
+                               rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(n=st.integers(1, 9000),
+                  scale=st.floats(1e-3, 1e3))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quant_roundtrip_error_bound(n, scale):
+    """|x - deq(q(x))| <= amax/127/2 + eps per block (property)."""
+    x = jnp.asarray(RNG.normal(size=(n,)) * scale, jnp.float32)
+    q, s, sz = ops.quant_int8(x, interpret=True)
+    back = ops.dequant_int8(q, s, sz, x.shape)
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 * 0.51 + 1e-6
+    assert float(jnp.max(jnp.abs(back - x))) <= bound * 1.05
+
+
+def test_quant_matches_ref_blocks():
+    x = jnp.asarray(RNG.normal(size=(4096,)), jnp.float32)
+    q1, s1, _ = ops.quant_int8(x, interpret=True)
+    q0, s0 = ref.quant_int8_block(x)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q0))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), rtol=1e-6)
+
+
+def test_causal_conv_matches_decode_steps():
+    b, s, ch, w = 2, 16, 6, 4
+    x = jnp.asarray(RNG.normal(size=(b, s, ch)), jnp.float32)
+    wgt = jnp.asarray(RNG.normal(size=(ch, w)), jnp.float32)
+    bias = jnp.asarray(RNG.normal(size=(ch,)), jnp.float32)
+    full = ref.causal_conv1d(x, wgt, bias)
+    # stepwise with history buffer
+    hist = jnp.zeros((b, w - 1, ch))
+    outs = []
+    for t in range(s):
+        window = jnp.concatenate([hist, x[:, t:t + 1]], axis=1)
+        outs.append(jnp.einsum("bwc,cw->bc", window, wgt) + bias)
+        hist = window[:, 1:]
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=1e-5, atol=1e-5)

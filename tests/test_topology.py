@@ -1,0 +1,122 @@
+"""Topology abstraction + cost model unit & property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import cost_model, topology
+from repro.core.topology import Cluster, HetTopology, proportional_split
+
+
+def test_paper_testbed_structure():
+    topo = topology.paper_testbed()
+    assert topo.n_clusters == 4
+    assert topo.n_ranks == 4 * 8 + 2 * 16 + 2 * 8 + 4 * 8
+    # border ranks: one per NIC
+    nv = topo.clusters[0]
+    assert nv.n_border == nv.n_nodes * nv.nics_per_node
+    v1 = topo.clusters[1]
+    assert v1.n_border == 2  # 1 NIC per 16-dev node
+
+
+def test_cluster_of_rank_roundtrip():
+    topo = topology.paper_testbed()
+    off = 0
+    for ci, c in enumerate(topo.clusters):
+        assert topo.cluster_of_rank(off) == (ci, 0)
+        assert topo.cluster_of_rank(off + c.n_ranks - 1) == (ci, c.n_ranks - 1)
+        off += c.n_ranks
+    with pytest.raises(ValueError):
+        topo.cluster_of_rank(topo.n_ranks)
+
+
+def test_balanced_subgroups_bandwidth():
+    topo = topology.paper_testbed()
+    bal = topo.balanced_subgroups()
+    target = topo.bottleneck_cross_Bps()
+    for c in bal.clusters:
+        # splits are node-granular: a cluster can't go below one node's
+        # aggregate NIC bandwidth
+        node_bw = c.nics_per_node * c.nic_Bps
+        assert c.cross_Bps <= max(2.1 * target, node_bw)
+    assert bal.n_ranks == topo.n_ranks  # no ranks lost
+    assert bal.n_clusters >= topo.n_clusters  # only ever subdivides
+
+
+@hypothesis.given(
+    total=st.integers(0, 10 ** 9),
+    bws=st.lists(st.floats(1.0, 1e12), min_size=1, max_size=16),
+    gran=st.sampled_from([1, 256, 4096]))
+def test_proportional_split_properties(total, bws, gran):
+    parts = proportional_split(total, bws, granularity=gran)
+    assert sum(parts) == total
+    assert all(p >= 0 for p in parts)
+    # no rank gets more than its fair share + one granule per refill round
+    tot_bw = sum(bws)
+    for p, bw in zip(parts, bws):
+        assert p <= total * (bw / tot_bw) + gran * (len(bws) + 1)
+
+
+def test_tpu_multipod_all_border():
+    topo = topology.tpu_multipod(2, 256)
+    for c in topo.clusters:
+        assert c.n_border == c.n_ranks  # every chip has a DCN uplink
+
+
+# ---------------------------------------------------------------------------
+# Cost model: Table 7 volumes
+# ---------------------------------------------------------------------------
+
+def test_c2c_volume_table7():
+    topo = topology.tpu_multipod(2, 4)   # C=2, G=8, N=4
+    n = 1000
+    C, G, N = 2, 8, 4
+    send, recv = cost_model.c2c_volume("all_reduce", n, topo, 0)
+    assert send == recv == 2 * n * (C - 1) // C
+    send, recv = cost_model.c2c_volume("all_gather", n, topo, 0)
+    assert recv == (G - N) * n
+    send, recv = cost_model.c2c_volume("broadcast", n, topo, 0, root_cluster=0)
+    assert send == n and recv == 0
+    send, recv = cost_model.c2c_volume("broadcast", n, topo, 1, root_cluster=0)
+    assert send == 0 and recv == n
+    send, recv = cost_model.c2c_volume("all_to_all", n, topo, 1)
+    assert send == recv == (G - N) * n
+
+
+def test_allreduce_hier_beats_host_forwarding():
+    topo = topology.paper_testbed()
+    for coll in ["all_reduce", "all_gather", "reduce_scatter"]:
+        for nbytes in [1 << 20, 64 << 20, 1 << 30]:
+            hier = cost_model.estimate_hier_collective(topo, coll, nbytes)
+            host = cost_model.flat_host_forwarding_time(topo, coll, nbytes)
+            assert hier.pipelined_s < host, (coll, nbytes)
+
+
+def test_pipelined_no_worse_than_sequential():
+    topo = topology.tpu_multipod(2)
+    for k in [1, 2, 4, 8, 16]:
+        est = cost_model.estimate_hier_collective(topo, "all_reduce",
+                                                  64 << 20, n_chunks=k)
+        assert est.pipelined_s <= est.sequential_s * 1.001
+
+
+def test_optimal_chunks_improves():
+    topo = topology.paper_testbed()
+    k = cost_model.optimal_chunks(topo, "all_reduce", 256 << 20)
+    t1 = cost_model.estimate_hier_collective(topo, "all_reduce", 256 << 20,
+                                             1).pipelined_s
+    tk = cost_model.estimate_hier_collective(topo, "all_reduce", 256 << 20,
+                                             k).pipelined_s
+    assert tk <= t1
+
+
+def test_p2p_mechanism_ordering():
+    """native >= hetccl >> host for large transfers (Fig. 11)."""
+    topo = topology.paper_testbed()
+    src, dst = topo.clusters[0], topo.clusters[3]
+    n = 2 << 30
+    t_het = cost_model.p2p_time(src, dst, n, "hetccl")
+    t_host = cost_model.p2p_time(src, dst, n, "host")
+    assert t_host > 3 * t_het  # paper: >6x bandwidth; conservative 3x
+    t_native = cost_model.p2p_time(src, src, n, "native")
+    assert t_native <= t_het * 1.2

@@ -1,0 +1,103 @@
+"""Discrete-event transport simulator vs the paper's claims + the
+closed-form cost model."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import cost_model, topology, transport_sim
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return topology.paper_testbed()
+
+
+def test_fig3_memcpy_ratio(topo):
+    """Fig. 3: d2h+h2d costs >3.8x two d2d copies for 2GB transfers."""
+    nv, v1 = topo.clusters[0], topo.clusters[1]
+    cmp = transport_sim.memcpy_comparison(nv, v1, 2 << 30)
+    assert cmp["ratio"] >= 3.8
+
+
+def test_fig11_hetccl_vs_host_bandwidth(topo):
+    """Fig. 11 / abstract: HetCCL >= 6x Gloo bandwidth heterogeneous."""
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    n = 1 << 30
+    het = transport_sim.simulate_p2p(nv, v3, n, "hetccl")
+    host = transport_sim.simulate_p2p(nv, v3, n, "host")
+    assert het.bandwidth_Bps / host.bandwidth_Bps >= 6.0
+
+
+def test_fig11_fraction_of_slowest_hw(topo):
+    """HetCCL achieves >=85% of the slower vendor's wire bandwidth for
+    large messages (paper: up to 91.4%)."""
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    n = 2 << 30
+    het = transport_sim.simulate_p2p(nv, v3, n, "hetccl")
+    wire = min(nv.nic_Bps, v3.nic_Bps)
+    assert het.bandwidth_Bps / wire >= 0.85
+
+
+def test_alpha_beta_regression_matches_closed_form(topo):
+    """The alpha-beta fit over simulated times reproduces the closed-form
+    latency within 2.5x and bandwidth within 15% (R^2-style sanity)."""
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    sizes = [1 << 16, 1 << 20, 8 << 20, 64 << 20, 512 << 20]
+    times = [transport_sim.simulate_p2p(nv, v3, s, "hetccl").time_s
+             for s in sizes]
+    alpha, beta = transport_sim.fit_alpha_beta(sizes, times)
+    wire = min(nv.nic_Bps, v3.nic_Bps)
+    assert 0.5 * wire <= beta <= 1.05 * wire
+    assert alpha < 2.5 * nv.alpha_hetccl_s + 1e-3
+
+
+def test_pipeline_hides_copy_stages(topo):
+    """Chunk pipelining: total time ~= wire time, not the stage sum."""
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    n = 256 << 20
+    tr = transport_sim.simulate_p2p(nv, v3, n, "hetccl")
+    wire = min(nv.nic_Bps, v3.nic_Bps)
+    serial = n / nv.d2d_Bps + n / wire + n / v3.d2d_Bps
+    assert tr.time_s < 0.75 * serial
+    assert tr.time_s >= n / wire * 0.95
+
+
+def test_multinic_scaling(topo):
+    """Fig. 15: c2cCpy bandwidth grows ~proportionally with NICs."""
+    nv = topo.clusters[0]
+    total = 1 << 30
+    times = {k: transport_sim.simulate_c2c_cpy(nv, nv, total, nics_in_use=k)
+             for k in (1, 2, 4, 8)}
+    assert times[2] < times[1] * 0.7
+    assert times[4] < times[2] * 0.7
+    assert times[8] < times[4] * 0.7
+
+
+def test_buffer_pool_backpressure(topo):
+    """A tiny RDMA pool serializes chunks; the default pool pipelines."""
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    n = 64 << 20
+    fast = transport_sim.simulate_p2p(nv, v3, n, "hetccl",
+                                      pool_bytes=64 << 20)
+    tight = transport_sim.simulate_p2p(nv, v3, n, "hetccl",
+                                       pool_bytes=4 << 20)
+    assert fast.time_s <= tight.time_s
+
+
+@hypothesis.given(n=st.integers(1 << 10, 1 << 28))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_sim_time_monotone_in_size(n):
+    topo = topology.paper_testbed()
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    t1 = transport_sim.simulate_p2p(nv, v3, n, "hetccl").time_s
+    t2 = transport_sim.simulate_p2p(nv, v3, n * 2, "hetccl").time_s
+    assert t2 >= t1
+
+
+def test_sim_vs_cost_model_consistency(topo):
+    nv, v3 = topo.clusters[0], topo.clusters[3]
+    for n in [1 << 20, 64 << 20, 1 << 30]:
+        sim = transport_sim.simulate_p2p(nv, v3, n, "hetccl").time_s
+        model = cost_model.p2p_time(nv, v3, n, "hetccl")
+        assert 0.5 <= sim / model <= 2.0, (n, sim, model)
