@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import cost_model, topology, transport_sim
+from repro.core import cost_model, planner, topology, transport_sim
 
 GiB = 1 << 30
 MiB = 1 << 20
@@ -127,6 +127,40 @@ def fig15_multinic():
         t1 = t1 or t
         rows.append((f"fig15_nics{k}", 0.0,
                      f"{total / t / 1e9:.1f}GB/s({t1 / t:.1f}x)"))
+    return rows
+
+
+def fig9_planner_vs_fixed():
+    """Fig. 9 (auto-discovered): the pipelining win, found by the
+    planner instead of hand-tuned.  For each bucket size the planner
+    searches {flat, hier, hier_pipelined} x n_chunks x compression x
+    balanced_subgroups under the cost model (simulator-validated) and
+    is compared against every fixed hand config priced the same way."""
+    topo = topology.paper_testbed()
+    rows = []
+    for n in (1 * MiB, 16 * MiB, 256 * MiB, 1 * GiB):
+        t0 = time.perf_counter_ns()
+        p = planner.plan(topo, [n])
+        dt = (time.perf_counter_ns() - t0) / 1e3
+        b = p.buckets[0]
+        fixed = {
+            "flat": cost_model.flat_host_forwarding_time(topo, "all_reduce", n),
+            "hier": cost_model.estimate_hier_collective(
+                topo, "all_reduce", n).sequential_s,
+            "hier_pipe4": cost_model.estimate_hier_collective(
+                topo, "all_reduce", n, n_chunks=4).pipelined_s,
+        }
+        best_name = min(fixed, key=fixed.get)
+        tag = b.candidate.mode + (f"@{b.candidate.n_chunks}"
+                                  if b.candidate.mode == "hier_pipelined"
+                                  else "")
+        if b.candidate.compression:
+            tag += f"+{b.candidate.compression}"
+        rows.append((f"fig9_auto_{n // MiB}MiB", dt,
+                     f"{tag}:{b.predicted_s*1e3:.2f}ms"
+                     f"(best_fixed:{best_name}"
+                     f"={fixed[best_name]*1e3:.2f}ms,"
+                     f"div{b.divergence*100:.0f}%)"))
     return rows
 
 
@@ -264,12 +298,13 @@ import jax, jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 from repro.core.collectives import CommConfig, hier_psum
+from repro.parallel.sharding import shard_map
 mesh = jax.make_mesh((8,), ("data",))
 cfg = CommConfig(mode="hier", pod_axis=None, intra_axis="data")
 x = jnp.ones((8, 1 << 20), jnp.float32)
-flat = jax.jit(jax.shard_map(lambda v: lax.psum(v, "data"), mesh=mesh,
+flat = jax.jit(shard_map(lambda v: lax.psum(v, "data"), mesh=mesh,
                              in_specs=P("data"), out_specs=P(), check_vma=False))
-hier = jax.jit(jax.shard_map(lambda v: hier_psum(v, cfg), mesh=mesh,
+hier = jax.jit(shard_map(lambda v: hier_psum(v, cfg), mesh=mesh,
                              in_specs=P("data"), out_specs=P(), check_vma=False))
 flat(x).block_until_ready(); hier(x).block_until_ready()
 def t(f):
@@ -291,6 +326,7 @@ print(json.dumps({"flat": t(flat), "hier": t(hier)}))
 
 ALL_FIGURES = [
     ("fig3", fig3_datapath_overhead),
+    ("fig9", fig9_planner_vs_fixed),
     ("fig10", fig10_wrapper_overhead),
     ("fig11", fig11_p2p_bandwidth),
     ("fig12_13", fig12_13_hetero_collectives),

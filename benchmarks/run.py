@@ -7,8 +7,13 @@ verification via HLO, kernel wall-times in interpret mode).
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
+
+# make `python benchmarks/run.py` work from anywhere: the benchmarks
+# package lives next to this file's parent
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def _kernel_microbench():
@@ -48,15 +53,19 @@ def _kernel_microbench():
 def main() -> None:
     from benchmarks import paper_figures
 
+    want = set(sys.argv[1:])  # e.g. `run.py fig11 fig9`; empty = everything
     print("name,us_per_call,derived")
-    for _, fig_fn in paper_figures.ALL_FIGURES:
+    for key, fig_fn in paper_figures.ALL_FIGURES:
+        if want and key not in want:
+            continue
         try:
             for name, us, derived in fig_fn():
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:  # noqa: BLE001
             print(f"{fig_fn.__name__},0,ERROR:{type(e).__name__}:{e}")
-    for name, us, derived in _kernel_microbench():
-        print(f"{name},{us:.1f},{derived}")
+    if not want:
+        for name, us, derived in _kernel_microbench():
+            print(f"{name},{us:.1f},{derived}")
     sys.stdout.flush()
 
 

@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import CommConfig, hier_psum, tpu_multipod
 from repro.core import cost_model
+from repro.parallel.sharding import shard_map
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 grads = jnp.asarray(np.random.default_rng(0).normal(size=(8, 1 << 16)),
@@ -27,7 +28,7 @@ grads = jnp.asarray(np.random.default_rng(0).normal(size=(8, 1 << 16)),
 
 def sync(mode, **kw):
     cfg = CommConfig(mode=mode, pod_axis="pod", intra_axis="data", **kw)
-    fn = jax.jit(jax.shard_map(lambda g: hier_psum(g, cfg), mesh=mesh,
+    fn = jax.jit(shard_map(lambda g: hier_psum(g, cfg), mesh=mesh,
                                in_specs=P(("pod", "data")), out_specs=P(None),
                                check_vma=False))
     return fn(grads)

@@ -23,6 +23,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_test_mesh, runtime_for_mesh
 from repro.models import Model
 from repro.serve import make_kv_transfer, make_serve_steps
+from repro.parallel.sharding import shard_map
 from repro.serve.serve_step import kv_transfer_body
 
 mesh = make_test_mesh()  # (pod=2, data=2, model=2)
@@ -47,7 +48,7 @@ print("prefill done; first sampled token per request:", np.asarray(tok[:, 0]))
 # ring is a swap); globally that's a half-swap permutation.
 moved = transfer(caches)       # pod 0 -> pod 1 (symmetric ring)
 moved_q = transfer_q(caches)   # same, int8 on the wire
-tok_move = jax.jit(jax.shard_map(
+tok_move = jax.jit(shard_map(
     functools.partial(kv_transfer_body, rt=rt), mesh=mesh,
     in_specs=(P(("pod", "data")),), out_specs=P(("pod", "data")),
     check_vma=False))

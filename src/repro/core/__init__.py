@@ -2,8 +2,10 @@
 
 Hierarchical heterogeneous collectives (topology abstraction,
 cluster-level primitives, Algorithm-1 breakdowns, pipelined execution),
-the α–β cost model, DCN-hop compression, and the discrete-event
-transport simulator for the paper's §4.1 mechanism.
+the α–β cost model, DCN-hop compression, the discrete-event transport
+simulator for the paper's §4.1 mechanism, and the cost-model-driven
+communication planner that turns the two models into per-bucket
+``CommConfig`` decisions (DESIGN.md §6).
 """
 
 from .collectives import (  # noqa: F401
@@ -15,8 +17,15 @@ from .collectives import (  # noqa: F401
     hier_psum_scatter,
     tree_hier_psum,
     tree_hier_psum_mean,
+    resolve_config,
     tree_hier_psum_scatter,
     tree_hier_unscatter,
+)
+from .planner import (  # noqa: F401
+    BucketPlan,
+    CommPlan,
+    plan,
+    plan_for_param_bytes,
 )
 from .topology import (  # noqa: F401
     Cluster,

@@ -53,6 +53,17 @@ class CommConfig:
         return ((self.pod_axis,) if self.pod_axis else ()) + (self.intra_axis,)
 
 
+def resolve_config(cfg, nbytes: int) -> CommConfig:
+    """Per-bucket planner support: every collective entry point accepts
+    either a plain ``CommConfig`` (one schedule for everything) or any
+    object with a ``config_for(nbytes) -> CommConfig`` method — in
+    practice a ``planner.CommPlan`` — which picks the schedule by the
+    bucket's local payload size.  Duck-typed so core.collectives never
+    imports core.planner (which imports this module)."""
+    fn = getattr(cfg, "config_for", None)
+    return cfg if fn is None else fn(int(nbytes))
+
+
 def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     pad = (-x.size) % multiple
     if pad:
@@ -78,6 +89,7 @@ def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
 
     DCN cost per chip: 2·(x.nbytes/intra_size)·(P-1)/P — an intra_size×
     reduction versus the flat single all-reduce."""
+    cfg = resolve_config(cfg, x.nbytes)
     if cfg.mode == "flat":
         return lax.psum(x, cfg.dp_axes)
     intra = cfg.intra_axis
@@ -99,6 +111,7 @@ def hier_psum_scatter(x: jax.Array, cfg: CommConfig) -> jax.Array:
     """ReduceScatterH over the intra axis + c2cRed over pods: returns the
     per-device 1/intra_size flat shard, globally summed.  This is the
     ZeRO-1 entry: the end-AllGather is deferred to the param update."""
+    cfg = resolve_config(cfg, x.nbytes)
     intra = cfg.intra_axis
     isize = primitives.axis_size(intra)
     flat, _ = _pad_to(x, isize)
@@ -127,6 +140,7 @@ def hier_all_gather(x: jax.Array, cfg: CommConfig, gather_dim: int = 0) -> jax.A
     """Gather shards over (pod, intra): pod-ring the *raw* shard first
     (one copy crosses DCN, Table-7-optimal), then the intra AllGather
     doubles as the end Bcast."""
+    cfg = resolve_config(cfg, x.nbytes)
     if cfg.mode == "flat" or cfg.pod_axis is None:
         return primitives.hom_all_gather(x, cfg.dp_axes, gather_dim)
     g = gather_dim
@@ -178,7 +192,12 @@ def _unbucket(joined: dict, treedef, meta) -> Any:
 
 
 def tree_hier_psum(tree: Any, cfg: CommConfig) -> Any:
-    """Gradient sync: bucketed AllReduceH over the whole pytree."""
+    """Gradient sync: bucketed AllReduceH over the whole pytree.
+
+    ``cfg`` may be a single ``CommConfig`` or a planner ``CommPlan``:
+    each dtype bucket resolves its own schedule by flat-buffer size
+    (``resolve_config``), so e.g. a small bf16 bucket can ride a
+    compressed sequential hier while the f32 bulk is pipelined."""
     joined, treedef, meta = _bucket(tree)
     out = {dt: hier_psum(buf, cfg) for dt, buf in joined.items()}
     return _unbucket(out, treedef, meta)

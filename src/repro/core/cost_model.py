@@ -11,6 +11,15 @@ count), ``C`` (#clusters), ``G`` (total ranks), ``N`` (ranks in current
 cluster).  The model exposes both *sequential* and *pipelined* times so
 the pipelining win (Fig. 9) can be quantified, and an optimal chunk
 count for the pipelined ring.
+
+Unit conventions, used consistently by every function in this module
+(and by ``transport_sim`` and ``planner``):
+
+  * payload / volume arguments (``nbytes``, ``n``, ``shard_bytes``):
+    **bytes** — always per-rank unless the name says otherwise;
+  * bandwidths (anything ``*_Bps`` or returned by ``ring_rank_bw`` /
+    ``bandwidth``): **bytes per second**;
+  * latencies/α and all returned times: **seconds**.
 """
 
 from __future__ import annotations
@@ -28,7 +37,11 @@ from .topology import Cluster, HetTopology
 def c2c_volume(coll: str, n: int, topo: HetTopology, cluster_idx: int,
                root_cluster: int = 0) -> tuple[int, int]:
     """(send_bytes, recv_bytes) crossing this cluster's border for one
-    global collective with per-rank payload ``n`` bytes (Table 7)."""
+    global collective with per-rank payload ``n`` bytes (Table 7).
+
+    Both returned values are aggregate bytes over all of the cluster's
+    border links for the whole collective — divide by ``Cluster.
+    cross_Bps`` (bytes/s) for the drain time of that cluster."""
     C = topo.n_clusters
     G = topo.n_ranks
     N = topo.clusters[cluster_idx].n_ranks
@@ -63,9 +76,9 @@ def c2c_volume(coll: str, n: int, topo: HetTopology, cluster_idx: int,
 # ---------------------------------------------------------------------------
 
 def ring_rank_bw(c: Cluster) -> float:
-    """Effective per-rank ring bandwidth of the homogeneous collective:
-    the scale-up fabric inside a node, but bounded by each rank's share
-    of the node's NICs once the ring crosses nodes."""
+    """Effective per-rank ring bandwidth (bytes/s) of the homogeneous
+    collective: the scale-up fabric inside a node, but bounded by each
+    rank's share of the node's NICs once the ring crosses nodes."""
     if c.n_nodes <= 1:
         return c.intra_Bps
     nic_share = c.nics_per_node * c.nic_Bps / c.devs_per_node
@@ -102,6 +115,14 @@ def ring_reduce_scatter_time(c: Cluster, nbytes: float, alpha: float | None = No
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveEstimate:
+    """Priced 3-phase breakdown of one hierarchical collective.
+
+    ``start_s`` / ``c2c_s`` / ``end_s`` are the full-payload times
+    (seconds) of the intra start phase, the synchronous cross-cluster
+    exchange, and the intra end phase; ``n_chunks`` is the chunk count
+    the phases would be split into when pipelined.
+    """
+
     start_s: float
     c2c_s: float
     end_s: float
@@ -109,13 +130,28 @@ class CollectiveEstimate:
 
     @property
     def sequential_s(self) -> float:
+        """Phases executed back to back (seconds): start + c2c + end."""
         return self.start_s + self.c2c_s + self.end_s
 
     @property
     def pipelined_s(self) -> float:
-        """Perfect chunked overlap of the three phases (Fig. 9): the
-        pipeline drains at the slowest stage, plus fill/flush of the
-        other stages' first/last chunk."""
+        """Perfect chunked overlap of the three phases (Fig. 9).
+
+        With the payload in ``k`` chunks, the steady state drains at the
+        bottleneck stage while the other stages hide behind it, and the
+        pipeline additionally pays fill/flush: one chunk traversing all
+        three stages minus the bottleneck's share already counted.
+
+            pipelined = bott + max(0, sum(stages)/k - bott/k)
+
+        Worked example — stages (start, c2c, end) = (3 ms, 6 ms, 3 ms),
+        k = 4: bottleneck 6 ms; one chunk through the whole pipe is
+        (3+6+3)/4 = 3 ms, of which 6/4 = 1.5 ms is the bottleneck's own
+        chunk (already inside the 6 ms), so fill/flush adds 1.5 ms:
+        7.5 ms total vs 12 ms sequential — a 1.6× win.  As k→∞ the
+        time approaches the bottleneck stage alone; small k leaves the
+        fill term, and k=1 degenerates to ``sequential_s``.
+        """
         k = max(1, self.n_chunks)
         stages = (self.start_s, self.c2c_s, self.end_s)
         bott = max(stages)
@@ -123,15 +159,19 @@ class CollectiveEstimate:
         return bott + max(0.0, fill - bott / k)
 
     def bandwidth(self, nbytes: float, pipelined: bool = True) -> float:
+        """Effective collective bandwidth (bytes/s) for a per-rank
+        payload of ``nbytes`` bytes."""
         t = self.pipelined_s if pipelined else self.sequential_s
         return nbytes / t if t > 0 else float("inf")
 
 
 def c2c_step_time(topo: HetTopology, coll: str, n: int, alpha: float,
                   n_chunks: int = 1) -> float:
-    """Time for the synchronous C2C exchange: each cluster drains its
-    Table-7 volume through its aggregate NIC bandwidth; the step
-    completes when the slowest cluster finishes (paper §4.4)."""
+    """Time (seconds) for the synchronous C2C exchange: each cluster
+    drains its Table-7 volume (bytes) through its aggregate NIC
+    bandwidth (bytes/s); the step completes when the slowest cluster
+    finishes (paper §4.4).  ``alpha`` (seconds) is charged once per
+    chunk — pipelining trades α for overlap."""
     t = 0.0
     for ci, c in enumerate(topo.clusters):
         send, recv = c2c_volume(coll, n, topo, ci)
@@ -144,7 +184,10 @@ def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
                              n_chunks: int = 1,
                              hetccl_alpha: float | None = None) -> CollectiveEstimate:
     """Price Algorithm 1 for collective ``coll`` with per-rank payload
-    ``nbytes_per_rank`` using the 3-phase breakdown of Table 7."""
+    ``nbytes_per_rank`` bytes using the 3-phase breakdown of Table 7.
+    Returns a ``CollectiveEstimate`` (all phase times in seconds);
+    ``hetccl_alpha`` defaults to the slowest cluster's host-proxy
+    control latency."""
     alpha = (hetccl_alpha if hetccl_alpha is not None
              else max(c.alpha_hetccl_s for c in topo.clusters))
     n = nbytes_per_rank
@@ -185,8 +228,9 @@ def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
 
 
 def flat_host_forwarding_time(topo: HetTopology, coll: str, nbytes_per_rank: int) -> float:
-    """Gloo-style baseline: every byte crossing any boundary pays
-    d2h + host RDMA + h2d, serialized (Fig. 2(b))."""
+    """Gloo-style baseline time (seconds): every byte crossing any
+    boundary pays d2h + host RDMA + h2d, serialized (Fig. 2(b));
+    ``nbytes_per_rank`` in bytes."""
     n = nbytes_per_rank
     t = 0.0
     for ci, c in enumerate(topo.clusters):
@@ -202,8 +246,11 @@ def flat_host_forwarding_time(topo: HetTopology, coll: str, nbytes_per_rank: int
 
 def optimal_chunks(topo: HetTopology, coll: str, nbytes_per_rank: int,
                    max_chunks: int = 64) -> int:
-    """Pick the chunk count minimizing pipelined time: more chunks ->
-    better overlap but more α; standard bandwidth/latency tradeoff."""
+    """Pick the chunk count (power of two ≤ ``max_chunks``) minimizing
+    pipelined time: more chunks -> better overlap but one more α per
+    chunk; standard bandwidth/latency tradeoff.  The planner
+    (``core.planner``) searches this axis jointly with mode and
+    compression instead."""
     best_k, best_t = 1, estimate_hier_collective(topo, coll, nbytes_per_rank, 1).pipelined_s
     k = 2
     while k <= max_chunks:
@@ -220,11 +267,12 @@ def optimal_chunks(topo: HetTopology, coll: str, nbytes_per_rank: int,
 
 def p2p_time(src: Cluster, dst: Cluster, nbytes: float, mechanism: str,
              chunk_bytes: int = 4 << 20) -> float:
-    """SendRecv time between a rank of ``src`` and a rank of ``dst``.
+    """SendRecv time (seconds) between a rank of ``src`` and a rank of
+    ``dst`` for ``nbytes`` bytes.
 
     mechanisms: 'native' (vendor GDR, homogeneous only), 'hetccl'
-    (host-driven device-buffer RDMA, chunk-pipelined), 'host'
-    (CPU-forwarding with bounce buffers).
+    (host-driven device-buffer RDMA, chunk-pipelined at ``chunk_bytes``
+    granularity), 'host' (CPU-forwarding with bounce buffers).
     """
     wire_bw = min(src.nic_Bps, dst.nic_Bps)
     if mechanism == "native":
@@ -246,4 +294,5 @@ def p2p_time(src: Cluster, dst: Cluster, nbytes: float, mechanism: str,
 
 
 def p2p_bandwidth(src: Cluster, dst: Cluster, nbytes: float, mechanism: str) -> float:
+    """Effective SendRecv bandwidth (bytes/s) for an ``nbytes`` transfer."""
     return nbytes / p2p_time(src, dst, nbytes, mechanism)

@@ -1,0 +1,407 @@
+"""Cost-model-driven communication planner (paper §4.4; DESIGN.md §6).
+
+The hierarchical schedule only pays off when the chunk count, the
+pipelining mode, and the balanced-subgroup split are chosen per topology
+and payload size — hand-tuning ``CommConfig`` flags per cell does not
+scale past a handful of shapes.  This module turns the two existing
+models into a decision procedure:
+
+  * the closed-form α–β model (``cost_model.estimate_hier_collective``)
+    *scores* every candidate schedule — cheap enough to enumerate the
+    full search space per gradient bucket;
+  * the discrete-event transport simulator
+    (``transport_sim.simulate_c2c_cpy``) *cross-validates* the winning
+    candidates — a candidate whose modeled C2C time diverges from the
+    event-driven time by more than ``tol`` is refused and the search
+    falls through to the next-best schedule.  This guards against the
+    closed form being trusted exactly where it is least accurate (the
+    α-dominated small-payload regime, where per-chunk WR posting and
+    buffer-pool back-pressure are invisible to α–β).
+
+Search space per bucket (the §4.4 knobs):
+
+    mode         ∈ {flat, hier, hier_pipelined}
+    n_chunks     ∈ {1..max_chunks}           (hier_pipelined only)
+    compression  ∈ {None, bf16, int8}        (DCN hop only)
+    topology     ∈ {as-given, balanced_subgroups()}
+
+The planner returns a ``CommPlan``: one chosen ``CommConfig`` per
+gradient bucket plus the predicted and simulated times that justified
+it.  ``CommPlan`` duck-types as a ``CommConfig`` provider
+(``config_for(nbytes)``), so the collectives layer resolves the right
+schedule per bucket with no import cycle (see
+``collectives.resolve_config``).
+
+Units follow cost_model conventions: payload sizes in **bytes per
+rank**, bandwidths in **bytes/second**, times in **seconds**.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import cost_model, transport_sim
+from .collectives import CommConfig
+from .topology import HetTopology
+
+# Wire-byte ratio of each DCN codec relative to the f32 payload.
+# int8 carries one byte per element plus one f32 scale per 1024-element
+# block (compression._CHUNK): 0.25 + 4/4096 per payload byte.
+_CODEC_WIRE_RATIO = {None: 1.0, "bf16": 0.5, "int8": 0.25 + 1.0 / 1024.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space (topology choice tracked on the plan)."""
+
+    mode: str                      # flat | hier | hier_pipelined
+    n_chunks: int = 1
+    compression: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """The chosen schedule for one gradient bucket.
+
+    ``predicted_c2c_s`` is the closed-form k=1 drain of the schedule's
+    C2C wire volume; ``simulated_c2c_s`` is the event-driven time for
+    the same transfer (same mechanism, same bytes); ``divergence`` is
+    their relative gap.  ``validated`` is False only when *every*
+    candidate's transfer diverged beyond tolerance and the planner fell
+    back to the least-divergent one.
+    """
+
+    nbytes: int                    # per-rank payload, bytes
+    candidate: Candidate
+    predicted_s: float             # full 3-phase time, seconds
+    predicted_c2c_s: float
+    simulated_c2c_s: float
+    validated: bool
+
+    @property
+    def divergence(self) -> float:
+        if self.simulated_c2c_s <= 0.0:
+            return 0.0
+        return abs(self.predicted_c2c_s - self.simulated_c2c_s) / self.simulated_c2c_s
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Per-bucket communication schedule for one topology.
+
+    Duck-types as a per-bucket ``CommConfig`` provider: anything with a
+    ``config_for(nbytes)`` method is accepted by the collectives layer
+    (``collectives.resolve_config``), so a ``CommPlan`` can be passed
+    wherever a ``CommConfig`` is expected by ``tree_hier_psum`` /
+    ``tree_hier_psum_scatter`` and each dtype bucket picks its own
+    schedule by flat-buffer size.
+    """
+
+    topology: HetTopology          # the topology the times were priced on
+    balanced: bool                 # True if balanced_subgroups() won
+    coll: str
+    pod_axis: str | None
+    intra_axis: str
+    buckets: tuple[BucketPlan, ...]
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        """Mirror of CommConfig.dp_axes so a plan can stand in for a
+        config in axis-size bookkeeping (e.g. tree_hier_psum_mean)."""
+        return ((self.pod_axis,) if self.pod_axis else ()) + (self.intra_axis,)
+
+    @property
+    def predicted_step_s(self) -> float:
+        """Sum of per-bucket predicted times (buckets sync sequentially)."""
+        return sum(b.predicted_s for b in self.buckets)
+
+    @property
+    def validated(self) -> bool:
+        return all(b.validated for b in self.buckets)
+
+    def bucket_for(self, nbytes: int) -> BucketPlan:
+        """Nearest planned bucket by log-size distance (gradient buckets
+        arrive at slightly different sizes than planned: padding,
+        dtype-bucket aggregation)."""
+        if not self.buckets:
+            raise ValueError("empty plan")
+        n = max(1, int(nbytes))
+        return min(self.buckets,
+                   key=lambda b: abs(math.log(max(1, b.nbytes)) - math.log(n)))
+
+    def config_for(self, nbytes: int) -> CommConfig:
+        b = self.bucket_for(nbytes)
+        c = b.candidate
+        return CommConfig(mode=c.mode, pod_axis=self.pod_axis,
+                          intra_axis=self.intra_axis,
+                          n_chunks=c.n_chunks, compression=c.compression)
+
+    def summary(self) -> dict:
+        """JSON-serializable description (dryrun/hillclimb result logs)."""
+        return {
+            "balanced": self.balanced,
+            "coll": self.coll,
+            "predicted_step_s": self.predicted_step_s,
+            "validated": self.validated,
+            "n_clusters": self.topology.n_clusters,
+            "buckets": [
+                {"nbytes": b.nbytes, "mode": b.candidate.mode,
+                 "n_chunks": b.candidate.n_chunks,
+                 "compression": b.candidate.compression,
+                 "predicted_s": b.predicted_s,
+                 "predicted_c2c_s": b.predicted_c2c_s,
+                 "simulated_c2c_s": b.simulated_c2c_s,
+                 "divergence": round(b.divergence, 4),
+                 "validated": b.validated}
+                for b in self.buckets],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Candidate pricing
+# ---------------------------------------------------------------------------
+
+def _hetccl_alpha(topo: HetTopology) -> float:
+    return max(c.alpha_hetccl_s for c in topo.clusters)
+
+
+def _price_hier(topo: HetTopology, coll: str, nbytes: int,
+                n_chunks: int, compression: str | None,
+                pipelined: bool) -> tuple[float, float]:
+    """(full 3-phase seconds, C2C leg seconds) for a hier/hier_pipelined
+    candidate.  Compression shrinks only the DCN wire bytes — the
+    lossless ICI phases are priced on the full payload."""
+    est = cost_model.estimate_hier_collective(topo, coll, nbytes, n_chunks)
+    ratio = _CODEC_WIRE_RATIO[compression]
+    if ratio != 1.0:
+        wire = max(1, int(nbytes * ratio))
+        c2c = cost_model.c2c_step_time(topo, coll, wire, _hetccl_alpha(topo),
+                                       n_chunks)
+        est = cost_model.CollectiveEstimate(est.start_s, c2c, est.end_s,
+                                            n_chunks)
+    t = est.pipelined_s if pipelined else est.sequential_s
+    return t, est.c2c_s
+
+
+def _price_flat(topo: HetTopology, coll: str, nbytes: int,
+                mechanism: str) -> tuple[float, float]:
+    """(full seconds, C2C leg seconds) for the flat baseline.
+
+    mechanism='host': Gloo-style CPU forwarding (the only flat option
+    across vendors, Fig. 2(b)).  mechanism='native': a flat collective
+    over one uniform fabric (the TPU multi-pod DCN case) — priced as
+    the Table-7 border volume draining through each cluster's NICs at
+    native latency.
+    """
+    if topo.n_clusters <= 1:
+        c = topo.clusters[0]
+        if coll == "all_reduce":
+            t = cost_model.ring_all_reduce_time(c, nbytes)
+        elif coll == "all_gather":
+            t = cost_model.ring_all_gather_time(c, nbytes)
+        else:
+            t = cost_model.ring_reduce_scatter_time(c, nbytes)
+        return t, 0.0
+    if mechanism == "native":
+        alpha = max(c.alpha_native_s for c in topo.clusters)
+        c2c = cost_model.c2c_step_time(topo, coll, nbytes, alpha, 1)
+        est = cost_model.estimate_hier_collective(topo, coll, nbytes, 1)
+        return est.start_s + c2c + est.end_s, c2c
+    full = cost_model.flat_host_forwarding_time(topo, coll, nbytes)
+    # the host C2C leg alone (mirrors flat_host_forwarding_time's inner loop)
+    c2c = 0.0
+    for ci, c in enumerate(topo.clusters):
+        send, recv = cost_model.c2c_volume(coll, nbytes, topo, ci)
+        vol = max(send, recv)
+        c2c = max(c2c, vol / c.cross_Bps + max(c.alpha_host_s, 0.0)
+                  + vol / c.h2d_Bps * 2.0)
+    return full, c2c
+
+
+# ---------------------------------------------------------------------------
+# Event-driven cross-validation
+# ---------------------------------------------------------------------------
+
+def _simulate_c2c(topo: HetTopology, coll: str, wire_nbytes: int,
+                  mechanism: str, chunk_bytes: int,
+                  _cache: dict | None = None) -> float:
+    """Event-driven time of the synchronous C2C step: each cluster
+    drains its Table-7 border volume to its ring successor through
+    ``simulate_c2c_cpy``; the step ends when the slowest cluster does
+    (the same completion rule as ``cost_model.c2c_step_time``)."""
+    key = (id(topo), coll, wire_nbytes, mechanism)
+    if _cache is not None and key in _cache:
+        return _cache[key]
+    C = topo.n_clusters
+    t = 0.0
+    for ci, c in enumerate(topo.clusters):
+        send, recv = cost_model.c2c_volume(coll, wire_nbytes, topo, ci)
+        vol = max(send, recv)
+        if vol == 0:
+            continue
+        nxt = topo.clusters[(ci + 1) % C]
+        t = max(t, transport_sim.simulate_c2c_cpy(c, nxt, vol, mechanism,
+                                                  chunk_bytes))
+    if _cache is not None:
+        _cache[key] = t
+    return t
+
+
+# ---------------------------------------------------------------------------
+# The planner
+# ---------------------------------------------------------------------------
+
+def _chunk_candidates(max_chunks: int) -> tuple[int, ...]:
+    """1..max_chunks, thinned to powers of two plus midpoints above 8 —
+    the pipelined-time landscape is unimodal and flat near the optimum
+    (Fig. 9), so the thinning loses nothing measurable."""
+    ks = sorted({k for k in range(1, max_chunks + 1)
+                 if k <= 8 or k % 4 == 0})
+    return tuple(ks)
+
+
+def _bucket_candidates(max_chunks: int,
+                       compressions) -> list[Candidate]:
+    out = [Candidate("flat")]
+    for comp in compressions:
+        out.append(Candidate("hier", 1, comp))
+        for k in _chunk_candidates(max_chunks):
+            out.append(Candidate("hier_pipelined", k, comp))
+    return out
+
+
+def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
+                max_chunks: int = 32,
+                compressions=(None, "bf16", "int8"),
+                tol: float = 0.25,
+                flat_mechanism: str = "host",
+                chunk_bytes: int = 4 << 20,
+                _sim_cache: dict | None = None) -> BucketPlan:
+    """Choose the best validated schedule for one bucket on one topology.
+
+    Candidates are ranked by predicted time, then cross-validated
+    cheapest-first against the event simulator; the first candidate
+    whose C2C leg agrees within ``tol`` wins.  If none agrees (e.g. an
+    α-dominated tiny bucket), the least-divergent candidate is returned
+    with ``validated=False`` so callers can see the model was out of
+    its depth.
+    """
+    def transfer_leg(cand: Candidate) -> tuple[str, int]:
+        """(mechanism, wire bytes) of the candidate's C2C transfer —
+        the quantity the event simulator can actually check.  Validation
+        is schedule-independent: it prices the k=1 drain of the same
+        volume, so the α–β *transfer* model is what gets cross-checked,
+        not the phase-pipelining α bookkeeping (which the byte-chunked
+        simulator has no notion of)."""
+        if cand.mode == "flat":
+            return ("native" if flat_mechanism == "native" else "host",
+                    nbytes)
+        return "hetccl", max(1, int(nbytes * _CODEC_WIRE_RATIO[cand.compression]))
+
+    def model_leg(mech: str, wire: int) -> float:
+        if mech == "host":
+            return _price_flat(topo, coll, wire, "host")[1]
+        alpha = (max(c.alpha_native_s for c in topo.clusters)
+                 if mech == "native" else _hetccl_alpha(topo))
+        return cost_model.c2c_step_time(topo, coll, wire, alpha, 1)
+
+    priced: list[tuple[float, Candidate]] = []
+    for cand in _bucket_candidates(max_chunks, compressions):
+        if cand.mode == "flat":
+            t, _ = _price_flat(topo, coll, nbytes, flat_mechanism)
+        else:
+            t, _ = _price_hier(topo, coll, nbytes, cand.n_chunks,
+                               cand.compression,
+                               pipelined=cand.mode == "hier_pipelined")
+        priced.append((t, cand))
+    priced.sort(key=lambda x: x[0])
+
+    fallback: BucketPlan | None = None
+    for t, cand in priced:
+        mech, wire = transfer_leg(cand)
+        c2c = model_leg(mech, wire)
+        sim = _simulate_c2c(topo, coll, wire, mech, chunk_bytes, _sim_cache)
+        bp = BucketPlan(nbytes, cand, t, c2c, sim,
+                        validated=(sim <= 0.0
+                                   or abs(c2c - sim) / sim <= tol))
+        if bp.validated:
+            return bp
+        if fallback is None or bp.divergence < fallback.divergence:
+            fallback = bp
+    assert fallback is not None
+    return fallback
+
+
+def plan(topo: HetTopology, bucket_sizes, *,
+         coll: str = "all_reduce",
+         pod_axis: str | None = "pod", intra_axis: str = "data",
+         max_chunks: int = 32,
+         compressions=(None, "bf16", "int8"),
+         tol: float = 0.25,
+         flat_mechanism: str = "host",
+         try_balanced: bool = True,
+         chunk_bytes: int = 4 << 20) -> CommPlan:
+    """Plan the communication schedule for a list of gradient buckets.
+
+    Arguments:
+      topo: the physical heterogeneous topology.
+      bucket_sizes: per-rank payload of each gradient bucket, in bytes.
+      coll: the global collective the buckets ride ('all_reduce' for DP
+        gradient sync, 'reduce_scatter' for the ZeRO-1 path).
+      compressions: DCN codecs the caller is willing to accept; pass
+        ``(None,)`` to forbid lossy wire formats, ``(None, 'bf16')`` to
+        stay effectively lossless for bf16-scaled gradients.
+      tol: maximum relative divergence between the closed-form and the
+        event-driven C2C time before a candidate is refused.
+      flat_mechanism: how the flat baseline crosses clusters — 'host'
+        (Gloo CPU forwarding; the only option across vendors) or
+        'native' (one uniform fabric, e.g. TPU DCN).
+      try_balanced: also price every bucket on
+        ``topo.balanced_subgroups()`` and keep whichever topology gives
+        the lower total predicted step time (§4.4).  NOTE: the balanced
+        topology is *advisory* — ``config_for`` emits plain
+        ``CommConfig``s on the caller's mesh axes, which cannot
+        subdivide pods, so a balanced-won plan's predicted times
+        describe the recommended re-grouping, not what the unmodified
+        mesh will run.  Launchers that execute the plan pass
+        ``try_balanced=False``; analysis/benchmark callers keep it on.
+
+    Returns a ``CommPlan``; see class docstring for how it plugs into
+    the collectives layer.
+    """
+    sizes = [int(s) for s in bucket_sizes]
+    if not sizes:
+        raise ValueError("bucket_sizes must be non-empty")
+    topologies = [(topo, False)]
+    if try_balanced:
+        bal = topo.balanced_subgroups()
+        if bal.n_clusters != topo.n_clusters:
+            topologies.append((bal, True))
+
+    best: CommPlan | None = None
+    sim_cache: dict = {}
+    for t, balanced in topologies:
+        buckets = tuple(
+            plan_bucket(t, coll, n, max_chunks=max_chunks,
+                        compressions=compressions, tol=tol,
+                        flat_mechanism=flat_mechanism,
+                        chunk_bytes=chunk_bytes, _sim_cache=sim_cache)
+            for n in sizes)
+        cand = CommPlan(t, balanced, coll, pod_axis, intra_axis, buckets)
+        # prefer fully validated plans; break ties on predicted time
+        if (best is None
+                or (cand.validated, -cand.predicted_step_s)
+                > (best.validated, -best.predicted_step_s)):
+            best = cand
+    assert best is not None
+    return best
+
+
+def plan_for_param_bytes(topo: HetTopology, total_grad_bytes: int, *,
+                         n_buckets: int = 4, **kw) -> CommPlan:
+    """Convenience wrapper for launchers: split one flat gradient volume
+    into ``n_buckets`` equal buckets (the dtype-bucketed tree sync has
+    one bucket per dtype, but launchers usually know only the total)."""
+    per = max(1, total_grad_bytes // max(1, n_buckets))
+    return plan(topo, [per] * max(1, n_buckets), **kw)

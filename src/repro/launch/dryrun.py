@@ -61,12 +61,46 @@ def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return 2.0 * n * shape.global_batch  # one token per request
 
 
+def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
+              allow_int8: bool = False):
+    """--plan auto: run the cost-model planner for this cell's
+    production topology and gradient volume; returns
+    (CommPlan, chosen Candidate).
+
+    The ZeRO-1 gradient sync rides reduce_scatter (no end AllGather in
+    the synced step), so its plan is priced on that collective.  Lossy
+    int8 wire compression must be opted into explicitly (mirrors
+    train.py) — otherwise the auto schedule could "beat" hand configs
+    by adopting a codec the baselines were not allowed to use.
+    try_balanced is off: a balanced-subgroup topology is advisory (the
+    jax mesh cannot subdivide pods), so executable plans price the
+    mesh as it will actually run.
+    """
+    from repro.core import planner, topology
+    from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
+
+    n_pods, _, tp_size = PRODUCTION_MULTI_SHAPE
+    if not multi_pod:
+        n_pods = 1
+    chips_per_pod = (
+        PRODUCTION_MULTI_SHAPE[1] * PRODUCTION_MULTI_SHAPE[2])
+    topo = topology.tpu_multipod(n_pods, chips_per_pod)
+    grad_bytes = max(1, get_config(arch).param_count() * 4 // tp_size)
+    plan = planner.plan(
+        topo, [grad_bytes],
+        coll="reduce_scatter" if comm_mode == "hier_zero1" else "all_reduce",
+        pod_axis="pod" if multi_pod else None, intra_axis="data",
+        compressions=(None, "bf16", "int8") if allow_int8 else (None, "bf16"),
+        flat_mechanism="native", try_balanced=False)
+    return plan, plan.buckets[0].candidate
+
+
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                comm_mode: str = "fsdp", sp: bool = False,
                use_pallas: bool = False, n_chunks: int = 4,
                compression: str | None = None,
                capacity_factor: float = 1.25,
-               remat_policy: str = "none"):
+               remat_policy: str = "none", plan=None):
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     ok, why = cell_applicable(cfg, shape)
@@ -96,7 +130,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     if is_train:
         tcfg = TrainConfig(comm_mode=comm_mode, n_chunks=n_chunks,
-                           dcn_compression=compression)
+                           dcn_compression=compression, plan=plan)
         build, _ = make_train_step(model, tcfg, mesh=mesh, donate=False)
         step, _ = build(pshape)
         if tcfg.comm_mode == "hier_zero1":
@@ -182,6 +216,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "param_count": cfg.param_count(),
         "active_param_count": cfg.active_param_count(),
     }
+    if plan is not None:
+        result["plan"] = plan.summary()
     return result
 
 
@@ -190,9 +226,12 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--mode", default="fsdp",
+    ap.add_argument("--mode", default=None,
                     choices=["flat", "hier", "hier_pipelined", "hier_zero1",
                              "fsdp"])
+    ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
+                    help="auto: core.planner picks mode/chunks/compression "
+                         "from the cost model instead of the --mode flags")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--chunks", type=int, default=4)
@@ -204,16 +243,31 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    mode, chunks, comp, plan = (args.mode or "fsdp", args.chunks,
+                                args.compression, None)
     try:
+        if args.plan == "auto":
+            plan, chosen = auto_plan(
+                args.arch, multi_pod=args.mesh == "multi",
+                comm_mode=args.mode or "hier",
+                allow_int8=args.compression == "int8")
+            # explicitly-flagged structural modes (fsdp / hier_zero1) keep
+            # their optimizer wiring; the schedule comes from the plan,
+            # resolved per bucket inside the collectives.
+            if args.mode in ("fsdp", "hier_zero1"):
+                mode = args.mode
+            else:
+                mode = chosen.mode if chosen.mode == "flat" else "hier"
+            chunks, comp = chosen.n_chunks, chosen.compression
         res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
-                         comm_mode=args.mode, sp=args.sp,
-                         use_pallas=args.pallas, n_chunks=args.chunks,
-                         compression=args.compression,
+                         comm_mode=mode, sp=args.sp,
+                         use_pallas=args.pallas, n_chunks=chunks,
+                         compression=comp,
                          capacity_factor=args.capacity_factor,
-                         remat_policy=args.remat_policy)
+                         remat_policy=args.remat_policy, plan=plan)
     except Exception as e:  # noqa: BLE001
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
-               "comm_mode": args.mode, "status": "error",
+               "comm_mode": mode, "status": "error",
                "error": f"{type(e).__name__}: {e}",
                "traceback": traceback.format_exc()[-3000:]}
     js = json.dumps(res, indent=1)

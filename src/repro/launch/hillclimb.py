@@ -24,6 +24,12 @@ CELLS = {
         ("it5_fsdp_int8", ["--mode", "fsdp", "--compression", "int8"]),
         ("it6_fsdp_int8_sp", ["--mode", "fsdp", "--compression", "int8",
                               "--sp"]),
+        # planner-chosen schedule: must match or beat the best
+        # hand-enumerated iteration above (core/planner.py searches a
+        # superset of these configs under the same cost model).  Keep
+        # it6's structural flags (fsdp + sp) so the comparison is
+        # schedule-vs-schedule, not structure-vs-structure.
+        ("it7_auto", ["--plan", "auto", "--mode", "fsdp", "--sp"]),
     ],
     ("olmo-1b", "train_4k", "single"): [
         ("it0_base", ["--mode", "hier"]),
@@ -33,6 +39,8 @@ CELLS = {
                     "--sp"]),
         ("it3_zero1", ["--mode", "hier_zero1", "--remat-policy",
                        "save_collectives", "--sp"]),
+        ("it4_auto", ["--plan", "auto", "--mode", "hier_zero1",
+                      "--remat-policy", "save_collectives", "--sp"]),
     ],
     ("qwen3-moe-30b-a3b", "train_4k", "single"): [
         # it1 (EP token dedup, 16x) is a code change: before/after
@@ -42,6 +50,9 @@ CELLS = {
         ("it3_sp", ["--mode", "fsdp", "--capacity-factor", "1.0", "--sp"]),
         ("it4_save_coll", ["--mode", "fsdp", "--capacity-factor", "1.0",
                            "--sp", "--remat-policy", "save_collectives"]),
+        ("it5_auto", ["--plan", "auto", "--mode", "fsdp",
+                      "--capacity-factor", "1.0", "--sp",
+                      "--remat-policy", "save_collectives"]),
     ],
 }
 

@@ -11,8 +11,14 @@ from __future__ import annotations
 import jax
 
 
+# production mesh geometry, shared with planners that must price the
+# production topology without initializing jax devices (dryrun.auto_plan)
+PRODUCTION_MULTI_SHAPE = (2, 16, 16)     # (pod, data, model)
+PRODUCTION_SINGLE_SHAPE = (16, 16)       # (data, model)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape = PRODUCTION_MULTI_SHAPE if multi_pod else PRODUCTION_SINGLE_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

@@ -61,6 +61,24 @@ class Runtime:
 
 
 # ---------------------------------------------------------------------------
+# shard_map version compat
+# ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions: new jax exposes it at the
+    top level with ``check_vma``; 0.4.x only has
+    ``jax.experimental.shard_map.shard_map`` with the same flag named
+    ``check_rep``.  Every shard_map in this repo goes through here."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+# ---------------------------------------------------------------------------
 # TP custom-vjp pairs
 # ---------------------------------------------------------------------------
 

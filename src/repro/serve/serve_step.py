@@ -21,7 +21,7 @@ from repro.core import compression
 from repro.models import Model
 from repro.models.attention import KVCache
 from repro.models.ssm import SSMState
-from repro.parallel.sharding import Runtime
+from repro.parallel.sharding import Runtime, shard_map
 from repro.train.loss import sharded_argmax
 
 
@@ -133,10 +133,10 @@ def make_serve_steps(model: Model, mesh, global_batch: int, seq_len: int):
         return (jax.jit(prefill_body), jax.jit(decode_body), caches_shape)
 
     in_pre = (pspecs, tok_spec) + ((P(baxes),) if cfg.n_enc_layers else ())
-    prefill = jax.jit(jax.shard_map(
+    prefill = jax.jit(shard_map(
         prefill_body, mesh=mesh, in_specs=in_pre,
         out_specs=(tok_spec, cspecs), check_vma=False))
-    decode = jax.jit(jax.shard_map(
+    decode = jax.jit(shard_map(
         decode_body, mesh=mesh, in_specs=(pspecs, tok_spec, cspecs),
         out_specs=(tok_spec, cspecs), check_vma=False), donate_argnums=(2,))
     return prefill, decode, caches_shape
@@ -178,5 +178,5 @@ def make_kv_transfer(model: Model, mesh, caches_shape, global_batch: int,
     baxes = _axes_for_batch(mesh, rt, global_batch)
     cspecs = cache_specs(caches_shape, baxes, rt)
     fn = functools.partial(kv_transfer_body, rt=rt, compress=compress)
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(cspecs,),
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=(cspecs,),
                                  out_specs=cspecs, check_vma=False))

@@ -36,7 +36,7 @@ from repro.core import collectives as coll
 from repro.core.collectives import CommConfig
 from repro.core import compression
 from repro.models.model import Model
-from repro.parallel.sharding import Runtime
+from repro.parallel.sharding import Runtime, shard_map
 from . import loss as loss_lib
 from . import optimizer as opt_lib
 
@@ -46,11 +46,18 @@ class TrainConfig:
     comm_mode: str = "hier"          # flat|hier|hier_pipelined|hier_zero1|fsdp
     dcn_compression: str | None = None  # None|bf16|int8 (pod hop only)
     n_chunks: int = 4                 # pipelined mode
+    # planner.CommPlan: when set, the collectives resolve mode/chunks/
+    # compression per gradient bucket from the plan (--plan auto) and the
+    # hand-picked fields above only steer the optimizer wiring
+    # (hier_zero1/fsdp structure cannot be chosen per bucket).
+    plan: Any = None
     opt: opt_lib.OptConfig = dataclasses.field(default_factory=opt_lib.OptConfig)
     aux_weight: float = 1e-2          # MoE load-balance loss weight
     z_loss: float = 0.0
 
-    def comm_config(self, rt: Runtime) -> CommConfig:
+    def comm_config(self, rt: Runtime):
+        if self.plan is not None:
+            return self.plan
         mode = {"flat": "flat", "hier": "hier",
                 "hier_pipelined": "hier_pipelined",
                 "hier_zero1": "hier", "fsdp": "hier"}[self.comm_mode]
@@ -214,7 +221,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
         metric_spec = {"loss": P(), "grad_norm": P(), "aux": P(),
                        "mean_logp": P()}
 
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(step_body, specs=specs),
             mesh=mesh,
             in_specs=(specs, opt_spec, batch_spec),
@@ -225,7 +232,7 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
         boot = None
         if tcfg.comm_mode == "hier_zero1":
             zspec = P((ccfg.intra_axis, "model") if rt.tp_axis else ccfg.intra_axis)
-            boot = jax.jit(jax.shard_map(
+            boot = jax.jit(shard_map(
                 zero_bootstrap, mesh=mesh, in_specs=(specs,),
                 out_specs=opt_lib.ZeroState(zspec, zspec, zspec, P()),
                 check_vma=False))

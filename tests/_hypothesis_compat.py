@@ -1,0 +1,115 @@
+"""Use real hypothesis when installed, else a minimal deterministic stub.
+
+The container image does not ship hypothesis (and the tier-1 suite must
+not pip-install anything), so property tests import hypothesis through
+this shim:
+
+    from _hypothesis_compat import hypothesis, st
+
+With hypothesis installed this is exactly ``import hypothesis`` /
+``import hypothesis.strategies as st``.  Without it, a small fallback
+runs each property over a fixed number of deterministically seeded
+random examples — far weaker than real hypothesis (no shrinking, no
+edge-case heuristics, no database), but it keeps every property
+executable as a plain seeded fuzz test.  requirements-dev.txt lists the
+real package for development machines and CI.
+"""
+
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import inspect
+    import random
+    import types
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        # mimic hypothesis's bias toward boundary values
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10, **_kw) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        def deco(fn):
+            # hypothesis maps positional @given strategies onto the test's
+            # trailing parameters; anything not covered stays a pytest
+            # fixture, so the wrapper's visible signature must contain
+            # only the uncovered parameters.
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            pos_names = names[len(names) - len(arg_strategies):]
+            covered = set(pos_names) | set(kw_strategies)
+            strategies = dict(zip(pos_names, arg_strategies))
+            strategies.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(**fixture_kw):
+                n = getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    drawn = {k: s.example(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**fixture_kw, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ context
+                        raise AssertionError(
+                            f"stub-hypothesis falsified {fn.__name__} on "
+                            f"example {i}: {drawn}") from e
+
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in covered])
+            return wrapper
+        return deco
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.lists = lists
+
+    hypothesis = types.ModuleType("hypothesis")
+    hypothesis.given = given
+    hypothesis.settings = settings
+    hypothesis.strategies = st
+
+__all__ = ["hypothesis", "st"]

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import collectives, compression, pipelined, primitives  # noqa: E402
 from repro.core.collectives import CommConfig  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 PODS, DATA, MODEL = 2, 2, 2
@@ -27,7 +28,7 @@ NDEV = PODS * DATA * MODEL
 
 
 def run(fn, x, in_spec, out_spec):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_spec,
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_spec,
                                  out_specs=out_spec, check_vma=False))(x)
 
 

@@ -11,6 +11,7 @@ from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.launch import hlo_analysis as ha  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 N = 1024  # elements per shard
@@ -29,7 +30,7 @@ def body(x):
     return out + g[:N]
 
 
-fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(None),
+fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P(None),
                            out_specs=P(None), check_vma=False))
 lowered = fn.lower(jax.ShapeDtypeStruct((N,), jnp.float32))
 compiled = lowered.compile()
@@ -70,7 +71,7 @@ def body2(x):
     return lax.ppermute(x, "pod", [(0, 1), (1, 0)])
 
 
-fn2 = jax.jit(jax.shard_map(body2, mesh=mesh, in_specs=P(None),
+fn2 = jax.jit(shard_map(body2, mesh=mesh, in_specs=P(None),
                             out_specs=P(None), check_vma=False))
 txt2 = fn2.lower(jax.ShapeDtypeStruct((N,), jnp.float32)).compile().as_text()
 costs2 = ha.analyze_module(txt2, 8, pod_size=4)

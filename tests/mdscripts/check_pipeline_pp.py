@@ -15,7 +15,7 @@ from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.parallel.pipeline import gpipe_apply, pp_loss_mask  # noqa: E402
-from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp  # noqa: E402
+from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp, shard_map  # noqa: E402
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 rt = Runtime(tp_axis="model", dp_axis="data", pod_axis="pod", tp_size=2)
@@ -70,7 +70,7 @@ def pp_step(ws1, ws2, x, y):
     return loss, grads
 
 
-pp = jax.jit(jax.shard_map(
+pp = jax.jit(shard_map(
     pp_step, mesh=mesh,
     in_specs=(P("pod", None, "model"), P("pod", "model", None),
               P(None, "data"), P(None, "data")),

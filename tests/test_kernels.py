@@ -1,8 +1,7 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
 properties (interpret=True executes the kernel body on CPU)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

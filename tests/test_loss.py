@@ -1,7 +1,6 @@
 """Sharded cross-entropy vs dense reference (single-device: Vl == V)."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

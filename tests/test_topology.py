@@ -1,7 +1,6 @@
 """Topology abstraction + cost model unit & property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import pytest
 
 from repro.core import cost_model, topology
@@ -55,6 +54,62 @@ def test_proportional_split_properties(total, bws, gran):
     tot_bw = sum(bws)
     for p, bw in zip(parts, bws):
         assert p <= total * (bw / tot_bw) + gran * (len(bws) + 1)
+
+
+def test_proportional_split_zero_bytes():
+    assert proportional_split(0, [1e9, 2e9, 3e9]) == [0, 0, 0]
+    assert proportional_split(0, [5.0], granularity=4096) == [0]
+
+
+def test_proportional_split_single_link():
+    for total in (1, 255, 256, 10 ** 7 + 13):
+        assert proportional_split(total, [7e9], granularity=256) == [total]
+
+
+def test_proportional_split_granularity_remainders():
+    """Quantized split: every part is granule-aligned except for at most
+    one final sub-granule remainder, which lands on the fastest link
+    first; totals are always conserved."""
+    gran = 4096
+    bws = [400e9, 100e9, 200e9]
+    for total in (gran - 1, gran + 1, 10 * gran + 257, 123456789):
+        parts = proportional_split(total, bws, granularity=gran)
+        assert sum(parts) == total
+        assert all(p >= 0 for p in parts)
+        assert sum(1 for p in parts if p % gran) <= 1
+    # the sub-granule crumb goes to the fastest link
+    crumb = proportional_split(7, bws, granularity=gran)
+    assert crumb == [7, 0, 0]
+
+
+def test_balanced_subgroups_invariants():
+    """§4.4 invariants: subdivision never loses ranks, never merges
+    clusters, and every subgroup's cross bandwidth is within tolerance
+    of the bottleneck unless node granularity forbids a finer split
+    (a subgroup can never go below one node's aggregate NIC bw)."""
+    tol = 0.34
+    for topo in (topology.paper_testbed(), topology.tpu_multipod(2, 64)):
+        bal = topo.balanced_subgroups(tol=tol)
+        assert bal.n_ranks == topo.n_ranks
+        assert bal.n_clusters >= topo.n_clusters
+        target = topo.bottleneck_cross_Bps()
+        for c in bal.clusters:
+            node_bw = c.nics_per_node * c.nic_Bps
+            assert c.cross_Bps <= max(target * (1.0 + tol), node_bw)
+        # subdividing preserves per-cluster totals
+        by_prefix: dict[str, int] = {}
+        for c in bal.clusters:
+            by_prefix[c.name.split(".")[0]] = (
+                by_prefix.get(c.name.split(".")[0], 0) + c.n_ranks)
+        for orig in topo.clusters:
+            assert by_prefix[orig.name] == orig.n_ranks
+
+
+def test_balanced_subgroups_already_balanced_is_identity():
+    topo = topology.tpu_multipod(2, 16)   # identical pods: nothing to split
+    bal = topo.balanced_subgroups()
+    assert bal.n_clusters == topo.n_clusters
+    assert [c.name for c in bal.clusters] == [c.name for c in topo.clusters]
 
 
 def test_tpu_multipod_all_border():

@@ -1,8 +1,7 @@
 """Discrete-event transport simulator vs the paper's claims + the
 closed-form cost model."""
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import pytest
 
 from repro.core import cost_model, topology, transport_sim

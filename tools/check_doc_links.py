@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Fail on dangling references to repo-root markdown files.
+
+Source files cite design docs as e.g. ``DESIGN.md §5`` or
+``EXPERIMENTS.md §Perf``; this repo has already shipped citations to
+docs that did not exist.  This check greps the tree for uppercase
+markdown-name tokens (the repo-root doc convention) and fails if the
+named file is missing from the repo root.  Run locally:
+
+    python tools/check_doc_links.py
+
+CI runs it on every push (.github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SCAN_ROOT_MD = True          # root *.md files may cite each other too
+# repo-root doc convention: UPPERCASE names (README.md, DESIGN.md, ...).
+# Lowercase .md tokens (e.g. another repo's docs/foo.md) are not ours.
+MD_REF = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
+
+
+def referenced_docs() -> dict[str, list[str]]:
+    """{doc name: [referencing file:line, ...]} over the scanned tree."""
+    refs: dict[str, list[str]] = {}
+    files: list[pathlib.Path] = []
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if base.is_dir():
+            files += [p for p in base.rglob("*")
+                      if p.suffix in (".py", ".md", ".txt") and p.is_file()]
+    if SCAN_ROOT_MD:
+        files += sorted(ROOT.glob("*.md"))
+    for path in files:
+        try:
+            text = path.read_text(errors="ignore")
+        except OSError:
+            continue
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for name in MD_REF.findall(line):
+                refs.setdefault(name, []).append(
+                    f"{path.relative_to(ROOT)}:{lineno}")
+    return refs
+
+
+def main() -> int:
+    refs = referenced_docs()
+    dangling = {name: where for name, where in refs.items()
+                if not (ROOT / name).is_file()}
+    if dangling:
+        print("dangling repo-root markdown references:")
+        for name, where in sorted(dangling.items()):
+            print(f"  {name} (missing) referenced from:")
+            for w in where[:10]:
+                print(f"    {w}")
+            if len(where) > 10:
+                print(f"    ... and {len(where) - 10} more")
+        return 1
+    print(f"doc-link check OK: {len(refs)} distinct root docs referenced, "
+          "none dangling")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
