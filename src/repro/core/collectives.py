@@ -92,6 +92,10 @@ def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
     cfg = resolve_config(cfg, x.nbytes)
     if cfg.mode == "flat":
         return lax.psum(x, cfg.dp_axes)
+    if cfg.mode == "hier_pipelined" and cfg.pod_axis is None:
+        # Degenerate 1-cluster pipeline: there is no C2C phase to hide,
+        # so the chunk loop would only add α costs.  Plain intra psum.
+        return lax.psum(x, cfg.dp_axes)
     intra = cfg.intra_axis
     isize = primitives.axis_size(intra)
     flat, pad = _pad_to(x.astype(x.dtype), isize)

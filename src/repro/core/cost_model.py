@@ -262,6 +262,35 @@ def optimal_chunks(topo: HetTopology, coll: str, nbytes_per_rank: int,
 
 
 # ---------------------------------------------------------------------------
+# Compute-side roofline (overlap scheduling support)
+# ---------------------------------------------------------------------------
+
+def aggregate_flops(topo: HetTopology, mfu: float = 0.4) -> float:
+    """Deliverable FLOP/s of the whole fleet at the given MFU — the
+    compute-side roofline term used throughout the figure models
+    (fig16/fig17 price compute as flops / (Σ ranks·tflops·MFU))."""
+    return sum(c.n_ranks * c.tflops * 1e12 for c in topo.clusters) * mfu
+
+
+def backward_compute_time(topo: HetTopology, step_flops: float,
+                          mfu: float = 0.4,
+                          backward_frac: float = 2.0 / 3.0) -> float:
+    """Wall time (seconds) of the backward pass on this fleet.
+
+    ``step_flops`` follows the MODEL_FLOPS convention (6·N·D for one
+    training step, ``launch/dryrun.py:model_flops_for``); the backward
+    pass owns 4 of those 6·N·D — ``backward_frac`` defaults to 2/3.
+    This is the compute budget the overlap scheduler
+    (``planner.plan(..., backward_compute_s=...)``) hides gradient
+    communication behind.
+    """
+    agg = aggregate_flops(topo, mfu)
+    if agg <= 0.0 or step_flops <= 0.0:
+        return 0.0
+    return step_flops * backward_frac / agg
+
+
+# ---------------------------------------------------------------------------
 # P2P transport model (paper §6.1.1, Fig. 11): α–β per mechanism
 # ---------------------------------------------------------------------------
 

@@ -37,6 +37,12 @@ def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False) -> jax.Arr
     """
     assert flat.ndim == 1
     intra, pod = cfg.intra_axis, cfg.pod_axis
+    if pod is None:
+        # No C2C phase to pipeline against: the chunk loop would only
+        # add k-1 extra α costs and a scan around what is exactly one
+        # intra-cluster all-reduce.  Fall back to the plain native psum
+        # (== ReduceScatter+AllGather fused by the platform library).
+        return lax.psum(flat, intra)
     isize = primitives.axis_size(intra)
     k = max(1, int(cfg.n_chunks))
     n = flat.size

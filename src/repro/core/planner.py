@@ -32,6 +32,12 @@ it.  ``CommPlan`` duck-types as a ``CommConfig`` provider
 schedule per bucket with no import cycle (see
 ``collectives.resolve_config``).
 
+With ``backward_compute_s`` given, the objective switches from total to
+*exposed* comm time: the readiness-ordered buckets (``core.overlap``)
+are scheduled on a serial comm channel against the backward-compute
+timeline, only the part sticking out past the end of backward counts,
+and the plan carries the resulting ``OverlapReport`` (DESIGN.md §8).
+
 Units follow cost_model conventions: payload sizes in **bytes per
 rank**, bandwidths in **bytes/second**, times in **seconds**.
 """
@@ -87,6 +93,61 @@ class BucketPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class OverlapBucket:
+    """Timeline of one bucket's sync against the backward pass.
+
+    ``ready_s`` is when the backward compute has produced this bucket's
+    gradients; ``start_s``/``end_s`` are the sync's slot on the (serial)
+    comm channel; ``exposed_s`` is this bucket's contribution to the
+    time sticking out past the end of the backward pass."""
+
+    nbytes: int
+    ready_s: float
+    start_s: float
+    end_s: float
+    comm_s: float
+    exposed_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapReport:
+    """Exposed-vs-total accounting for a readiness-ordered bucket
+    schedule overlapped with backward compute (core/overlap.py).
+
+    ``monolithic_comm_s`` prices the alternative the chain must beat:
+    the whole volume synced as one collective (which can never start
+    before backward ends, so its exposure is its full time)."""
+
+    backward_compute_s: float
+    total_comm_s: float
+    exposed_comm_s: float
+    buckets: tuple[OverlapBucket, ...]
+    monolithic_comm_s: float = 0.0
+
+    @property
+    def hidden_frac(self) -> float:
+        if self.total_comm_s <= 0.0:
+            return 0.0
+        # exposed accumulates in a different order than total; clamp the
+        # ±1-ulp noise of the fully-exposed case
+        return max(0.0, 1.0 - self.exposed_comm_s / self.total_comm_s)
+
+    def summary(self) -> dict:
+        return {
+            "backward_compute_s": self.backward_compute_s,
+            "total_comm_s": self.total_comm_s,
+            "exposed_comm_s": self.exposed_comm_s,
+            "monolithic_comm_s": self.monolithic_comm_s,
+            "hidden_frac": round(self.hidden_frac, 4),
+            "buckets": [
+                {"nbytes": b.nbytes, "ready_s": b.ready_s,
+                 "start_s": b.start_s, "end_s": b.end_s,
+                 "comm_s": b.comm_s, "exposed_s": b.exposed_s}
+                for b in self.buckets],
+        }
+
+
+@dataclasses.dataclass(frozen=True)
 class CommPlan:
     """Per-bucket communication schedule for one topology.
 
@@ -96,6 +157,11 @@ class CommPlan:
     wherever a ``CommConfig`` is expected by ``tree_hier_psum`` /
     ``tree_hier_psum_scatter`` and each dtype bucket picks its own
     schedule by flat-buffer size.
+
+    When planned with ``backward_compute_s`` the buckets are in
+    *readiness order* (``bucket_order`` is the execution order over
+    ``buckets``) and ``overlap`` carries the exposed-time report the
+    schedule was optimized for.
     """
 
     topology: HetTopology          # the topology the times were priced on
@@ -104,6 +170,8 @@ class CommPlan:
     pod_axis: str | None
     intra_axis: str
     buckets: tuple[BucketPlan, ...]
+    bucket_order: tuple[int, ...] = ()
+    overlap: OverlapReport | None = None
 
     @property
     def dp_axes(self) -> tuple[str, ...]:
@@ -117,8 +185,32 @@ class CommPlan:
         return sum(b.predicted_s for b in self.buckets)
 
     @property
+    def exposed_comm_s(self) -> float:
+        """Comm time not hidden behind backward compute.  Without an
+        overlap report nothing is hidden — the whole sequential sync is
+        exposed."""
+        if self.overlap is not None:
+            return self.overlap.exposed_comm_s
+        return self.predicted_step_s
+
+    @property
     def validated(self) -> bool:
         return all(b.validated for b in self.buckets)
+
+    def recommended_mode(self) -> str:
+        """The ``TrainConfig.comm_mode`` this plan asks for: the chained
+        bucket executor when its exposed time beats both the sequential
+        bucket sync AND the monolithic single-collective alternative
+        (the chain pays one α set per bucket — with a short backward
+        pass that overhead can exceed what overlapping saves), else the
+        biggest bucket's schedule mode."""
+        if self.overlap is not None and len(self.buckets) > 1:
+            bar = self.overlap.total_comm_s
+            if self.overlap.monolithic_comm_s > 0.0:
+                bar = min(bar, self.overlap.monolithic_comm_s)
+            if self.overlap.exposed_comm_s < bar * (1.0 - 1e-6):
+                return "hier_overlap"
+        return max(self.buckets, key=lambda b: b.nbytes).candidate.mode
 
     def bucket_for(self, nbytes: int) -> BucketPlan:
         """Nearest planned bucket by log-size distance (gradient buckets
@@ -143,6 +235,11 @@ class CommPlan:
             "balanced": self.balanced,
             "coll": self.coll,
             "predicted_step_s": self.predicted_step_s,
+            "exposed_comm_s": self.exposed_comm_s,
+            "recommended_mode": self.recommended_mode(),
+            "bucket_order": list(self.bucket_order),
+            "overlap": (self.overlap.summary()
+                        if self.overlap is not None else None),
             "validated": self.validated,
             "n_clusters": self.topology.n_clusters,
             "buckets": [
@@ -271,41 +368,33 @@ def _bucket_candidates(max_chunks: int,
     return out
 
 
-def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
-                max_chunks: int = 32,
-                compressions=(None, "bf16", "int8"),
-                tol: float = 0.25,
-                flat_mechanism: str = "host",
-                chunk_bytes: int = 4 << 20,
-                _sim_cache: dict | None = None) -> BucketPlan:
-    """Choose the best validated schedule for one bucket on one topology.
+_COMP_RANK = {None: 0, "bf16": 1, "int8": 2}   # wire-codec aggressiveness
 
-    Candidates are ranked by predicted time, then cross-validated
-    cheapest-first against the event simulator; the first candidate
-    whose C2C leg agrees within ``tol`` wins.  If none agrees (e.g. an
-    α-dominated tiny bucket), the least-divergent candidate is returned
-    with ``validated=False`` so callers can see the model was out of
-    its depth.
-    """
-    def transfer_leg(cand: Candidate) -> tuple[str, int]:
-        """(mechanism, wire bytes) of the candidate's C2C transfer —
-        the quantity the event simulator can actually check.  Validation
-        is schedule-independent: it prices the k=1 drain of the same
-        volume, so the α–β *transfer* model is what gets cross-checked,
-        not the phase-pipelining α bookkeeping (which the byte-chunked
-        simulator has no notion of)."""
-        if cand.mode == "flat":
-            return ("native" if flat_mechanism == "native" else "host",
-                    nbytes)
-        return "hetccl", max(1, int(nbytes * _CODEC_WIRE_RATIO[cand.compression]))
 
-    def model_leg(mech: str, wire: int) -> float:
-        if mech == "host":
-            return _price_flat(topo, coll, wire, "host")[1]
-        alpha = (max(c.alpha_native_s for c in topo.clusters)
-                 if mech == "native" else _hetccl_alpha(topo))
-        return cost_model.c2c_step_time(topo, coll, wire, alpha, 1)
+def _transfer_leg(cand: Candidate, nbytes: int,
+                  flat_mechanism: str) -> tuple[str, int]:
+    """(mechanism, wire bytes) of the candidate's C2C transfer — the
+    quantity the event simulator can actually check.  Validation is
+    schedule-independent: it prices the k=1 drain of the same volume,
+    so the α–β *transfer* model is what gets cross-checked, not the
+    phase-pipelining α bookkeeping (which the byte-chunked simulator
+    has no notion of)."""
+    if cand.mode == "flat":
+        return ("native" if flat_mechanism == "native" else "host", nbytes)
+    return "hetccl", max(1, int(nbytes * _CODEC_WIRE_RATIO[cand.compression]))
 
+
+def _model_leg(topo: HetTopology, coll: str, mech: str, wire: int) -> float:
+    if mech == "host":
+        return _price_flat(topo, coll, wire, "host")[1]
+    alpha = (max(c.alpha_native_s for c in topo.clusters)
+             if mech == "native" else _hetccl_alpha(topo))
+    return cost_model.c2c_step_time(topo, coll, wire, alpha, 1)
+
+
+def _price_candidates(topo: HetTopology, coll: str, nbytes: int,
+                      max_chunks: int, compressions,
+                      flat_mechanism: str) -> list[tuple[float, Candidate]]:
     priced: list[tuple[float, Candidate]] = []
     for cand in _bucket_candidates(max_chunks, compressions):
         if cand.mode == "flat":
@@ -315,12 +404,22 @@ def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
                                cand.compression,
                                pipelined=cand.mode == "hier_pipelined")
         priced.append((t, cand))
-    priced.sort(key=lambda x: x[0])
+    return priced
 
+
+def _first_validated(topo: HetTopology, coll: str, nbytes: int,
+                     ranked: list[tuple[float, Candidate]], tol: float,
+                     flat_mechanism: str, chunk_bytes: int,
+                     _sim_cache: dict | None) -> BucketPlan:
+    """Walk candidates in rank order, cross-validating each against the
+    event simulator; the first within ``tol`` wins.  If none agrees
+    (e.g. an α-dominated tiny bucket), the least-divergent candidate is
+    returned with ``validated=False`` so callers can see the model was
+    out of its depth."""
     fallback: BucketPlan | None = None
-    for t, cand in priced:
-        mech, wire = transfer_leg(cand)
-        c2c = model_leg(mech, wire)
+    for t, cand in ranked:
+        mech, wire = _transfer_leg(cand, nbytes, flat_mechanism)
+        c2c = _model_leg(topo, coll, mech, wire)
         sim = _simulate_c2c(topo, coll, wire, mech, chunk_bytes, _sim_cache)
         bp = BucketPlan(nbytes, cand, t, c2c, sim,
                         validated=(sim <= 0.0
@@ -333,6 +432,54 @@ def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
     return fallback
 
 
+def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
+                max_chunks: int = 32,
+                compressions=(None, "bf16", "int8"),
+                tol: float = 0.25,
+                flat_mechanism: str = "host",
+                chunk_bytes: int = 4 << 20,
+                _sim_cache: dict | None = None) -> BucketPlan:
+    """Choose the best validated schedule for one bucket on one topology
+    (sequential objective: minimize the bucket's own sync time)."""
+    priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
+                               flat_mechanism)
+    priced.sort(key=lambda x: x[0])
+    return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
+                            chunk_bytes, _sim_cache)
+
+
+def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
+                        ready_s: float, free_s: float, backward_s: float,
+                        max_chunks: int = 32,
+                        compressions=(None, "bf16", "int8"),
+                        tol: float = 0.25,
+                        flat_mechanism: str = "host",
+                        chunk_bytes: int = 4 << 20,
+                        _sim_cache: dict | None = None) -> BucketPlan:
+    """Choose the schedule minimizing the bucket's *exposed* time.
+
+    The bucket's sync occupies the serial comm channel from
+    ``max(ready_s, free_s)``; its exposure is however much of that slot
+    sticks out past the backward pass.  Among candidates that are fully
+    hidden the ranking prefers the least aggressive wire codec (a lossy
+    codec buys nothing when the comm is already free) and then the
+    shortest occupancy, which frees the channel for later buckets.
+    """
+    start = max(ready_s, free_s)
+    prev_exposed = max(0.0, free_s - backward_s)
+
+    def key(tc):
+        t, cand = tc
+        inc = max(0.0, start + t - backward_s) - prev_exposed
+        return (inc, _COMP_RANK[cand.compression], t)
+
+    priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
+                               flat_mechanism)
+    priced.sort(key=key)
+    return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
+                            chunk_bytes, _sim_cache)
+
+
 def plan(topo: HetTopology, bucket_sizes, *,
          coll: str = "all_reduce",
          pod_axis: str | None = "pod", intra_axis: str = "data",
@@ -341,12 +488,17 @@ def plan(topo: HetTopology, bucket_sizes, *,
          tol: float = 0.25,
          flat_mechanism: str = "host",
          try_balanced: bool = True,
-         chunk_bytes: int = 4 << 20) -> CommPlan:
+         chunk_bytes: int = 4 << 20,
+         backward_compute_s: float | None = None,
+         _sim_cache: dict | None = None) -> CommPlan:
     """Plan the communication schedule for a list of gradient buckets.
 
     Arguments:
       topo: the physical heterogeneous topology.
       bucket_sizes: per-rank payload of each gradient bucket, in bytes.
+        With ``backward_compute_s`` set they must be in *readiness
+        order* (``overlap.partition_tree`` / ``bucket_sizes_for_volume``
+        produce exactly that).
       coll: the global collective the buckets ride ('all_reduce' for DP
         gradient sync, 'reduce_scatter' for the ZeRO-1 path).
       compressions: DCN codecs the caller is willing to accept; pass
@@ -366,6 +518,15 @@ def plan(topo: HetTopology, bucket_sizes, *,
         describe the recommended re-grouping, not what the unmodified
         mesh will run.  Launchers that execute the plan pass
         ``try_balanced=False``; analysis/benchmark callers keep it on.
+      backward_compute_s: wall time of the backward pass producing the
+        buckets (``cost_model.backward_compute_time``).  When set, the
+        planner schedules each readiness-ordered bucket on the serial
+        comm channel against the compute timeline, optimizes *exposed*
+        rather than total comm time (``plan_bucket_overlap``), and
+        attaches an ``OverlapReport`` to the returned plan.
+      _sim_cache: event-simulator memo shared across calls — launchers
+        that plan twice (overlap buckets, then a monolithic fallback)
+        pass one dict so identical C2C transfers are simulated once.
 
     Returns a ``CommPlan``; see class docstring for how it plugs into
     the collectives layer.
@@ -379,21 +540,61 @@ def plan(topo: HetTopology, bucket_sizes, *,
         if bal.n_clusters != topo.n_clusters:
             topologies.append((bal, True))
 
+    kw = dict(max_chunks=max_chunks, compressions=compressions, tol=tol,
+              flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes)
     best: CommPlan | None = None
-    sim_cache: dict = {}
+    best_score: tuple | None = None
+    sim_cache: dict = {} if _sim_cache is None else _sim_cache
     for t, balanced in topologies:
-        buckets = tuple(
-            plan_bucket(t, coll, n, max_chunks=max_chunks,
-                        compressions=compressions, tol=tol,
-                        flat_mechanism=flat_mechanism,
-                        chunk_bytes=chunk_bytes, _sim_cache=sim_cache)
-            for n in sizes)
-        cand = CommPlan(t, balanced, coll, pod_axis, intra_axis, buckets)
-        # prefer fully validated plans; break ties on predicted time
-        if (best is None
-                or (cand.validated, -cand.predicted_step_s)
-                > (best.validated, -best.predicted_step_s)):
-            best = cand
+        order = tuple(range(len(sizes)))
+        if backward_compute_s is None:
+            buckets = tuple(
+                plan_bucket(t, coll, n, _sim_cache=sim_cache, **kw)
+                for n in sizes)
+            cand = CommPlan(t, balanced, coll, pod_axis, intra_axis, buckets,
+                            bucket_order=order)
+            # prefer fully validated plans; break ties on predicted time
+            score = (cand.validated, -cand.predicted_step_s)
+        else:
+            # readiness times: backward FLOPs are proportional to the
+            # parameter bytes being differentiated, so bucket i's grads
+            # land once the compute for buckets 0..i has run.
+            total_b = max(1, sum(sizes))
+            acc = 0
+            buckets_l: list[BucketPlan] = []
+            timeline: list[OverlapBucket] = []
+            free = 0.0
+            for n in sizes:
+                acc += n
+                ready = backward_compute_s * acc / total_b
+                bp = plan_bucket_overlap(
+                    t, coll, n, ready_s=ready, free_s=free,
+                    backward_s=backward_compute_s,
+                    _sim_cache=sim_cache, **kw)
+                start = max(ready, free)
+                end = start + bp.predicted_s
+                exposed = (max(0.0, end - backward_compute_s)
+                           - max(0.0, free - backward_compute_s))
+                timeline.append(OverlapBucket(n, ready, start, end,
+                                              bp.predicted_s, exposed))
+                buckets_l.append(bp)
+                free = end
+            mono = plan_bucket(t, coll, sum(sizes), _sim_cache=sim_cache,
+                               **kw)
+            report = OverlapReport(
+                backward_compute_s,
+                sum(b.predicted_s for b in buckets_l),
+                max(0.0, free - backward_compute_s),
+                tuple(timeline),
+                monolithic_comm_s=mono.predicted_s)
+            cand = CommPlan(t, balanced, coll, pod_axis, intra_axis,
+                            tuple(buckets_l), bucket_order=order,
+                            overlap=report)
+            # exposed time is the objective; total time breaks ties
+            score = (cand.validated, -report.exposed_comm_s,
+                     -cand.predicted_step_s)
+        if best_score is None or score > best_score:
+            best, best_score = cand, score
     assert best is not None
     return best
 

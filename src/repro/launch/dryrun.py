@@ -62,7 +62,7 @@ def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
 
 
 def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
-              allow_int8: bool = False):
+              allow_int8: bool = False, shape_name: str | None = None):
     """--plan auto: run the cost-model planner for this cell's
     production topology and gradient volume; returns
     (CommPlan, chosen Candidate).
@@ -75,8 +75,15 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     try_balanced is off: a balanced-subgroup topology is advisory (the
     jax mesh cannot subdivide pods), so executable plans price the
     mesh as it will actually run.
+
+    With a training ``shape_name`` the gradient volume is split into
+    readiness-ordered layer buckets and the plan is priced against the
+    backward-compute timeline (``backward_compute_s``), so it optimizes
+    *exposed* comm time and may recommend ``hier_overlap``
+    (``plan.recommended_mode()``); without a shape the single-bucket
+    sequential plan of earlier revisions is returned unchanged.
     """
-    from repro.core import planner, topology
+    from repro.core import cost_model, overlap, planner, topology
     from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
 
     n_pods, _, tp_size = PRODUCTION_MULTI_SHAPE
@@ -85,14 +92,33 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     chips_per_pod = (
         PRODUCTION_MULTI_SHAPE[1] * PRODUCTION_MULTI_SHAPE[2])
     topo = topology.tpu_multipod(n_pods, chips_per_pod)
-    grad_bytes = max(1, get_config(arch).param_count() * 4 // tp_size)
-    plan = planner.plan(
-        topo, [grad_bytes],
+    cfg = get_config(arch)
+    grad_bytes = max(1, cfg.param_count() * 4 // tp_size)
+    plan_kw = dict(
         coll="reduce_scatter" if comm_mode == "hier_zero1" else "all_reduce",
         pod_axis="pod" if multi_pod else None, intra_axis="data",
         compressions=(None, "bf16", "int8") if allow_int8 else (None, "bf16"),
         flat_mechanism="native", try_balanced=False)
-    return plan, plan.buckets[0].candidate
+    # structural modes (fsdp / hier_zero1) execute a monolithic sync, so
+    # their plan must be priced at that granularity
+    sizes, backward_s = [grad_bytes], None
+    if shape_name is not None and comm_mode not in ("fsdp", "hier_zero1"):
+        shape = get_shape(shape_name)
+        if shape.kind == "train":
+            backward_s = cost_model.backward_compute_time(
+                topo, model_flops_for(cfg, shape))
+            sizes = overlap.bucket_sizes_for_volume(grad_bytes, cfg.n_layers)
+    sim_cache: dict = {}
+    plan = planner.plan(topo, sizes, backward_compute_s=backward_s,
+                        _sim_cache=sim_cache, **plan_kw)
+    if backward_s is not None and plan.recommended_mode() != "hier_overlap":
+        # overlap doesn't win -> execution is one monolithic collective;
+        # re-plan at that granularity so config_for resolves a schedule
+        # tuned for the payload that actually crosses the wire
+        plan = planner.plan(topo, [grad_bytes], _sim_cache=sim_cache,
+                            **plan_kw)
+    big = max(plan.buckets, key=lambda b: b.nbytes)
+    return plan, big.candidate
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
@@ -227,8 +253,8 @@ def main():
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--mode", default=None,
-                    choices=["flat", "hier", "hier_pipelined", "hier_zero1",
-                             "fsdp"])
+                    choices=["flat", "hier", "hier_pipelined", "hier_overlap",
+                             "hier_zero1", "fsdp"])
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: core.planner picks mode/chunks/compression "
                          "from the cost model instead of the --mode flags")
@@ -250,14 +276,21 @@ def main():
             plan, chosen = auto_plan(
                 args.arch, multi_pod=args.mesh == "multi",
                 comm_mode=args.mode or "hier",
-                allow_int8=args.compression == "int8")
+                allow_int8=args.compression == "int8",
+                shape_name=args.shape)
             # explicitly-flagged structural modes (fsdp / hier_zero1) keep
             # their optimizer wiring; the schedule comes from the plan,
-            # resolved per bucket inside the collectives.
+            # resolved per bucket inside the collectives.  For the rest,
+            # the plan may recommend the chained overlap executor when
+            # exposed comm beats the sequential sync.
             if args.mode in ("fsdp", "hier_zero1"):
                 mode = args.mode
             else:
-                mode = chosen.mode if chosen.mode == "flat" else "hier"
+                rec = plan.recommended_mode()
+                if rec == "hier_overlap":
+                    mode = "hier_overlap"
+                else:
+                    mode = chosen.mode if chosen.mode == "flat" else "hier"
             chunks, comp = chosen.n_chunks, chosen.compression
         res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
                          comm_mode=mode, sp=args.sp,

@@ -30,6 +30,10 @@ CELLS = {
         # it6's structural flags (fsdp + sp) so the comparison is
         # schedule-vs-schedule, not structure-vs-structure.
         ("it7_auto", ["--plan", "auto", "--mode", "fsdp", "--sp"]),
+        # overlap axis (DESIGN.md §8): no structural flag, so the plan
+        # is free to recommend the chained hier_overlap executor when
+        # its exposed comm time beats the sequential schedules above.
+        ("it8_auto_overlap", ["--plan", "auto"]),
     ],
     ("olmo-1b", "train_4k", "single"): [
         ("it0_base", ["--mode", "hier"]),

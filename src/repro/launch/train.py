@@ -53,8 +53,8 @@ def main(argv=None):
     ap.add_argument("--mesh", default="none",
                     choices=["none", "test", "production"])
     ap.add_argument("--mode", default="hier",
-                    choices=["flat", "hier", "hier_pipelined", "hier_zero1",
-                             "fsdp"])
+                    choices=["flat", "hier", "hier_pipelined", "hier_overlap",
+                             "hier_zero1", "fsdp"])
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: let core.planner pick mode/chunks/compression "
                          "per gradient bucket from the cost model, replacing "
@@ -86,16 +86,15 @@ def main(argv=None):
 
     plan = None
     if args.plan == "auto" and mesh is not None:
-        from repro.core import planner, topology
+        from repro.core import cost_model, overlap, planner, topology
 
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_pods = sizes.get("pod", 1)
         chips_per_pod = int(np.prod(list(mesh.devices.shape))) // n_pods
         topo = topology.tpu_multipod(max(1, n_pods), chips_per_pod)
-        grad_bytes = cfg.param_count() * 4 // sizes.get("model", 1)
+        grad_bytes = max(1, cfg.param_count() * 4 // sizes.get("model", 1))
         allowed = (None, args.compression) if args.compression else (None, "bf16")
-        plan = planner.plan(
-            topo, [max(1, grad_bytes)],
+        plan_kw = dict(
             # the ZeRO-1 sync is a reduce_scatter (the end AllGather moves
             # to the param update); everything else rides all_reduce
             coll=("reduce_scatter" if args.mode == "hier_zero1"
@@ -105,19 +104,50 @@ def main(argv=None):
             # balanced subgroups are advisory (the mesh can't subdivide
             # pods) — executable plans price the mesh as it runs
             try_balanced=False)
-        b = plan.buckets[0]
-        print(f"[plan] {b.candidate.mode} n_chunks={b.candidate.n_chunks} "
-              f"compression={b.candidate.compression} "
-              f"predicted {b.predicted_s*1e3:.2f} ms/sync "
-              f"(c2c model {b.predicted_c2c_s*1e3:.3f} ms vs sim "
-              f"{b.simulated_c2c_s*1e3:.3f} ms, "
-              f"validated={b.validated})", flush=True)
+        # overlap axis: price the readiness-ordered layer buckets against
+        # the backward-compute timeline so the plan optimizes exposed
+        # rather than total comm time (core/overlap.py).  Structural
+        # modes execute one monolithic sync, so they are priced at that
+        # granularity directly.
+        backward_s = None
+        bucket_sizes = [grad_bytes]
+        if args.mode not in ("fsdp", "hier_zero1"):
+            step_flops = (6.0 * cfg.active_param_count()
+                          * args.global_batch * args.seq)
+            backward_s = cost_model.backward_compute_time(topo, step_flops)
+            # same cap the executor uses (TrainConfig.bucket_cap_mb
+            # defaults to this constant), so the priced layout matches
+            # the executed one
+            bucket_sizes = overlap.bucket_sizes_for_volume(
+                grad_bytes, cfg.n_layers, overlap.DEFAULT_CAP_BYTES)
+        sim_cache: dict = {}
+        plan = planner.plan(topo, bucket_sizes,
+                            backward_compute_s=backward_s,
+                            _sim_cache=sim_cache, **plan_kw)
+        if (backward_s is not None
+                and plan.recommended_mode() != "hier_overlap"):
+            # overlap doesn't win -> execution is one monolithic
+            # collective; re-plan at that granularity so config_for
+            # resolves a schedule tuned for the real payload
+            plan = planner.plan(topo, [grad_bytes], _sim_cache=sim_cache,
+                                **plan_kw)
+        b = max(plan.buckets, key=lambda x: x.nbytes)
+        msg = (f"[plan] {plan.recommended_mode()} "
+               f"(biggest bucket: {b.candidate.mode} "
+               f"n_chunks={b.candidate.n_chunks} "
+               f"compression={b.candidate.compression}) "
+               f"predicted {plan.predicted_step_s*1e3:.2f} ms/sync total")
+        if plan.overlap is not None:
+            msg += (f", {plan.exposed_comm_s*1e3:.2f} ms exposed "
+                    f"(backward {plan.overlap.backward_compute_s*1e3:.2f} ms)")
+        print(msg + f" validated={plan.validated}", flush=True)
 
     # optimizer structure (fsdp / zero1) is not a per-bucket knob; the plan
     # only replaces the schedule choice within the generic hier path.
     mode = args.mode
     if plan is not None and mode not in ("fsdp", "hier_zero1"):
-        mode = "hier"
+        mode = ("hier_overlap"
+                if plan.recommended_mode() == "hier_overlap" else "hier")
     tcfg = TrainConfig(comm_mode=mode,
                        dcn_compression=args.compression, plan=plan,
                        opt=OptConfig(lr=args.lr, warmup_steps=20))

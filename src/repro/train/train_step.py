@@ -10,6 +10,13 @@ Communication modes (``TrainConfig.comm_mode``) — the §Perf A/B axis:
   hier_pipelined
               hier with the C2C step chunked + software-pipelined
               against the intra steps (paper §4.3.2, Fig. 9).
+  hier_overlap
+              AllReduceH per readiness-ordered gradient bucket
+              (core/overlap.py): buckets chained in backward readiness
+              order (lm_head first, layers in reverse, embeddings last)
+              so XLA can schedule each bucket's C2C against the
+              backward compute still producing later buckets
+              (beyond-paper; the H2/HETHUB overlap axis).
   hier_zero1  hier breakdown fused with ZeRO-1: the reduce-scattered
               f32 shard feeds Adam directly; the end-AllGather doubles
               as the parameter reconstruction (beyond-paper).
@@ -35,6 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collectives as coll
 from repro.core.collectives import CommConfig
 from repro.core import compression
+from repro.core import overlap as overlap_lib
 from repro.models.model import Model
 from repro.parallel.sharding import Runtime, shard_map
 from . import loss as loss_lib
@@ -43,9 +51,14 @@ from . import optimizer as opt_lib
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    comm_mode: str = "hier"          # flat|hier|hier_pipelined|hier_zero1|fsdp
+    # flat|hier|hier_pipelined|hier_overlap|hier_zero1|fsdp
+    comm_mode: str = "hier"
     dcn_compression: str | None = None  # None|bf16|int8 (pod hop only)
     n_chunks: int = 4                 # pipelined mode
+    # hier_overlap bucket size cap; defaults to the same constant the
+    # planner-side bucket_sizes_for_volume uses, so a plan priced with
+    # default caps describes the layout that actually executes
+    bucket_cap_mb: int = overlap_lib.DEFAULT_CAP_BYTES >> 20
     # planner.CommPlan: when set, the collectives resolve mode/chunks/
     # compression per gradient bucket from the plan (--plan auto) and the
     # hand-picked fields above only steer the optimizer wiring
@@ -60,6 +73,7 @@ class TrainConfig:
             return self.plan
         mode = {"flat": "flat", "hier": "hier",
                 "hier_pipelined": "hier_pipelined",
+                "hier_overlap": "hier",   # per-bucket schedule inside the chain
                 "hier_zero1": "hier", "fsdp": "hier"}[self.comm_mode]
         return CommConfig(mode=mode, pod_axis=rt.pod_axis,
                           intra_axis=rt.dp_axis or "data",
@@ -165,6 +179,12 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
                         return lax.psum(g, rt.pod_axis)
                     return coll.hier_psum(g, ccfg) if dp_axes else g
                 grads = jax.tree.map(sync, grads, specs)
+            elif tcfg.comm_mode == "hier_overlap" and dp_axes:
+                # readiness-ordered bucket chain: XLA may overlap each
+                # bucket's C2C with the backward ops still producing
+                # later buckets (core/overlap.py)
+                grads = overlap_lib.tree_hier_psum_overlap(
+                    grads, ccfg, cap_bytes=tcfg.bucket_cap_mb << 20)
             elif dp_axes:
                 grads = coll.tree_hier_psum(grads, ccfg)
             gnorm = _global_grad_norm(grads, specs, rt) / n_dp

@@ -1,0 +1,26 @@
+"""Shared runner for tests/mdscripts/*: each script runs in a
+subprocess with 8 virtual CPU devices (the device count must be set
+before jax imports, and pytest's own process has already initialized
+jax with exactly 1 device — see tests/conftest.py)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+SRC = HERE.parent / "src"
+
+
+def run_mdscript(script: str, timeout: int = 900) -> str:
+    env = {"PYTHONPATH": str(SRC),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PATH": os.environ.get("PATH", "/usr/bin:/bin:/usr/local/bin"),
+           "HOME": os.environ.get("HOME", "/root"),
+           "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.run([sys.executable, str(HERE / "mdscripts" / script)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
+    assert "ALL-OK" in proc.stdout
+    return proc.stdout

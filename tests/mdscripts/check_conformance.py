@@ -1,0 +1,128 @@
+"""Collective conformance matrix: every comm mode must produce the same
+summed gradients as the flat fp32 baseline.
+
+mesh (pod=2, data=4), synthetic gradient pytree with stacked layers and
+top-level leaves (odd sizes so every padding path runs).  Matrix:
+
+    mode        ∈ {flat, hier, hier_pipelined, hier_overlap}
+    n_chunks    ∈ {1, 2, 4}
+    compression ∈ {None, bf16}          (DCN wire codec)
+
+plus int8 rows for the hierarchical modes at a loose tolerance (the
+codec is lossy; error feedback recovers it over steps, so one sync is
+only bounded by the per-block quantization error).
+
+Also the pod_axis=None × hier_pipelined regression: a 1-cluster config
+must fall back to the plain intra psum — no chunk loop in the lowered
+HLO, values exactly the flat reduction.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import overlap  # noqa: E402
+from repro.core.collectives import CommConfig, tree_hier_psum  # noqa: E402
+from repro.core.pipelined import pipelined_hier_psum  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+L = 6
+
+# deliberately odd sizes: 19 and 37 are coprime with the intra size (4)
+# and the chunk counts, so both the shard padding and the chunk padding
+# paths are exercised by every cell of the matrix.
+ks = jax.random.split(jax.random.key(7), 5)
+TREE = {
+    "embed": jax.random.normal(ks[0], (37, 19), jnp.float32),
+    "layers": {"wq": jax.random.normal(ks[1], (L, 19, 19), jnp.float32),
+               "norm_scale": jax.random.normal(ks[2], (L, 19), jnp.float32)},
+    "final_norm": {"scale": jax.random.normal(ks[3], (19,), jnp.float32)},
+    "lm_head": jax.random.normal(ks[4], (37, 19), jnp.float32),
+}
+SPECS = jax.tree.map(lambda _: P(), TREE)
+# bucket cap sized to split the smoke tree into several buckets so the
+# hier_overlap chain really runs multi-bucket
+CAP = 2 * (19 * 19 + 19) * 4
+
+TOL = {None: 2e-5, "bf16": 0.02, "int8": 0.12}
+
+
+def sync_fn(mode, n_chunks, compression):
+    cfg = CommConfig(mode="hier" if mode == "hier_overlap" else mode,
+                     pod_axis="pod", intra_axis="data",
+                     n_chunks=n_chunks, compression=compression)
+
+    def run(tree):
+        if mode == "hier_overlap":
+            return overlap.tree_hier_psum_overlap(tree, cfg, cap_bytes=CAP)
+        return tree_hier_psum(tree, cfg)
+
+    return jax.jit(shard_map(run, mesh=mesh, in_specs=(SPECS,),
+                             out_specs=SPECS, check_vma=False))
+
+
+baseline_fn = jax.jit(shard_map(
+    lambda t: jax.tree.map(lambda g: lax.psum(g, ("pod", "data")), t),
+    mesh=mesh, in_specs=(SPECS,), out_specs=SPECS, check_vma=False))
+BASE = jax.tree.map(np.asarray, baseline_fn(TREE))
+
+
+def check(mode, n_chunks, compression):
+    got = jax.tree.map(np.asarray, sync_fn(mode, n_chunks, compression)(TREE))
+    tol = TOL[compression]
+    err = 0.0
+    for g, b in zip(jax.tree.leaves(got), jax.tree.leaves(BASE)):
+        assert g.shape == b.shape and g.dtype == b.dtype, (mode, g.shape)
+        assert np.all(np.isfinite(g)), (mode, n_chunks, compression)
+        err = max(err, float(np.max(np.abs(g - b))))
+        np.testing.assert_allclose(
+            g, b, rtol=tol, atol=tol,
+            err_msg=f"{mode} n_chunks={n_chunks} compression={compression}")
+    print(f"OK {mode:15s} n_chunks={n_chunks} "
+          f"compression={str(compression):5s} maxerr {err:.2e}")
+
+
+for mode in ("flat", "hier", "hier_pipelined", "hier_overlap"):
+    for n_chunks in (1, 2, 4):
+        for compression in (None, "bf16"):
+            check(mode, n_chunks, compression)
+
+# lossy int8 wire: hierarchical modes only (flat never compresses), one
+# chunk count per mode — the codec is chunk-independent.
+for mode in ("hier", "hier_pipelined", "hier_overlap"):
+    check(mode, 4, "int8")
+
+# --- regression: pod_axis=None + hier_pipelined degenerates cleanly ----
+mesh1d = jax.make_mesh((8,), ("data",))
+cfg1 = CommConfig(mode="hier_pipelined", pod_axis=None, intra_axis="data",
+                  n_chunks=4)
+x = jax.random.normal(jax.random.key(11), (8, 41), jnp.float32)
+pipe = jax.jit(shard_map(lambda v: pipelined_hier_psum(v.reshape(-1), cfg1),
+                         mesh=mesh1d, in_specs=P("data"), out_specs=P(None),
+                         check_vma=False))
+hlo = pipe.lower(x).as_text()
+assert "while" not in hlo, "pod_axis=None pipelined built a 1-pod chunk loop"
+np.testing.assert_allclose(np.asarray(pipe(x)), np.asarray(x.sum(0)),
+                           rtol=1e-5, atol=1e-5)
+# the tree entry point must degenerate identically
+cfg_tree = CommConfig(mode="hier_pipelined", pod_axis=None,
+                      intra_axis="data", n_chunks=4)
+tree1 = jax.jit(shard_map(lambda t: tree_hier_psum(t, cfg_tree), mesh=mesh1d,
+                          in_specs=(SPECS,), out_specs=SPECS,
+                          check_vma=False))
+flat1 = jax.jit(shard_map(
+    lambda t: jax.tree.map(lambda g: lax.psum(g, "data"), t),
+    mesh=mesh1d, in_specs=(SPECS,), out_specs=SPECS, check_vma=False))
+for g, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, tree1(TREE))),
+                jax.tree.leaves(jax.tree.map(np.asarray, flat1(TREE)))):
+    np.testing.assert_allclose(g, b, rtol=1e-5, atol=1e-5)
+print("OK pod_axis=None hier_pipelined fallback (no chunk loop)")
+
+print("ALL-OK")

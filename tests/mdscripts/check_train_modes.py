@@ -2,8 +2,10 @@
 reproduce the single-device trajectory on the same global batch.
 
 mesh (pod=2, data=2, model=2); qwen2.5-smoke (dense GQA) and
-mamba2-smoke (SSD).  Modes: flat, hier, hier_pipelined, hier_zero1,
-fsdp (+int8 DCN compression variant checked for finite drift).
+mamba2-smoke (SSD).  Modes: flat, hier, hier_pipelined, hier_overlap,
+hier_zero1, fsdp (+int8 DCN compression variant checked for finite
+drift).  hier_overlap runs with a 1 MiB bucket cap so the smoke-sized
+models still produce a multi-bucket chain.
 """
 
 import os
@@ -48,7 +50,8 @@ def run_mode(arch, mode, compression=None, sp=False):
     model = Model(cfg, rt)
     if mode == "fsdp":
         model = model.with_fsdp(2)
-    tcfg = TrainConfig(comm_mode=mode, dcn_compression=compression, opt=OPT)
+    tcfg = TrainConfig(comm_mode=mode, dcn_compression=compression, opt=OPT,
+                       bucket_cap_mb=1)
     build, init = make_train_step(model, tcfg, mesh=mesh)
     params, opt = init(jax.random.key(0))
     step, boot = build(jax.tree.map(
@@ -79,7 +82,8 @@ def run_single(arch):
 for arch in ["qwen2.5-3b", "mamba2-2.7b", "mixtral-8x7b"]:
     ref = run_single(arch)
     print(f"{arch} single-device: {['%.4f' % l for l in ref]}")
-    for mode in ["flat", "hier", "hier_pipelined", "hier_zero1", "fsdp"]:
+    for mode in ["flat", "hier", "hier_pipelined", "hier_overlap",
+                 "hier_zero1", "fsdp"]:
         got = run_mode(arch, mode)
         err = max(abs(a - b) for a, b in zip(got, ref))
         tol = 0.05 if arch != "mixtral-8x7b" else 0.12  # routing-drop jitter

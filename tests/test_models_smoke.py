@@ -1,5 +1,9 @@
 """Per-arch smoke tests: reduced config, one forward + train step on
-CPU, shape + finite asserts (assignment requirement f)."""
+CPU, shape + finite asserts (assignment requirement f).
+
+Slow tier: ~1 min of jit across the whole model zoo.  The fast suite
+(`pytest`, addopts ``-m "not slow"``) skips these; run them with
+``pytest -m slow`` or the full-suite CI job."""
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +14,8 @@ from repro.models import Model
 from repro.parallel.sharding import Runtime
 from repro.train import TrainConfig, make_train_step
 from repro.train.optimizer import OptConfig
+
+pytestmark = pytest.mark.slow
 
 RT = Runtime()
 

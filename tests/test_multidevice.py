@@ -1,29 +1,9 @@
 """Multi-device validation: each mdscripts/ file runs in a subprocess
-with 8 virtual CPU devices (the device count must be set before jax
-imports, which pytest's process has already done with 1 device)."""
-
-import pathlib
-import subprocess
-import sys
+with 8 virtual CPU devices (shared runner: tests/_mdrun.py)."""
 
 import pytest
 
-HERE = pathlib.Path(__file__).resolve().parent
-SRC = HERE.parent / "src"
-
-
-def _run(script: str, timeout: int = 900) -> str:
-    env = {"PYTHONPATH": str(SRC),
-           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-           "PATH": "/usr/bin:/bin:/usr/local/bin",
-           "HOME": "/root",
-           "JAX_PLATFORMS": "cpu"}
-    proc = subprocess.run([sys.executable, str(HERE / "mdscripts" / script)],
-                          capture_output=True, text=True, timeout=timeout,
-                          env=env)
-    assert proc.returncode == 0, (proc.stdout[-3000:], proc.stderr[-3000:])
-    assert "ALL-OK" in proc.stdout
-    return proc.stdout
+from _mdrun import run_mdscript as _run
 
 
 def test_hetccl_collectives_8dev():
@@ -49,7 +29,9 @@ def test_pipeline_pp_over_pod_8dev():
     _run("check_pipeline_pp.py")
 
 
+@pytest.mark.slow
 def test_elastic_restart_8dev():
     """Pod-failure recovery: mesh -> single-device -> mesh checkpoint
-    resume reproduces the uninterrupted loss trajectory."""
+    resume reproduces the uninterrupted loss trajectory.  End-to-end
+    training x3 runs — slow tier."""
     _run("check_elastic.py")

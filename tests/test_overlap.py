@@ -1,0 +1,108 @@
+"""Overlap subsystem: bucket partitioning invariants (pure tree logic;
+the multi-device execution path is covered by the conformance matrix
+and the train-mode mdscripts)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import overlap
+
+
+def _tree(L=8, d=16):
+    z = jnp.zeros
+    return {
+        "embed": z((64, d)),
+        "layers": {"wq": z((L, d, d)), "norm_scale": z((L, d))},
+        "enc_layers": {"wq": z((4, d, d))},
+        "final_norm": {"scale": z((d,))},
+        "lm_head": z((64, d)),
+        "pos_emb": z((32, d)),
+    }
+
+
+def _covered(layout, tree):
+    """Map every (key, layer) cell to the bucket index covering it."""
+    seen = {}
+    for b in layout:
+        for key, lo, hi in b.entries:
+            if lo is None:
+                assert (key, None) not in seen
+                seen[(key, None)] = b.index
+            else:
+                for layer in range(lo, hi):
+                    assert (key, layer) not in seen, (key, layer)
+                    seen[(key, layer)] = b.index
+    return seen
+
+
+def test_partition_covers_tree_exactly_once():
+    tree = _tree()
+    layout = overlap.partition_tree(tree, cap_bytes=1 << 30)
+    seen = _covered(layout, tree)
+    for key in tree:
+        if key in ("layers", "enc_layers"):
+            n = jax.tree.leaves(tree[key])[0].shape[0]
+            assert all((key, i) in seen for i in range(n))
+        else:
+            assert (key, None) in seen
+    assert [b.index for b in layout] == list(range(len(layout)))
+
+
+def test_partition_readiness_order():
+    """Output-side leaves first, decoder layers in reverse, encoder
+    after the decoder, embeddings last."""
+    tree = _tree(L=8)
+    per_layer = (16 * 16 + 16) * 4
+    layout = overlap.partition_tree(tree, cap_bytes=2 * per_layer)
+    seen = _covered(layout, tree)
+    head = [seen[("final_norm", None)], seen[("lm_head", None)]]
+    dec = [seen[("layers", i)] for i in range(8)]
+    enc = [seen[("enc_layers", i)] for i in range(4)]
+    tail = [seen[("embed", None)], seen[("pos_emb", None)]]
+    assert max(head) < min(dec)                   # head before layers
+    assert dec == sorted(dec, reverse=True)       # reverse layer order
+    assert max(dec) < min(enc)                    # encoder after decoder
+    assert max(enc) < min(tail)                   # embeddings last
+
+
+def test_partition_respects_cap():
+    tree = _tree(L=8)
+    per_layer = (16 * 16 + 16) * 4
+    layout = overlap.partition_tree(tree, cap_bytes=3 * per_layer)
+    for b in layout:
+        for key, lo, hi in b.entries:
+            if lo is not None:
+                assert hi - lo <= 3
+        # the cap binds every multi-entry bucket; only a single
+        # oversized key/layer may exceed it (leaves are never split)
+        if len(b.entries) > 1:
+            assert b.nbytes <= 3 * per_layer
+
+
+def test_partition_total_bytes_conserved():
+    tree = _tree()
+    layout = overlap.partition_tree(tree, cap_bytes=1024)
+    total = sum(4 * lf.size for lf in jax.tree.leaves(tree))
+    assert sum(b.nbytes for b in layout) == pytest.approx(total, rel=0.01)
+
+
+def test_partition_rejects_non_dict():
+    with pytest.raises(TypeError):
+        overlap.partition_tree(jnp.zeros((4,)), cap_bytes=1024)
+
+
+def test_bucket_sizes_for_volume_conserves_and_caps():
+    total, n_layers, cap = 512 << 20, 28, 64 << 20
+    sizes = overlap.bucket_sizes_for_volume(total, n_layers, cap)
+    assert sum(sizes) == total
+    assert all(s > 0 for s in sizes)
+    # all but the remainder-absorbing last bucket obey the cap
+    assert all(s <= cap for s in sizes[:-1])
+    # degenerate inputs stay sane — including fewer bytes than layers
+    assert sum(overlap.bucket_sizes_for_volume(1, 1, cap)) == 1
+    assert sum(overlap.bucket_sizes_for_volume(100, 7, 1)) == 100
+    for total, n in ((3, 7), (5, 8), (1, 64)):
+        sizes = overlap.bucket_sizes_for_volume(total, n, cap)
+        assert sum(sizes) == total
+        assert all(s > 0 for s in sizes), sizes

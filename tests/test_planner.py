@@ -1,8 +1,9 @@
-"""Planner: search, simulator cross-validation, per-bucket resolution."""
+"""Planner: search, simulator cross-validation, per-bucket resolution,
+overlap-aware exposed-time planning."""
 
 import json
 
-from repro.core import collectives, cost_model, planner, topology
+from repro.core import collectives, cost_model, overlap, planner, topology
 from repro.core.collectives import CommConfig
 
 MiB = 1 << 20
@@ -108,6 +109,86 @@ def test_summary_is_json_serializable():
     s = json.loads(json.dumps(p.summary()))
     assert s["buckets"][0]["nbytes"] == 1 * MiB
     assert s["coll"] == "all_reduce"
+
+
+def test_overlap_plan_exposed_below_total():
+    """Acceptance: with a backward-compute budget, the paper-testbed
+    plan's overlap report shows exposed comm < total comm, the timeline
+    is a coherent serial-channel schedule, and the plan recommends the
+    chained overlap executor."""
+    topo = topology.paper_testbed()
+    sizes = overlap.bucket_sizes_for_volume(512 * MiB, 28, 64 * MiB)
+    bwd = cost_model.backward_compute_time(topo, 6.0 * 3.2e9 * 128 * 4096)
+    p = planner.plan(topo, sizes, try_balanced=False,
+                     backward_compute_s=bwd)
+    assert p.overlap is not None
+    assert 0.0 < p.overlap.exposed_comm_s < p.overlap.total_comm_s
+    assert p.exposed_comm_s == p.overlap.exposed_comm_s
+    assert 0.0 < p.overlap.hidden_frac < 1.0
+    assert p.recommended_mode() == "hier_overlap"
+    assert p.bucket_order == tuple(range(len(sizes)))
+    tl = p.overlap.buckets
+    assert len(tl) == len(sizes)
+    for a, b in zip(tl, tl[1:]):
+        assert b.start_s >= a.end_s - 1e-12       # serial comm channel
+        assert b.ready_s >= a.ready_s             # readiness order
+    for b in tl:
+        assert b.start_s >= b.ready_s - 1e-12     # no sync before grads
+        assert abs(b.end_s - b.start_s - b.comm_s) < 1e-12
+    assert abs(sum(b.exposed_s for b in tl)
+               - p.overlap.exposed_comm_s) < 1e-9
+    # summary carries the report, json-serializable
+    s = json.loads(json.dumps(p.summary()))
+    assert s["recommended_mode"] == "hier_overlap"
+    assert s["overlap"]["exposed_comm_s"] < s["overlap"]["total_comm_s"]
+
+
+def test_overlap_hidden_buckets_prefer_lossless():
+    """Optimizing exposed time: buckets fully hidden behind backward
+    compute must not adopt a lossy wire codec — compression buys
+    nothing when the comm is already free."""
+    topo = topology.paper_testbed()
+    sizes = overlap.bucket_sizes_for_volume(512 * MiB, 28, 64 * MiB)
+    bwd = cost_model.backward_compute_time(topo, 6.0 * 3.2e9 * 128 * 4096)
+    p = planner.plan(topo, sizes, try_balanced=False,
+                     backward_compute_s=bwd)
+    hidden = [b for b, t in zip(p.buckets, p.overlap.buckets)
+              if t.exposed_s == 0.0]
+    assert hidden, "scenario should hide at least one bucket"
+    assert all(b.candidate.compression is None for b in hidden)
+
+
+def test_overlap_not_recommended_when_monolithic_wins():
+    """With a negligible backward pass nothing hides, so the chain's
+    per-bucket α overhead loses to one monolithic collective — the plan
+    must not recommend hier_overlap (it compares against
+    monolithic_comm_s, not just its own sequential total)."""
+    topo = topology.paper_testbed()
+    p = planner.plan(topo, [1 * MiB] * 8, try_balanced=False,
+                     backward_compute_s=1e-6)
+    assert p.overlap.monolithic_comm_s > 0.0
+    assert p.overlap.exposed_comm_s > p.overlap.monolithic_comm_s
+    assert p.recommended_mode() != "hier_overlap"
+
+
+def test_overlap_single_bucket_cannot_hide():
+    """One bucket's gradients are only complete when backward ends, so
+    nothing can hide: exposed == total and the chained executor is not
+    recommended."""
+    topo = topology.paper_testbed()
+    p = planner.plan(topo, [64 * MiB], try_balanced=False,
+                     backward_compute_s=1.0)
+    assert abs(p.overlap.exposed_comm_s - p.overlap.total_comm_s) < 1e-12
+    assert p.recommended_mode() != "hier_overlap"
+
+
+def test_plan_without_backward_unchanged():
+    """No backward budget -> no overlap report, exposed degenerates to
+    the sequential step time (pre-overlap behavior)."""
+    p = planner.plan(topology.paper_testbed(), [16 * MiB])
+    assert p.overlap is None
+    assert p.exposed_comm_s == p.predicted_step_s
+    assert p.summary()["overlap"] is None
 
 
 def test_dryrun_auto_plan_helper():

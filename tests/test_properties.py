@@ -1,0 +1,121 @@
+"""Property tests for the pure scheduling/codec helpers.
+
+Runs through ``tests/_hypothesis_compat``: real hypothesis when the dev
+environment has it, a deterministic seeded-fuzz stub otherwise (the
+container ships neither hypothesis nor pip access)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import hypothesis, st
+from repro.core import compression, planner
+from repro.core.planner import BucketPlan, Candidate, CommPlan
+from repro.core.topology import proportional_split, tpu_multipod
+
+given, settings = hypothesis.given, hypothesis.settings
+
+
+# ---------------------------------------------------------------------------
+# proportional_split: byte conservation + bandwidth ordering
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50)
+@given(st.integers(0, 1 << 32),
+       st.lists(st.floats(0.125e9, 400e9), min_size=1, max_size=16),
+       st.sampled_from([1, 64, 4096, 1 << 20]))
+def test_proportional_split_conserves_bytes(total, bandwidths, granularity):
+    out = proportional_split(total, bandwidths, granularity)
+    assert len(out) == len(bandwidths)
+    assert sum(out) == total
+    assert all(o >= 0 for o in out)
+
+
+@settings(max_examples=50)
+@given(st.integers(1, 1 << 30),
+       st.lists(st.floats(0.125e9, 400e9), min_size=2, max_size=16),
+       st.sampled_from([1, 64, 4096]))
+def test_proportional_split_respects_bandwidth_order(total, bandwidths,
+                                                     granularity):
+    """A faster link never receives more than one quantum less than a
+    slower one: the raw proportional shares are ordered, quantization
+    moves each by < granularity, and remainders go to the fastest links
+    first."""
+    out = proportional_split(total, bandwidths, granularity)
+    for i, bi in enumerate(bandwidths):
+        for j, bj in enumerate(bandwidths):
+            if bi >= bj:
+                assert out[i] + granularity > out[j] - granularity, (
+                    i, j, out, bandwidths)
+
+
+# ---------------------------------------------------------------------------
+# int8 codec: roundtrip error bounded by half an LSB per block
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(st.integers(1, 5000), st.floats(1e-3, 1e3), st.integers(0, 2 ** 31))
+def test_quantize_int8_roundtrip_bound(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = compression.quantize_int8(x)
+    y = compression.dequantize_int8(q, s, n)
+    # per block: |x - deq| <= scale/2 = amax/254 (round-to-nearest, the
+    # block max itself mapping exactly to ±127)
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % 1024)).reshape(-1, 1024))
+    bound = np.abs(blocks).max(axis=1, keepdims=True) / 254.0
+    err = np.abs(blocks - np.asarray(jnp.pad(y, (0, (-n) % 1024))
+                                     .reshape(-1, 1024)))
+    assert np.all(err <= bound + 1e-7), float((err - bound).max())
+
+
+# ---------------------------------------------------------------------------
+# CommPlan.bucket_for: nearest-log-size lookup invariants
+# ---------------------------------------------------------------------------
+
+def _plan_with_sizes(sizes):
+    buckets = tuple(
+        BucketPlan(n, Candidate("hier"), float(i + 1), 0.0, 0.0, True)
+        for i, n in enumerate(sizes))
+    return CommPlan(tpu_multipod(2, 8), False, "all_reduce", "pod", "data",
+                    buckets)
+
+
+@settings(max_examples=50)
+@given(st.lists(st.integers(1, 1 << 40), min_size=1, max_size=12),
+       st.integers(1, 1 << 40))
+def test_bucket_for_is_nearest_in_log_size(sizes, query):
+    p = _plan_with_sizes(sizes)
+    got = p.bucket_for(query)
+    assert got in p.buckets
+    best = min(abs(math.log(b.nbytes) - math.log(query)) for b in p.buckets)
+    assert abs(math.log(got.nbytes) - math.log(query)) <= best + 1e-12
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(1, 1 << 40), min_size=1, max_size=8))
+def test_bucket_for_total_order(sizes):
+    """Monotone lookup: growing queries never step back to a smaller
+    bucket, and every bucket is reachable at its own size."""
+    p = _plan_with_sizes(sorted(set(sizes)))
+    chosen = [p.bucket_for(q).nbytes
+              for q in sorted({1, *sizes, 1 << 41})]
+    assert chosen == sorted(chosen)
+    for b in p.buckets:
+        assert p.bucket_for(b.nbytes) is b
+
+
+def test_bucket_for_clamps_degenerate_queries():
+    p = _plan_with_sizes([1 << 20, 1 << 30])
+    assert p.bucket_for(0).nbytes == 1 << 20       # max(1, n) clamp
+    assert p.bucket_for(-5).nbytes == 1 << 20
+    assert p.bucket_for(1 << 60).nbytes == 1 << 30
+
+
+def test_empty_plan_rejected():
+    import pytest
+
+    p = CommPlan(tpu_multipod(2, 8), False, "all_reduce", "pod", "data", ())
+    with pytest.raises(ValueError):
+        p.bucket_for(1)
