@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core import cost_model, overlap, planner, topology, transport_sim
+from repro.core import (cost_model, overlap, planner, schedule, topology,
+                        transport_sim)
 
 GiB = 1 << 30
 MiB = 1 << 20
@@ -195,6 +196,34 @@ def fig_overlap_exposed():
     return rows
 
 
+def fig_border_rs():
+    """Beyond-paper (§4.3 border communicator; DESIGN.md §9): AllReduce
+    via the border-RS schedule vs sequential hier vs pipelined hier vs
+    flat host forwarding across payload sizes, on the border-scarce
+    paper testbed (vendor1: 2 border NICs for 32 ranks — the Fig. 8
+    bounce regime the border exchange removes).  Each schedule is both
+    α–β-priced and event-simulated through the same IR steps."""
+    topo = topology.paper_testbed()
+    border = schedule.build_schedule("all_reduce", "hier_border_rs")
+    rows = []
+    for n in (1 * MiB, 16 * MiB, 256 * MiB, 1 * GiB):
+        t0 = time.perf_counter_ns()
+        b_est = cost_model.estimate_schedule(topo, border, n)
+        b_sim = transport_sim.simulate_schedule(border, topo, n)
+        dt = (time.perf_counter_ns() - t0) / 1e3
+        hier = cost_model.estimate_hier_collective(topo, "all_reduce", n)
+        pipe = cost_model.estimate_hier_collective(topo, "all_reduce", n,
+                                                   n_chunks=8)
+        flat_t = cost_model.flat_host_forwarding_time(topo, "all_reduce", n)
+        rows.append((f"fig_border_{n // MiB}MiB", dt,
+                     f"border{b_est.sequential_s*1e3:.1f}ms"
+                     f"(sim{b_sim*1e3:.1f}ms)/"
+                     f"hier{hier.sequential_s*1e3:.1f}ms/"
+                     f"pipe8:{pipe.pipelined_s*1e3:.1f}ms/"
+                     f"flat{flat_t*1e3:.1f}ms"))
+    return rows
+
+
 def table7_volume_optimality():
     """Table 7: C2C volumes are the information-theoretic minimum for
     ring exchange (checked against brute counting)."""
@@ -365,5 +394,6 @@ ALL_FIGURES = [
     ("fig17", fig17_scalability),
     ("fig18_19", fig18_19_serving),
     ("fig_overlap", fig_overlap_exposed),
+    ("fig_border", fig_border_rs),
     ("table7", table7_volume_optimality),
 ]

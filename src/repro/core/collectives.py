@@ -8,6 +8,12 @@ exposed next to a ``flat`` single-collective baseline so the schedule
 can be A/B'd with everything else fixed (the paper's Gloo/flat-NCCL
 comparisons).  All functions run inside shard_map.
 
+This module is the *execution interpreter* of the cluster-level
+schedule IR (``core/schedule.py``, DESIGN.md §9): the public ``hier_*``
+entry points build the schedule for their ``CommConfig.mode`` and run
+it step by step via ``primitives.py`` (``execute``).  New modes are
+added by registering a schedule builder — no decomposition lives here.
+
 The pytree entry points bucket leaves into one flat fp32/bf16 buffer per
 dtype before communicating (gradient bucketing): one α per phase instead
 of one per leaf, and clean, parseable HLO for the roofline analysis.
@@ -25,19 +31,25 @@ import numpy as np
 from jax import lax
 
 from . import compression, primitives
+from . import schedule as schedule_ir
 
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """How cross-device reduction/gather traffic is scheduled.
 
-    mode:
+    mode — any string with a registered schedule builder
+    (``core.schedule``); shipped modes:
       * ``flat``  — single native collective over all data-parallel axes
                     (the homogeneous-library emulation; baseline).
       * ``hier``  — paper-faithful AllReduceH: ReduceScatter(intra) ->
                     c2cRed(pod) -> AllGather(intra).
       * ``hier_pipelined`` — hier with the C2C step chunked and software-
                     pipelined against the intra steps (paper §4.3.2).
+      * ``hier_border_rs`` — §4.3 border-communicator variant: the pod
+                    hop becomes a combining reduce-scatter + shard
+                    redistribution over the cluster ring (no Fig. 8
+                    bounce hop on border-scarce clusters).
     compression: optional codec for the pod (DCN) hop only — ``bf16`` or
       ``int8`` (error feedback handled by the caller); beyond-paper.
     """
@@ -71,13 +83,95 @@ def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     return x.reshape(-1), pad
 
 
-def _pod_reduce(shard: jax.Array, cfg: CommConfig) -> jax.Array:
-    """The c2cRed step, with optional DCN-only compression."""
-    if cfg.pod_axis is None:
-        return shard
-    if cfg.compression is None:
-        return primitives.c2c_red(shard, cfg.pod_axis)
-    return compression.compressed_psum(shard, cfg.pod_axis, cfg.compression)
+# ---------------------------------------------------------------------------
+# The execution interpreter of the schedule IR (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _ExecCtx:
+    """Mutable walk state: the pending wire codec (set by Compress /
+    cleared by Decompress) and the pod-alignment padding the border
+    exchange legs round-trip."""
+    codec: str | None = None
+    pod_pad: int = 0
+
+
+def _wire_cast(buf: jax.Array, codec: str | None, fn) -> jax.Array:
+    """Run collective ``fn`` with the payload cast to the wire codec.
+    Only bf16 composes with native combining collectives; int8 rides
+    its own ring (`compression.compressed_psum`)."""
+    if codec == "bf16":
+        return fn(buf.astype(jnp.bfloat16)).astype(buf.dtype)
+    return fn(buf)
+
+
+def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
+               ctx: _ExecCtx) -> jax.Array:
+    intra, pod = cfg.intra_axis, cfg.pod_axis
+    if isinstance(step, schedule_ir.Compress):
+        ctx.codec = step.codec
+        return buf
+    if isinstance(step, schedule_ir.Decompress):
+        ctx.codec = None
+        return buf
+    if isinstance(step, schedule_ir.BorderGather):
+        # Fig. 8 bounce: a modeling artifact of border-NIC landing; on
+        # the all-border TPU mapping the native combining collective
+        # absorbs it (model-only — priced and simulated, never run).
+        return buf
+    if isinstance(step, schedule_ir.IntraReduceScatter):
+        if step.model_only:
+            return buf
+        return primitives.hom_reduce_scatter(buf, intra)
+    if isinstance(step, (schedule_ir.IntraAllGather, schedule_ir.IntraBcast)):
+        if getattr(step, "model_only", False):
+            return buf
+        return primitives.hom_all_gather(buf, intra)
+    if isinstance(step, schedule_ir.C2CRed):
+        if pod is None:
+            return buf
+        if step.scatter:
+            # border-communicator leg 1: combining reduce-scatter over
+            # the cluster ring — each cluster ends owning 1/P of the
+            # shard, reduced by its *native* collective (no bounce hop)
+            psize = primitives.axis_size(pod)
+            ctx.pod_pad = (-buf.size) % psize
+            if ctx.pod_pad:
+                buf = jnp.concatenate(
+                    [buf, jnp.zeros((ctx.pod_pad,), buf.dtype)])
+            return _wire_cast(buf, ctx.codec,
+                              lambda b: primitives.hom_reduce_scatter(b, pod))
+        if ctx.codec is not None:
+            return compression.compressed_psum(buf, pod, ctx.codec)
+        return primitives.c2c_red(buf, pod)
+    if isinstance(step, schedule_ir.C2CCpy):
+        if pod is None:
+            return buf
+        if step.gather:
+            # border-communicator leg 2: ring-redistribute the owned,
+            # fully reduced shards (values already codec-rounded, so the
+            # wire cast is lossless here)
+            out = _wire_cast(buf, ctx.codec,
+                             lambda b: primitives.hom_all_gather(b, pod))
+            if ctx.pod_pad:
+                out = out[:-ctx.pod_pad]
+                ctx.pod_pad = 0
+            return out
+        # AllGatherH's raw-shard pod ring: stacks pods on a leading dim
+        return primitives.c2c_cpy(buf, pod)
+    if isinstance(step, schedule_ir.ChunkLoop):
+        from . import pipelined  # local import to avoid cycle
+        return pipelined.execute_chunk_loop(step, buf, cfg)
+    if isinstance(step, schedule_ir.Flat):
+        raise ValueError("Flat steps are handled by the entry points")
+    raise NotImplementedError(f"no executor for step {step!r}")
+
+
+def _exec_steps(steps, buf: jax.Array, cfg: CommConfig) -> jax.Array:
+    ctx = _ExecCtx()
+    for step in steps:
+        buf = _exec_step(step, buf, cfg, ctx)
+    return buf
 
 
 # ---------------------------------------------------------------------------
@@ -85,27 +179,22 @@ def _pod_reduce(shard: jax.Array, cfg: CommConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
-    """Global all-reduce over (pod, intra) axes via the Table-7 breakdown.
-
-    DCN cost per chip: 2·(x.nbytes/intra_size)·(P-1)/P — an intra_size×
-    reduction versus the flat single all-reduce."""
+    """Global all-reduce over (pod, intra) axes: build the mode's
+    schedule and execute it (hier: the Table-7 breakdown — DCN cost per
+    chip 2·(x.nbytes/intra_size)·(P-1)/P, an intra_size× reduction
+    versus the flat single all-reduce)."""
     cfg = resolve_config(cfg, x.nbytes)
-    if cfg.mode == "flat":
+    sched = schedule_ir.build_schedule("all_reduce", cfg.mode, cfg.n_chunks,
+                                       cfg.compression)
+    if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
         return lax.psum(x, cfg.dp_axes)
-    if cfg.mode == "hier_pipelined" and cfg.pod_axis is None:
+    if cfg.pod_axis is None and sched.pipelined:
         # Degenerate 1-cluster pipeline: there is no C2C phase to hide,
         # so the chunk loop would only add α costs.  Plain intra psum.
         return lax.psum(x, cfg.dp_axes)
-    intra = cfg.intra_axis
-    isize = primitives.axis_size(intra)
+    isize = primitives.axis_size(cfg.intra_axis)
     flat, pad = _pad_to(x.astype(x.dtype), isize)
-    if cfg.mode == "hier_pipelined" and cfg.pod_axis is not None and cfg.n_chunks > 1:
-        from . import pipelined  # local import to avoid cycle
-        out = pipelined.pipelined_hier_psum(flat, cfg)
-    else:
-        shard = primitives.hom_reduce_scatter(flat, intra)      # start homColl
-        shard = _pod_reduce(shard, cfg)                          # c2cRed
-        out = primitives.hom_all_gather(shard, intra)            # end homColl
+    out = _exec_steps(sched.steps, flat, cfg)
     if pad:
         out = out[:-pad]
     return out.reshape(x.shape)
@@ -119,13 +208,17 @@ def hier_psum_scatter(x: jax.Array, cfg: CommConfig) -> jax.Array:
     intra = cfg.intra_axis
     isize = primitives.axis_size(intra)
     flat, _ = _pad_to(x, isize)
-    if cfg.mode == "flat":
+    sched = schedule_ir.build_schedule("reduce_scatter", cfg.mode,
+                                       cfg.n_chunks, cfg.compression)
+    if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
         shard = primitives.hom_reduce_scatter(flat, intra)
         if cfg.pod_axis is not None:
             shard = lax.psum(shard, cfg.pod_axis)
         return shard
-    shard = primitives.hom_reduce_scatter(flat, intra)
-    return _pod_reduce(shard, cfg)
+    # the scattered sync is not chunk-pipelined (there is no end phase
+    # to overlap): interpret a ChunkLoop body sequentially
+    steps, _ = sched.unrolled()
+    return _exec_steps(steps, flat, cfg)
 
 
 def hier_all_gather_flat(shard: jax.Array, cfg: CommConfig,
@@ -141,17 +234,27 @@ def hier_all_gather_flat(shard: jax.Array, cfg: CommConfig,
 # ---------------------------------------------------------------------------
 
 def hier_all_gather(x: jax.Array, cfg: CommConfig, gather_dim: int = 0) -> jax.Array:
-    """Gather shards over (pod, intra): pod-ring the *raw* shard first
-    (one copy crosses DCN, Table-7-optimal), then the intra AllGather
-    doubles as the end Bcast."""
+    """Gather shards over (pod, intra) via the mode's schedule — for the
+    hier family: pod-ring the *raw* shard first (C2CCpy; one copy
+    crosses DCN, Table-7-optimal), then the intra AllGather doubles as
+    the end Bcast (IntraBcast)."""
     cfg = resolve_config(cfg, x.nbytes)
-    if cfg.mode == "flat" or cfg.pod_axis is None:
+    sched = schedule_ir.build_schedule("all_gather", cfg.mode, cfg.n_chunks,
+                                       cfg.compression)
+    flat_sched = any(isinstance(s, schedule_ir.Flat) for s in sched.steps)
+    if flat_sched or cfg.pod_axis is None:
         return primitives.hom_all_gather(x, cfg.dp_axes, gather_dim)
     g = gather_dim
-    pods = primitives.c2c_cpy(x, cfg.pod_axis)               # (P, *x) over DCN
-    alld = lax.all_gather(pods, cfg.intra_axis, axis=0, tiled=False)  # (D, P, *x)
-    alld = jnp.swapaxes(alld, 0, 1)                           # (P, D, *x)
-    alld = jnp.moveaxis(alld, (0, 1), (g, g + 1))             # x[:g],P,D,x[g:]
+    steps, _ = sched.unrolled()    # the gather path is not chunk-pipelined
+    pods = x[None]
+    for step in steps:
+        if isinstance(step, schedule_ir.C2CCpy):
+            pods = primitives.c2c_cpy(x, cfg.pod_axis)        # (P, *x), DCN
+        elif isinstance(step, schedule_ir.IntraBcast):
+            pods = lax.all_gather(pods, cfg.intra_axis, axis=0,
+                                  tiled=False)                # (D, P, *x)
+            pods = jnp.swapaxes(pods, 0, 1)                   # (P, D, *x)
+    alld = jnp.moveaxis(pods, (0, 1), (g, g + 1))             # x[:g],P,D,x[g:]
     P_, D_ = primitives.axis_size(cfg.pod_axis), primitives.axis_size(cfg.intra_axis)
     new_shape = x.shape[:g] + (P_ * D_ * x.shape[g],) + x.shape[g + 1:]
     return alld.reshape(new_shape)

@@ -4,6 +4,13 @@ Every collective is priced as the 3-step breakdown of Algorithm 1:
 
     start homColl (intra-cluster)  ->  C2C transfers  ->  end homColl
 
+The decomposition itself is no longer hardwired here: this module is
+the *pricing interpreter* of the cluster-level schedule IR
+(``core/schedule.py``, DESIGN.md §9).  ``estimate_schedule`` walks a
+schedule's steps through the α–β closed form; ``estimate_hier_collective``
+is a thin wrapper that builds the hier schedule for a collective and
+prices it, so pricing and execution can never drift.
+
 The C2C step is synchronous across clusters and bounded by the minimum
 total cross-cluster bandwidth (§4.4).  Table 7 gives, per collective,
 the total C2C send/recv volume as a function of ``n`` (per-rank send
@@ -27,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from . import schedule as schedule_ir
 from .topology import Cluster, HetTopology
 
 
@@ -180,51 +188,78 @@ def c2c_step_time(topo: HetTopology, coll: str, n: int, alpha: float,
     return t
 
 
+def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
+                     n: float) -> float:
+    """Seconds one cluster spends in one intra-phase step."""
+    c = topo.clusters[ci]
+    if isinstance(step, schedule_ir.IntraReduceScatter):
+        return ring_reduce_scatter_time(
+            c, schedule_ir.eval_volume(step.vol, n, topo, c))
+    if isinstance(step, (schedule_ir.IntraAllGather, schedule_ir.IntraBcast)):
+        return ring_all_gather_time(
+            c, schedule_ir.eval_volume(step.vol, n, topo, c))
+    if isinstance(step, schedule_ir.BorderGather):
+        # c2cRed bounce (Fig. 8): received partials land on free offsets
+        # of the border ranks and take one extra intra-cluster native
+        # Reduce hop to the target — charge its volume for combiners.
+        _, recv_vol = c2c_volume(step.coll, int(n), topo, ci)
+        return ring_reduce_scatter_time(c, recv_vol / max(1, c.n_border))
+    return 0.0  # Compress/Decompress: free in the α–β model
+
+
+def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
+                      nbytes_per_rank: int,
+                      hetccl_alpha: float | None = None) -> CollectiveEstimate:
+    """Pricing interpreter of the schedule IR: walk ``sched``'s steps
+    through the α–β closed form.  Intra steps accumulate per cluster and
+    each phase completes when the slowest cluster does; every C2C step
+    drains its (codec- and leg-scaled) Table-7 volume through each
+    cluster's aggregate NIC bandwidth, paying one α per chunk (§4.4).
+    Returns a ``CollectiveEstimate`` — ``pipelined_s`` reflects the
+    schedule's ChunkLoop depth."""
+    alpha = (hetccl_alpha if hetccl_alpha is not None
+             else max(c.alpha_hetccl_s for c in topo.clusters))
+    n = nbytes_per_rank
+    steps, k = sched.unrolled()
+    start = end = 0.0
+    for ci in range(topo.n_clusters):
+        s = sum(_intra_step_time(st, topo, ci, n)
+                for st in steps if st.phase == "start")
+        e = sum(_intra_step_time(st, topo, ci, n)
+                for st in steps if st.phase == "end")
+        start = max(start, s)
+        end = max(end, e)
+    c2c = 0.0
+    for st in steps:
+        if isinstance(st, schedule_ir.Flat):
+            raise ValueError(
+                "flat schedules are priced per mechanism — use "
+                "flat_host_forwarding_time or planner._price_flat")
+        if not isinstance(st, (schedule_ir.C2CRed, schedule_ir.C2CCpy)):
+            continue
+        wire = max(1, int(n * st.wire_ratio))
+        t = 0.0
+        for ci, c in enumerate(topo.clusters):
+            send, recv = c2c_volume(st.coll, wire, topo, ci)
+            vol = max(send, recv) * st.vol_ratio
+            t = max(t, alpha * k + vol / c.cross_Bps)
+        c2c += t
+    return CollectiveEstimate(start, c2c, end, k)
+
+
 def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
                              n_chunks: int = 1,
                              hetccl_alpha: float | None = None) -> CollectiveEstimate:
     """Price Algorithm 1 for collective ``coll`` with per-rank payload
-    ``nbytes_per_rank`` bytes using the 3-phase breakdown of Table 7.
+    ``nbytes_per_rank`` bytes.  Thin wrapper: builds the hier schedule
+    (chunk-pipelined when ``n_chunks`` > 1) from ``core.schedule`` and
+    prices it step by step — the decomposition lives in one place.
     Returns a ``CollectiveEstimate`` (all phase times in seconds);
     ``hetccl_alpha`` defaults to the slowest cluster's host-proxy
     control latency."""
-    alpha = (hetccl_alpha if hetccl_alpha is not None
-             else max(c.alpha_hetccl_s for c in topo.clusters))
-    n = nbytes_per_rank
-    start = end = 0.0
-    for ci, c in enumerate(topo.clusters):
-        # c2cRed bounce (Fig. 8): received partials land on free offsets
-        # of the border ranks and take one extra intra-cluster native
-        # Reduce hop to the target — charge its volume for combiners.
-        _, recv_vol = c2c_volume(coll, n, topo, ci)
-        bounce = (ring_reduce_scatter_time(c, recv_vol / max(1, c.n_border))
-                  if coll in ("all_reduce", "reduce_scatter", "reduce")
-                  else 0.0)
-        if coll == "all_reduce":
-            start = max(start, ring_reduce_scatter_time(c, n))
-            end = max(end, bounce
-                      + ring_all_gather_time(c, n / max(1, c.n_ranks)))
-        elif coll == "all_gather":
-            # start: intra AllGather is subsumed by the end Bcast when all
-            # ranks are border ranks (common case, §4.3.2); price the
-            # general case: AG(intra) then end Bcast of remote data.
-            start = max(start, ring_all_gather_time(c, n))
-            remote = (topo.n_ranks - c.n_ranks) * n
-            end = max(end, ring_all_gather_time(c, remote / max(1, c.n_ranks)))
-        elif coll == "reduce_scatter":
-            start = max(start, ring_reduce_scatter_time(c, n))
-            end = max(end, bounce
-                      + ring_reduce_scatter_time(c, n / max(1, topo.n_clusters)))
-        elif coll in ("broadcast", "scatter"):
-            end = max(end, ring_all_gather_time(c, n / max(1, c.n_ranks)))
-        elif coll in ("reduce", "gather"):
-            start = max(start, bounce + ring_reduce_scatter_time(c, n))
-        elif coll in ("all_to_all", "send_recv"):
-            pass
-        else:
-            raise ValueError(coll)
-    c2c = c2c_step_time(topo, coll, n, alpha, n_chunks)
-    return CollectiveEstimate(start, c2c, end, n_chunks)
+    mode = "hier_pipelined" if n_chunks > 1 else "hier"
+    sched = schedule_ir.build_schedule(coll, mode, n_chunks)
+    return estimate_schedule(topo, sched, nbytes_per_rank, hetccl_alpha)
 
 
 def flat_host_forwarding_time(topo: HetTopology, coll: str, nbytes_per_rank: int) -> float:

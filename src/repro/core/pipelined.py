@@ -27,6 +27,26 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import primitives
+from . import schedule as schedule_ir
+
+
+def execute_chunk_loop(step: "schedule_ir.ChunkLoop", flat: jax.Array,
+                       cfg) -> jax.Array:
+    """ChunkLoop interpreter of the schedule IR (DESIGN.md §9): run the
+    loop body's start/c2c/end phases chunk-pipelined.  The shipped
+    pipelined schedules all carry the AllReduceH body (ReduceScatter →
+    c2cRed → AllGather) — the scan below *is* that body's pipeline; a
+    builder emitting a different chunked body must extend this."""
+    kinds = {type(s) for s in step.body}
+    if not {schedule_ir.IntraReduceScatter, schedule_ir.C2CRed,
+            schedule_ir.IntraAllGather} <= kinds:
+        raise NotImplementedError(
+            f"chunk-pipelined execution only implements the AllReduceH "
+            f"body; got {sorted(k.__name__ for k in kinds)}")
+    if any(isinstance(s, schedule_ir.C2CRed) and s.scatter for s in step.body):
+        raise NotImplementedError(
+            "the border-communicator exchange is not chunk-pipelined")
+    return pipelined_hier_psum(flat, cfg)
 
 
 def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False) -> jax.Array:

@@ -18,12 +18,18 @@ models into a decision procedure:
     α-dominated small-payload regime, where per-chunk WR posting and
     buffer-pool back-pressure are invisible to α–β).
 
-Search space per bucket (the §4.4 knobs):
+Search space per bucket: the planner enumerates *schedules* — every
+decomposition `core.schedule` can build from the §4.4 knobs:
 
-    mode         ∈ {flat, hier, hier_pipelined}
+    mode         ∈ {flat, hier, hier_pipelined, hier_border_rs}
     n_chunks     ∈ {1..max_chunks}           (hier_pipelined only)
-    compression  ∈ {None, bf16, int8}        (DCN hop only)
+    compression  ∈ {None, bf16, int8}        (DCN hop only;
+                                              border takes None/bf16)
     topology     ∈ {as-given, balanced_subgroups()}
+
+A new mode registered in ``core.schedule`` joins the search with no
+planner change: its schedule is priced by ``cost_model.estimate_schedule``
+and cross-validated like every other candidate.
 
 The planner returns a ``CommPlan``: one chosen ``CommConfig`` per
 gradient bucket plus the predicted and simulated times that justified
@@ -48,22 +54,34 @@ import dataclasses
 import math
 
 from . import cost_model, transport_sim
+from . import schedule as schedule_ir
 from .collectives import CommConfig
 from .topology import HetTopology
 
-# Wire-byte ratio of each DCN codec relative to the f32 payload.
-# int8 carries one byte per element plus one f32 scale per 1024-element
-# block (compression._CHUNK): 0.25 + 4/4096 per payload byte.
-_CODEC_WIRE_RATIO = {None: 1.0, "bf16": 0.5, "int8": 0.25 + 1.0 / 1024.0}
+# Wire-byte ratio of each DCN codec relative to the f32 payload — the
+# IR owns the table (int8: one byte per element plus one f32 scale per
+# 1024-element compression._CHUNK block); kept under the old name for
+# callers that imported it from here.
+_CODEC_WIRE_RATIO = schedule_ir.CODEC_WIRE_RATIO
 
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One point of the search space (topology choice tracked on the plan)."""
+    """One point of the search space (topology choice tracked on the
+    plan): the (mode, n_chunks, compression) key of a schedule the IR
+    can rebuild on demand via ``schedule()``."""
 
-    mode: str                      # flat | hier | hier_pipelined
+    mode: str                      # any registered schedule-builder mode
     n_chunks: int = 1
     compression: str | None = None
+
+    @classmethod
+    def of(cls, sched: schedule_ir.Schedule) -> "Candidate":
+        return cls(sched.mode, sched.n_chunks, sched.compression)
+
+    def schedule(self, coll: str) -> schedule_ir.Schedule:
+        return schedule_ir.build_schedule(coll, self.mode, self.n_chunks,
+                                          self.compression)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,6 +272,40 @@ class CommPlan:
                 for b in self.buckets],
         }
 
+    def describe(self) -> str:
+        """Human-readable per-bucket table (what ``launch/dryrun --plan
+        auto`` prints instead of the raw summary dict): one row per
+        bucket in execution order with the chosen schedule and the
+        predicted vs event-simulated times that justified it."""
+        head = (f"CommPlan[{self.coll}] over {self.topology.n_clusters} "
+                f"cluster(s){' (balanced subgroups)' if self.balanced else ''}"
+                f" — recommended mode: {self.recommended_mode()}, predicted "
+                f"{self.predicted_step_s * 1e3:.2f} ms/sync"
+                + ("" if self.validated else "  [NOT fully validated]"))
+        cols = (f"{'bucket':>6}  {'MiB':>9}  {'mode':<15} {'chunks':>6}  "
+                f"{'codec':<5}  {'pred ms':>9}  {'pred c2c':>9}  "
+                f"{'sim c2c':>9}  ok")
+        lines = [head, cols, "-" * len(cols)]
+        order = self.bucket_order or tuple(range(len(self.buckets)))
+        for i in order:
+            b = self.buckets[i]
+            c = b.candidate
+            lines.append(
+                f"{i:>6}  {b.nbytes / (1 << 20):>9.2f}  {c.mode:<15} "
+                f"{c.n_chunks:>6}  {str(c.compression or '-'):<5}  "
+                f"{b.predicted_s * 1e3:>9.3f}  "
+                f"{b.predicted_c2c_s * 1e3:>9.3f}  "
+                f"{b.simulated_c2c_s * 1e3:>9.3f}  "
+                f"{'y' if b.validated else 'N'}")
+        if self.overlap is not None:
+            o = self.overlap
+            lines.append(
+                f"overlap: backward {o.backward_compute_s * 1e3:.2f} ms, "
+                f"total comm {o.total_comm_s * 1e3:.2f} ms, exposed "
+                f"{o.exposed_comm_s * 1e3:.2f} ms "
+                f"({o.hidden_frac * 100:.0f}% hidden)")
+        return "\n".join(lines)
+
 
 # ---------------------------------------------------------------------------
 # Candidate pricing
@@ -263,22 +315,29 @@ def _hetccl_alpha(topo: HetTopology) -> float:
     return max(c.alpha_hetccl_s for c in topo.clusters)
 
 
+def _price_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
+                    nbytes: int,
+                    flat_mechanism: str = "host") -> tuple[float, float]:
+    """(full seconds, C2C leg seconds) of one candidate schedule.
+    Hierarchical schedules are priced step by step by the IR's pricing
+    interpreter (codec wire ratios and multi-leg exchanges ride the
+    steps themselves); flat schedules are priced per mechanism."""
+    if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
+        return _price_flat(topo, sched.coll, nbytes, flat_mechanism)
+    est = cost_model.estimate_schedule(topo, sched, nbytes)
+    t = est.pipelined_s if sched.pipelined else est.sequential_s
+    return t, est.c2c_s
+
+
 def _price_hier(topo: HetTopology, coll: str, nbytes: int,
                 n_chunks: int, compression: str | None,
                 pipelined: bool) -> tuple[float, float]:
     """(full 3-phase seconds, C2C leg seconds) for a hier/hier_pipelined
     candidate.  Compression shrinks only the DCN wire bytes — the
     lossless ICI phases are priced on the full payload."""
-    est = cost_model.estimate_hier_collective(topo, coll, nbytes, n_chunks)
-    ratio = _CODEC_WIRE_RATIO[compression]
-    if ratio != 1.0:
-        wire = max(1, int(nbytes * ratio))
-        c2c = cost_model.c2c_step_time(topo, coll, wire, _hetccl_alpha(topo),
-                                       n_chunks)
-        est = cost_model.CollectiveEstimate(est.start_s, c2c, est.end_s,
-                                            n_chunks)
-    t = est.pipelined_s if pipelined else est.sequential_s
-    return t, est.c2c_s
+    mode = "hier_pipelined" if pipelined else "hier"
+    sched = schedule_ir.build_schedule(coll, mode, n_chunks, compression)
+    return _price_schedule(topo, sched, nbytes)
 
 
 def _price_flat(topo: HetTopology, coll: str, nbytes: int,
@@ -358,13 +417,21 @@ def _chunk_candidates(max_chunks: int) -> tuple[int, ...]:
     return tuple(ks)
 
 
-def _bucket_candidates(max_chunks: int,
-                       compressions) -> list[Candidate]:
-    out = [Candidate("flat")]
+def _candidate_schedules(coll: str, max_chunks: int,
+                         compressions) -> list[schedule_ir.Schedule]:
+    """Every schedule the planner searches for one bucket: the flat
+    baseline plus, per wire codec, the sequential hier decomposition,
+    the §4.3 border-communicator exchange (all_reduce; lossless/bf16
+    wire only), and the chunk-pipelined family."""
+    out = [schedule_ir.build_schedule(coll, "flat")]
     for comp in compressions:
-        out.append(Candidate("hier", 1, comp))
+        out.append(schedule_ir.build_schedule(coll, "hier", 1, comp))
+        if coll == "all_reduce" and comp != "int8":
+            out.append(schedule_ir.build_schedule(coll, "hier_border_rs",
+                                                  1, comp))
         for k in _chunk_candidates(max_chunks):
-            out.append(Candidate("hier_pipelined", k, comp))
+            out.append(schedule_ir.build_schedule(coll, "hier_pipelined",
+                                                  k, comp))
     return out
 
 
@@ -396,14 +463,9 @@ def _price_candidates(topo: HetTopology, coll: str, nbytes: int,
                       max_chunks: int, compressions,
                       flat_mechanism: str) -> list[tuple[float, Candidate]]:
     priced: list[tuple[float, Candidate]] = []
-    for cand in _bucket_candidates(max_chunks, compressions):
-        if cand.mode == "flat":
-            t, _ = _price_flat(topo, coll, nbytes, flat_mechanism)
-        else:
-            t, _ = _price_hier(topo, coll, nbytes, cand.n_chunks,
-                               cand.compression,
-                               pipelined=cand.mode == "hier_pipelined")
-        priced.append((t, cand))
+    for sched in _candidate_schedules(coll, max_chunks, compressions):
+        t, _ = _price_schedule(topo, sched, nbytes, flat_mechanism)
+        priced.append((t, Candidate.of(sched)))
     return priced
 
 

@@ -147,9 +147,19 @@ def proportional_split(total_bytes: int, bandwidths: Sequence[float],
     """Divide a C2C transfer across border ranks proportionally to their
     NIC bandwidth (paper §4.2.2, c2cCpy load balance).  The split is
     quantized to ``granularity`` bytes; remainders go to the fastest
-    links first.  sum(result) == total_bytes."""
+    links first.  sum(result) == total_bytes.
+
+    Raises ``ValueError`` when every link has zero bandwidth and there
+    are bytes to place (there is no proportion to split by); zero bytes
+    short-circuit to an all-zero split whatever the bandwidths."""
     assert total_bytes >= 0 and len(bandwidths) > 0
+    if total_bytes == 0:
+        return [0] * len(bandwidths)
     tot_bw = float(sum(bandwidths))
+    if tot_bw <= 0.0:
+        raise ValueError(
+            "proportional_split: all link bandwidths are zero — "
+            f"cannot place {total_bytes} bytes")
     raw = [total_bytes * (bw / tot_bw) for bw in bandwidths]
     out = [int(r // granularity) * granularity for r in raw]
     rem = total_bytes - sum(out)

@@ -25,7 +25,8 @@ import dataclasses
 import heapq
 import math
 
-from .topology import Cluster, proportional_split
+from . import schedule as schedule_ir
+from .topology import Cluster, HetTopology, proportional_split
 
 
 @dataclasses.dataclass
@@ -132,6 +133,66 @@ def simulate_c2c_cpy(src: Cluster, dst: Cluster, total_bytes: int,
     return t
 
 
+def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
+                   mechanism: str, chunk_bytes: int) -> float:
+    """Duration of one schedule step for a (chunk of) per-rank payload
+    ``nbytes``: intra steps use the closed-form ring times (the intra
+    fabric is not what this simulator models); C2C steps drain each
+    cluster's Table-7 volume to its ring successor through the
+    event-driven chunk pipeline (``simulate_c2c_cpy``)."""
+    from . import cost_model  # local: keeps the module importable alone
+    if isinstance(step, (schedule_ir.IntraReduceScatter,
+                         schedule_ir.IntraAllGather, schedule_ir.IntraBcast,
+                         schedule_ir.BorderGather)):
+        return max(cost_model._intra_step_time(step, topo, ci, nbytes)
+                   for ci in range(topo.n_clusters))
+    if isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
+                         schedule_ir.Flat)):
+        mech = "host" if isinstance(step, schedule_ir.Flat) else mechanism
+        wire_ratio = getattr(step, "wire_ratio", 1.0)
+        vol_ratio = getattr(step, "vol_ratio", 1.0)
+        wire = max(1, int(nbytes * wire_ratio))
+        C = topo.n_clusters
+        t = 0.0
+        for ci, c in enumerate(topo.clusters):
+            send, recv = cost_model.c2c_volume(step.coll, wire, topo, ci)
+            vol = int(max(send, recv) * vol_ratio)
+            if vol == 0:
+                continue
+            nxt = topo.clusters[(ci + 1) % C]
+            t = max(t, simulate_c2c_cpy(c, nxt, vol, mech, chunk_bytes))
+        return t
+    return 0.0  # Compress / Decompress
+
+
+def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
+                      nbytes_per_rank: int, mechanism: str = "hetccl",
+                      chunk_bytes: int = 4 << 20) -> float:
+    """Simulation interpreter of the schedule IR (DESIGN.md §9): walk
+    the same steps the executor runs and the cost model prices through
+    the event queue.  Each step is a pipeline stage with a resource
+    free-time; a ChunkLoop feeds the stages chunk by chunk, so the
+    steady state drains at the bottleneck stage exactly as the paper's
+    Fig. 9 pipeline does — but with the per-chunk WR-posting and
+    buffer-pool effects the α–β closed form cannot see.  Returns
+    seconds."""
+    steps, k = sched.unrolled()
+    k = max(1, min(k, nbytes_per_rank))   # never more chunks than bytes
+    per = max(1, nbytes_per_rank // k)
+    stage_free = [0.0] * len(steps)
+    done = 0.0
+    for chunk in range(k):
+        n_c = per if chunk < k - 1 else nbytes_per_rank - per * (k - 1)
+        t = 0.0
+        for si, step in enumerate(steps):
+            dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
+            start = max(t, stage_free[si])
+            t = start + dur
+            stage_free[si] = t
+        done = max(done, t)
+    return done
+
+
 def memcpy_comparison(src: Cluster, dst: Cluster, nbytes: int) -> dict:
     """Fig. 3: time spent in memory copies per mechanism for one
     transfer. d2h+h2d (pageable host path) vs 2x d2d (hetccl path)."""
@@ -143,15 +204,25 @@ def memcpy_comparison(src: Cluster, dst: Cluster, nbytes: int) -> dict:
 
 def fit_alpha_beta(sizes: list[int], times: list[float]) -> tuple[float, float]:
     """Linear regression t = α + n/B over (size, time) pairs — the
-    paper's Fig. 11 synthesis; returns (alpha_s, bandwidth_Bps)."""
+    paper's Fig. 11 synthesis; returns (alpha_s, bandwidth_Bps).
+
+    Degenerate inputs are handled instead of crashing or going
+    negative: identical sizes carry no slope information (the fit
+    attributes the mean time to bandwidth through the origin), and
+    noisy small-payload fits whose intercept comes out below zero are
+    clamped to α = 0 — a negative launch latency is never physical."""
     n = len(sizes)
     assert n >= 2 and n == len(times)
     xs = [float(s) for s in sizes]
     mx = sum(xs) / n
     my = sum(times) / n
-    cov = sum((x - mx) * (y - my) for x, y in zip(xs, times))
     var = sum((x - mx) ** 2 for x in xs)
+    if var == 0.0:
+        if mx > 0.0 and my > 0.0:
+            return 0.0, mx / my
+        return max(0.0, my), float("inf")
+    cov = sum((x - mx) * (y - my) for x, y in zip(xs, times))
     slope = cov / var
-    alpha = my - slope * mx
+    alpha = max(0.0, my - slope * mx)
     beta = 1.0 / slope if slope > 0 else float("inf")
     return alpha, beta

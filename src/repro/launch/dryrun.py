@@ -253,7 +253,8 @@ def main():
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--mode", default=None,
-                    choices=["flat", "hier", "hier_pipelined", "hier_overlap",
+                    choices=["flat", "hier", "hier_pipelined",
+                             "hier_border_rs", "hier_overlap",
                              "hier_zero1", "fsdp"])
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: core.planner picks mode/chunks/compression "
@@ -290,8 +291,14 @@ def main():
                 if rec == "hier_overlap":
                     mode = "hier_overlap"
                 else:
+                    # per-bucket schedules resolve from the plan inside
+                    # the collectives; "hier" is the generic wiring and
+                    # "flat" the no-plan degenerate case
                     mode = chosen.mode if chosen.mode == "flat" else "hier"
             chunks, comp = chosen.n_chunks, chosen.compression
+            # the human-readable table replaces reading the raw summary
+            # dict out of the result JSON
+            print(plan.describe(), flush=True)
         res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
                          comm_mode=mode, sp=args.sp,
                          use_pallas=args.pallas, n_chunks=chunks,

@@ -34,6 +34,10 @@ CELLS = {
         # is free to recommend the chained hier_overlap executor when
         # its exposed comm time beats the sequential schedules above.
         ("it8_auto_overlap", ["--plan", "auto"]),
+        # border-communicator ReduceScatter schedule (DESIGN.md §9): the
+        # pod hop as an explicit RS+AG exchange over the cluster ring —
+        # the schedule-IR proof of generality, A/B'd against it1/it2.
+        ("it9_border_rs", ["--mode", "hier_border_rs"]),
     ],
     ("olmo-1b", "train_4k", "single"): [
         ("it0_base", ["--mode", "hier"]),

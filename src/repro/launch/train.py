@@ -53,7 +53,8 @@ def main(argv=None):
     ap.add_argument("--mesh", default="none",
                     choices=["none", "test", "production"])
     ap.add_argument("--mode", default="hier",
-                    choices=["flat", "hier", "hier_pipelined", "hier_overlap",
+                    choices=["flat", "hier", "hier_pipelined",
+                             "hier_border_rs", "hier_overlap",
                              "hier_zero1", "fsdp"])
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: let core.planner pick mode/chunks/compression "
@@ -141,6 +142,7 @@ def main(argv=None):
             msg += (f", {plan.exposed_comm_s*1e3:.2f} ms exposed "
                     f"(backward {plan.overlap.backward_compute_s*1e3:.2f} ms)")
         print(msg + f" validated={plan.validated}", flush=True)
+        print(plan.describe(), flush=True)
 
     # optimizer structure (fsdp / zero1) is not a per-bucket knob; the plan
     # only replaces the schedule choice within the generic hier path.

@@ -10,6 +10,11 @@ Communication modes (``TrainConfig.comm_mode``) — the §Perf A/B axis:
   hier_pipelined
               hier with the C2C step chunked + software-pipelined
               against the intra steps (paper §4.3.2, Fig. 9).
+  hier_border_rs
+              §4.3 border-communicator schedule: the pod hop becomes a
+              combining reduce-scatter + owned-shard redistribution over
+              the cluster ring (proportional NIC split; no Fig. 8 bounce
+              hop — wins on border-scarce clusters).
   hier_overlap
               AllReduceH per readiness-ordered gradient bucket
               (core/overlap.py): buckets chained in backward readiness
@@ -43,6 +48,7 @@ from repro.core import collectives as coll
 from repro.core.collectives import CommConfig
 from repro.core import compression
 from repro.core import overlap as overlap_lib
+from repro.core.schedule import STRUCTURAL_MODES, build_schedule
 from repro.models.model import Model
 from repro.parallel.sharding import Runtime, shard_map
 from . import loss as loss_lib
@@ -51,7 +57,9 @@ from . import optimizer as opt_lib
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    # flat|hier|hier_pipelined|hier_overlap|hier_zero1|fsdp
+    # any registered schedule mode (flat|hier|hier_pipelined|
+    # hier_border_rs|...) or a structural mode (hier_overlap|hier_zero1|
+    # fsdp) wrapping one — see core.schedule.STRUCTURAL_MODES
     comm_mode: str = "hier"
     dcn_compression: str | None = None  # None|bf16|int8 (pod hop only)
     n_chunks: int = 4                 # pipelined mode
@@ -71,10 +79,13 @@ class TrainConfig:
     def comm_config(self, rt: Runtime):
         if self.plan is not None:
             return self.plan
-        mode = {"flat": "flat", "hier": "hier",
-                "hier_pipelined": "hier_pipelined",
-                "hier_overlap": "hier",   # per-bucket schedule inside the chain
-                "hier_zero1": "hier", "fsdp": "hier"}[self.comm_mode]
+        # structural modes (overlap chain / ZeRO-1 / fsdp) wrap the hier
+        # schedule; every other comm_mode IS a schedule-builder mode —
+        # build once eagerly so an unknown mode fails here with the
+        # registry's error, not inside the jitted step
+        mode = STRUCTURAL_MODES.get(self.comm_mode, self.comm_mode)
+        build_schedule("all_reduce", mode, self.n_chunks,
+                       self.dcn_compression)
         return CommConfig(mode=mode, pod_axis=rt.pod_axis,
                           intra_axis=rt.dp_axis or "data",
                           n_chunks=self.n_chunks,

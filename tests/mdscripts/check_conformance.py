@@ -4,13 +4,15 @@ summed gradients as the flat fp32 baseline.
 mesh (pod=2, data=4), synthetic gradient pytree with stacked layers and
 top-level leaves (odd sizes so every padding path runs).  Matrix:
 
-    mode        ∈ {flat, hier, hier_pipelined, hier_overlap}
+    mode        ∈ {flat, hier, hier_pipelined, hier_border_rs,
+                   hier_overlap}
     n_chunks    ∈ {1, 2, 4}
     compression ∈ {None, bf16}          (DCN wire codec)
 
-plus int8 rows for the hierarchical modes at a loose tolerance (the
-codec is lossy; error feedback recovers it over steps, so one sync is
-only bounded by the per-block quantization error).
+plus int8 rows for the hier/pipelined/overlap modes at a loose
+tolerance (the codec is lossy; error feedback recovers it over steps,
+so one sync is only bounded by the per-block quantization error —
+hier_border_rs takes no int8 wire, its builder rejects the codec).
 
 Also the pod_axis=None × hier_pipelined regression: a 1-cluster config
 must fall back to the plain intra psum — no chunk loop in the lowered
@@ -89,7 +91,8 @@ def check(mode, n_chunks, compression):
           f"compression={str(compression):5s} maxerr {err:.2e}")
 
 
-for mode in ("flat", "hier", "hier_pipelined", "hier_overlap"):
+for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
+             "hier_overlap"):
     for n_chunks in (1, 2, 4):
         for compression in (None, "bf16"):
             check(mode, n_chunks, compression)

@@ -2,10 +2,10 @@
 reproduce the single-device trajectory on the same global batch.
 
 mesh (pod=2, data=2, model=2); qwen2.5-smoke (dense GQA) and
-mamba2-smoke (SSD).  Modes: flat, hier, hier_pipelined, hier_overlap,
-hier_zero1, fsdp (+int8 DCN compression variant checked for finite
-drift).  hier_overlap runs with a 1 MiB bucket cap so the smoke-sized
-models still produce a multi-bucket chain.
+mamba2-smoke (SSD).  Modes: flat, hier, hier_pipelined, hier_border_rs,
+hier_overlap, hier_zero1, fsdp (+int8 DCN compression variant checked
+for finite drift).  hier_overlap runs with a 1 MiB bucket cap so the
+smoke-sized models still produce a multi-bucket chain.
 """
 
 import os
@@ -82,8 +82,8 @@ def run_single(arch):
 for arch in ["qwen2.5-3b", "mamba2-2.7b", "mixtral-8x7b"]:
     ref = run_single(arch)
     print(f"{arch} single-device: {['%.4f' % l for l in ref]}")
-    for mode in ["flat", "hier", "hier_pipelined", "hier_overlap",
-                 "hier_zero1", "fsdp"]:
+    for mode in ["flat", "hier", "hier_pipelined", "hier_border_rs",
+                 "hier_overlap", "hier_zero1", "fsdp"]:
         got = run_mode(arch, mode)
         err = max(abs(a - b) for a, b in zip(got, ref))
         tol = 0.05 if arch != "mixtral-8x7b" else 0.12  # routing-drop jitter

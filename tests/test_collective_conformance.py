@@ -7,11 +7,13 @@ from _mdrun import run_mdscript
 
 
 def test_collective_conformance_matrix_8dev():
-    """flat/hier/hier_pipelined/hier_overlap × n_chunks {1,2,4} ×
-    compression {None, bf16} allclose to the flat fp32 baseline; int8
-    within lossy-codec tolerance; pod_axis=None pipelined regression."""
+    """flat/hier/hier_pipelined/hier_border_rs/hier_overlap × n_chunks
+    {1,2,4} × compression {None, bf16} allclose to the flat fp32
+    baseline; int8 within lossy-codec tolerance; pod_axis=None
+    pipelined regression."""
     out = run_mdscript("check_conformance.py")
     # every cell of the matrix actually ran
-    for mode in ("flat", "hier", "hier_pipelined", "hier_overlap"):
+    for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
+                 "hier_overlap"):
         assert out.count(f"OK {mode:15s}") >= 6, mode
     assert "fallback (no chunk loop)" in out

@@ -209,5 +209,6 @@ def test_dryrun_auto_plan_helper():
 
     plan, chosen = auto_plan("qwen2.5-3b", multi_pod=True)
     assert plan.buckets[0].candidate == chosen
-    assert chosen.mode in ("flat", "hier", "hier_pipelined")
+    assert chosen.mode in ("flat", "hier", "hier_pipelined",
+                           "hier_border_rs")
     assert plan.predicted_step_s > 0

@@ -1,0 +1,246 @@
+"""Schedule IR (DESIGN.md §9): builders, the pricing interpreter
+against the closed-form pieces, the simulation interpreter, and
+coverage of everything the planner can emit."""
+
+import dataclasses as dc
+
+import pytest
+
+from repro.core import cost_model, planner, schedule, topology, transport_sim
+
+MiB = 1 << 20
+
+
+def border_scarce_topo():
+    """Four single-node clusters, one HBM-fed 400 GB/s NIC each: the
+    Fig. 8 bounce (1.5n of received partials combining through ONE
+    border rank) dominates even the pipelined bottleneck stage — the
+    regime the border-communicator exchange exists for (§4.3)."""
+    G = 0.125e9
+    base = topology.Cluster("v0", n_nodes=1, devs_per_node=8,
+                            nics_per_node=1, nic_Bps=3200 * G,
+                            intra_Bps=100e9, tflops=100.0, d2d_Bps=819e9)
+    return topology.HetTopology(tuple(
+        dc.replace(base, name=f"v{i}") for i in range(4)))
+
+
+# ---------------------------------------------------------------------------
+# Builders / registry
+# ---------------------------------------------------------------------------
+
+def test_registered_modes_cover_all_comm_modes():
+    modes = schedule.registered_modes()
+    for m in ("flat", "hier", "hier_pipelined", "hier_border_rs"):
+        assert m in modes
+    # every structural wrapper must map onto a registered builder
+    for target in schedule.STRUCTURAL_MODES.values():
+        assert target in modes
+
+
+def test_build_schedule_unknown_mode_and_codec_raise():
+    with pytest.raises(ValueError, match="no schedule builder"):
+        schedule.build_schedule("all_reduce", "hier_nope")
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        schedule.build_schedule("all_reduce", "hier", compression="fp4")
+    with pytest.raises(ValueError, match="unknown collective"):
+        schedule.build_schedule("all_min", "hier")
+
+
+def test_chunkloop_only_above_one_chunk():
+    assert not schedule.build_schedule("all_reduce", "hier_pipelined", 1).pipelined
+    s = schedule.build_schedule("all_reduce", "hier_pipelined", 8)
+    assert s.pipelined
+    steps, k = s.unrolled()
+    assert k == 8
+    # the unrolled body is the hier decomposition
+    assert steps == schedule.build_schedule("all_reduce", "hier").steps
+
+
+def test_border_rs_schedule_structure():
+    s = schedule.build_schedule("all_reduce", "hier_border_rs")
+    kinds = [type(st) for st in s.steps]
+    assert kinds == [schedule.IntraReduceScatter, schedule.C2CRed,
+                     schedule.C2CCpy, schedule.IntraAllGather]
+    # no Fig. 8 bounce step — the point of the border exchange
+    assert not any(isinstance(st, schedule.BorderGather) for st in s.steps)
+    # the two border legs split the Table-7 all_reduce volume evenly
+    legs = [st for st in s.steps
+            if isinstance(st, (schedule.C2CRed, schedule.C2CCpy))]
+    assert [leg.vol_ratio for leg in legs] == [0.5, 0.5]
+    assert legs[0].scatter and legs[1].gather
+
+
+def test_border_rs_rejects_int8_wire():
+    with pytest.raises(ValueError, match="int8"):
+        schedule.build_schedule("all_reduce", "hier_border_rs",
+                                compression="int8")
+
+
+def test_border_rs_other_colls_fall_back_to_hier():
+    """A border-mode CommConfig stays usable on the ZeRO-1
+    reduce_scatter path: non-all_reduce colls keep the hier steps."""
+    s = schedule.build_schedule("reduce_scatter", "hier_border_rs")
+    assert s.steps == schedule.build_schedule("reduce_scatter", "hier").steps
+
+
+def test_compression_rides_the_c2c_steps():
+    s = schedule.build_schedule("all_reduce", "hier", compression="int8")
+    kinds = [type(st) for st in s.steps]
+    assert schedule.Compress in kinds and schedule.Decompress in kinds
+    (red,) = [st for st in s.steps if isinstance(st, schedule.C2CRed)]
+    assert red.wire_ratio == schedule.CODEC_WIRE_RATIO["int8"]
+
+
+# ---------------------------------------------------------------------------
+# Pricing interpreter vs the closed-form pieces
+# ---------------------------------------------------------------------------
+
+def test_hier_estimate_matches_closed_form_pieces():
+    """The wrapper delegates to the IR; pin its output to the Table-7
+    closed-form terms so a builder regression cannot hide behind the
+    delegation."""
+    topo = topology.paper_testbed()
+    n = 64 * MiB
+    est = cost_model.estimate_hier_collective(topo, "all_reduce", n)
+    alpha = max(c.alpha_hetccl_s for c in topo.clusters)
+    start = max(cost_model.ring_reduce_scatter_time(c, n)
+                for c in topo.clusters)
+    end = 0.0
+    for ci, c in enumerate(topo.clusters):
+        _, recv = cost_model.c2c_volume("all_reduce", n, topo, ci)
+        end = max(end, cost_model.ring_reduce_scatter_time(
+            c, recv / max(1, c.n_border))
+            + cost_model.ring_all_gather_time(c, n / c.n_ranks))
+    c2c = cost_model.c2c_step_time(topo, "all_reduce", n, alpha, 1)
+    assert est.start_s == pytest.approx(start, rel=1e-12)
+    assert est.end_s == pytest.approx(end, rel=1e-12)
+    assert est.c2c_s == pytest.approx(c2c, rel=1e-12)
+
+
+def test_every_collective_priceable_via_ir():
+    topo = topology.paper_testbed()
+    for coll in ("all_reduce", "all_gather", "reduce_scatter", "broadcast",
+                 "scatter", "reduce", "gather", "all_to_all", "send_recv"):
+        for k in (1, 4):
+            est = cost_model.estimate_hier_collective(topo, coll, 8 * MiB, k)
+            assert est.sequential_s >= 0.0
+            assert est.pipelined_s <= est.sequential_s * 1.001
+            assert est.n_chunks == k
+
+
+def test_every_planner_candidate_is_a_priceable_schedule():
+    """Satellite acceptance: every (coll, mode, n_chunks, compression)
+    the planner can emit builds a schedule whose step-priced time is
+    exactly what the planner scores — and, for the hier family, what
+    ``estimate_hier_collective`` returns."""
+    topo = topology.paper_testbed()
+    n = 16 * MiB
+    for coll in ("all_reduce", "reduce_scatter"):
+        scheds = planner._candidate_schedules(coll, 8, (None, "bf16", "int8"))
+        assert any(s.mode == "flat" for s in scheds)
+        if coll == "all_reduce":
+            assert any(s.mode == "hier_border_rs" for s in scheds)
+            assert not any(s.mode == "hier_border_rs"
+                           and s.compression == "int8" for s in scheds)
+        for sched in scheds:
+            t, c2c = planner._price_schedule(topo, sched, n)
+            assert t > 0.0
+            cand = planner.Candidate.of(sched)
+            rebuilt = cand.schedule(coll)
+            assert rebuilt == sched          # candidates round-trip the IR
+            if sched.mode == "flat":
+                continue
+            est = cost_model.estimate_schedule(topo, sched, n)
+            expect = est.pipelined_s if sched.pipelined else est.sequential_s
+            assert t == expect
+            assert c2c == est.c2c_s
+            if sched.compression is None and sched.mode in ("hier",
+                                                            "hier_pipelined"):
+                ref = cost_model.estimate_hier_collective(topo, coll, n,
+                                                          sched.n_chunks)
+                assert est.sequential_s == pytest.approx(ref.sequential_s,
+                                                         rel=1e-12)
+
+
+def test_flat_schedule_refused_by_phase_pricer():
+    with pytest.raises(ValueError, match="mechanism"):
+        cost_model.estimate_schedule(
+            topology.paper_testbed(),
+            schedule.build_schedule("all_reduce", "flat"), 1 * MiB)
+
+
+def test_border_rs_beats_hier_on_border_scarce_topology():
+    topo = border_scarce_topo()
+    n = 256 * MiB
+    hier = cost_model.estimate_hier_collective(topo, "all_reduce", n)
+    border = cost_model.estimate_schedule(
+        topo, schedule.build_schedule("all_reduce", "hier_border_rs"), n)
+    assert border.sequential_s < hier.sequential_s
+    # same total wire volume, so the win is the removed bounce hop
+    assert border.end_s < hier.end_s
+
+
+# ---------------------------------------------------------------------------
+# Simulation interpreter
+# ---------------------------------------------------------------------------
+
+def test_simulate_schedule_tracks_closed_form():
+    topo = topology.paper_testbed()
+    for mode, k in (("hier", 1), ("hier_border_rs", 1)):
+        sched = schedule.build_schedule("all_reduce", mode, k)
+        for n in (4 * MiB, 64 * MiB):
+            sim = transport_sim.simulate_schedule(sched, topo, n)
+            est = cost_model.estimate_schedule(topo, sched, n)
+            assert 0.5 <= sim / est.sequential_s <= 2.0, (mode, n)
+
+
+def test_simulate_schedule_pipeline_overlaps_stages():
+    topo = topology.paper_testbed()
+    n = 256 * MiB
+    seq = transport_sim.simulate_schedule(
+        schedule.build_schedule("all_reduce", "hier"), topo, n)
+    pipe = transport_sim.simulate_schedule(
+        schedule.build_schedule("all_reduce", "hier_pipelined", 8), topo, n)
+    assert pipe < seq
+    # the sim pipelines at *step* granularity (bounce and AllGather are
+    # separate stages), so its steady state is bounded below by the
+    # largest single step — the start ReduceScatter here — not by the
+    # closed form's lumped end phase
+    est = cost_model.estimate_schedule(
+        topo, schedule.build_schedule("all_reduce", "hier"), n)
+    assert pipe >= est.start_s * 0.95
+
+
+def test_simulate_schedule_monotone_in_payload():
+    topo = topology.paper_testbed()
+    sched = schedule.build_schedule("all_reduce", "hier_pipelined", 4)
+    times = [transport_sim.simulate_schedule(sched, topo, n)
+             for n in (1 * MiB, 8 * MiB, 64 * MiB)]
+    assert times == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# Planner end-to-end: the border schedule is selectable
+# ---------------------------------------------------------------------------
+
+def test_planner_selects_border_rs_where_it_wins():
+    topo = border_scarce_topo()
+    p = planner.plan(topo, [256 * MiB], flat_mechanism="native",
+                     compressions=(None, "bf16"))
+    b = p.buckets[0]
+    assert b.candidate.mode == "hier_border_rs"
+    assert b.validated
+    cfg = p.config_for(256 * MiB)
+    assert cfg.mode == "hier_border_rs"
+    assert cfg.compression in (None, "bf16")
+
+
+def test_describe_is_human_readable():
+    p = planner.plan(topology.paper_testbed(), [1 * MiB, 64 * MiB])
+    text = p.describe()
+    assert "CommPlan[all_reduce]" in text
+    assert "pred ms" in text and "sim c2c" in text
+    # one row per bucket plus header/rule lines
+    assert len(text.splitlines()) >= 2 + len(p.buckets)
+    for b in p.buckets:
+        assert b.candidate.mode in text

@@ -59,6 +59,17 @@ def test_proportional_split_properties(total, bws, gran):
 def test_proportional_split_zero_bytes():
     assert proportional_split(0, [1e9, 2e9, 3e9]) == [0, 0, 0]
     assert proportional_split(0, [5.0], granularity=4096) == [0]
+    # zero bytes short-circuit even when no link has bandwidth
+    assert proportional_split(0, [0.0, 0.0]) == [0, 0]
+
+
+def test_proportional_split_all_zero_bandwidth_raises():
+    """All-dead links with bytes to place is a caller error — a clear
+    ValueError, not a ZeroDivisionError from the proportion math."""
+    with pytest.raises(ValueError, match="zero"):
+        proportional_split(1 << 20, [0.0, 0.0, 0.0])
+    with pytest.raises(ValueError, match="zero"):
+        proportional_split(1, [0.0])
 
 
 def test_proportional_split_single_link():

@@ -100,3 +100,38 @@ def test_sim_vs_cost_model_consistency(topo):
         sim = transport_sim.simulate_p2p(nv, v3, n, "hetccl").time_s
         model = cost_model.p2p_time(nv, v3, n, "hetccl")
         assert 0.5 <= sim / model <= 2.0, (n, sim, model)
+
+
+def test_fit_alpha_beta_zero_variance_sizes():
+    """Identical sizes used to ZeroDivisionError; now the mean time is
+    attributed to bandwidth through the origin."""
+    alpha, beta = transport_sim.fit_alpha_beta([1 << 20] * 4,
+                                               [1e-3, 1.1e-3, 0.9e-3, 1e-3])
+    assert alpha == 0.0
+    assert beta == pytest.approx((1 << 20) / 1e-3, rel=1e-6)
+    # all-zero sizes (an empty calibration sweep) stay finite too
+    alpha, beta = transport_sim.fit_alpha_beta([0, 0], [1e-3, 1e-3])
+    assert alpha == pytest.approx(1e-3)
+    assert beta == float("inf")
+
+
+def test_fit_alpha_beta_clamps_negative_alpha():
+    """A noisy small-payload sweep whose regression intercept comes out
+    below zero must clamp to α = 0 (negative launch latency is never
+    physical) while the slope/bandwidth stays a sane fit."""
+    sizes = [1 << 10, 1 << 12, 1 << 14]
+    bw = 1e9
+    times = [s / bw for s in sizes]
+    times[0] *= 0.2          # noise pulling the intercept negative
+    alpha, beta = transport_sim.fit_alpha_beta(sizes, times)
+    assert alpha == 0.0
+    assert 0.5 * bw <= beta <= 2.0 * bw
+
+
+def test_fit_alpha_beta_recovers_clean_line():
+    sizes = [1 << 16, 1 << 20, 8 << 20]
+    alpha_true, bw = 2e-4, 5e9
+    times = [alpha_true + s / bw for s in sizes]
+    alpha, beta = transport_sim.fit_alpha_beta(sizes, times)
+    assert alpha == pytest.approx(alpha_true, rel=1e-9)
+    assert beta == pytest.approx(bw, rel=1e-9)

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""CI gate: every CommConfig mode string in the source tree must map to
+a registered schedule builder (DESIGN.md §9).
+
+The schedule IR exists so one decomposition feeds the executor, the
+cost model, and the simulator.  The failure mode it prevents — a mode
+string handled by one layer but unknown to the others — would silently
+re-grow if someone adds `mode="hier_xyz"` in the collectives or a
+launcher without registering a builder.  This script scans every quoted
+mode-shaped token (``flat`` / ``hier*``) under ``src/repro`` and fails
+unless it is either a registered builder mode
+(``schedule.registered_modes()``) or a declared structural wrapper
+(``schedule.STRUCTURAL_MODES``, which must itself map onto builders).
+
+``core/schedule.py`` is pure stdlib, so this gate runs without JAX
+installed (it rides the docs/gates CI job).
+
+Run:  python tools/check_schedule_cover.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_schedule():
+    """Load core/schedule.py directly — `from repro.core import
+    schedule` would execute the package __init__, which imports the
+    collectives and therefore jax; this gate must run with no deps."""
+    path = ROOT / "src" / "repro" / "core" / "schedule.py"
+    spec = importlib.util.spec_from_file_location("hetccl_schedule", path)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclasses resolves cls.__module__ through sys.modules at class
+    # creation time — register before exec
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+schedule = _load_schedule()
+
+# A quoted token that looks like a comm mode: "flat" or "hier" with
+# optional _word suffixes.  Prose words like "hierarchical" don't match
+# (no closing quote right after the stem), and unquoted mentions in
+# docstrings are ignored.
+MODE_RE = re.compile(r"""["'](flat|hier(?:_[a-z0-9]+)*)["']""")
+
+
+def scan(root: pathlib.Path) -> dict[str, list[str]]:
+    found: dict[str, list[str]] = {}
+    for path in sorted(root.rglob("*.py")):
+        text = path.read_text()
+        for m in MODE_RE.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            found.setdefault(m.group(1), []).append(
+                f"{path.relative_to(ROOT)}:{line}")
+    return found
+
+
+def main() -> int:
+    registered = set(schedule.registered_modes())
+    structural = schedule.STRUCTURAL_MODES
+    bad_structural = sorted(v for v in structural.values()
+                            if v not in registered)
+    if bad_structural:
+        print("FAIL: STRUCTURAL_MODES map onto unregistered builders: "
+              f"{bad_structural}")
+        return 1
+    found = scan(ROOT / "src" / "repro")
+    covered = registered | set(structural)
+    missing = {m: sites for m, sites in found.items() if m not in covered}
+    print(f"registered schedule builders : {sorted(registered)}")
+    print(f"structural wrapper modes     : {sorted(structural)}")
+    print(f"mode strings found in source : {sorted(found)}")
+    if missing:
+        print("\nFAIL: mode strings without a registered schedule builder "
+              "(register one in src/repro/core/schedule.py or add a "
+              "STRUCTURAL_MODES entry):")
+        for mode, sites in sorted(missing.items()):
+            for s in sites[:5]:
+                print(f"  {mode!r}  {s}")
+        return 1
+    print("OK: every mode string has a schedule builder")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
