@@ -3,9 +3,11 @@
 Hierarchical heterogeneous collectives (topology abstraction,
 cluster-level primitives, Algorithm-1 breakdowns, pipelined execution),
 the α–β cost model, DCN-hop compression, the discrete-event transport
-simulator for the paper's §4.1 mechanism, and the cost-model-driven
+simulator for the paper's §4.1 mechanism, the cost-model-driven
 communication planner that turns the two models into per-bucket
-``CommConfig`` decisions (DESIGN.md §6).
+``CommConfig`` decisions (DESIGN.md §6), and the compute-skew-aware
+workload partitioner that jointly optimizes the uneven batch split
+with the comm plan (DESIGN.md §10).
 """
 
 from .collectives import (  # noqa: F401
@@ -27,12 +29,18 @@ from .planner import (  # noqa: F401
     plan,
     plan_for_param_bytes,
 )
+from .skew import (  # noqa: F401
+    SkewPlan,
+    SkewSplit,
+)
 from .topology import (  # noqa: F401
     Cluster,
     HetTopology,
     LinkSpec,
+    integer_split,
     paper_testbed,
     proportional_split,
+    three_vendor_testbed,
     tpu_multipod,
     tpu_pod_cluster,
 )

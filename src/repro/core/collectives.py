@@ -52,6 +52,12 @@ class CommConfig:
                     bounce hop on border-scarce clusters).
     compression: optional codec for the pod (DCN) hop only — ``bf16`` or
       ``int8`` (error feedback handled by the caller); beyond-paper.
+    cluster_weights: per-pod gradient weights for the skew-aware uneven
+      batch split (``core.skew``; DESIGN.md §10), normalized to mean 1
+      over pods — one entry per pod-axis index.  The combining entry
+      points pre-scale the payload locally (schedule IR ``Scale`` step)
+      so every reduction stays the intrinsic vendor collective; ``None``
+      means the even split (no scaling, bit-identical to before).
     """
 
     mode: str = "hier"
@@ -59,6 +65,7 @@ class CommConfig:
     intra_axis: str = "data"
     n_chunks: int = 4
     compression: str | None = None
+    cluster_weights: tuple[float, ...] | None = None
 
     @property
     def dp_axes(self) -> tuple[str, ...]:
@@ -74,6 +81,28 @@ def resolve_config(cfg, nbytes: int) -> CommConfig:
     imports core.planner (which imports this module)."""
     fn = getattr(cfg, "config_for", None)
     return cfg if fn is None else fn(int(nbytes))
+
+
+def _apply_cluster_weight(x: jax.Array, cfg: CommConfig) -> jax.Array:
+    """Scale by this device's per-cluster gradient weight (uneven-shard
+    weighted reduction, DESIGN.md §10).  The weight is constant within a
+    cluster, so one local multiply before the first combining step keeps
+    every downstream reduction an intrinsic vendor collective."""
+    if cfg.cluster_weights is None:
+        return x
+    w = jnp.asarray(cfg.cluster_weights, x.dtype)
+    if cfg.pod_axis is None:
+        if w.shape[0] != 1:
+            raise ValueError(
+                f"cluster_weights has {w.shape[0]} entries but the config "
+                "has no pod axis (single cluster)")
+        return x * w[0]
+    psize = primitives.axis_size(cfg.pod_axis)
+    if w.shape[0] != psize:
+        raise ValueError(
+            f"cluster_weights has {w.shape[0]} entries but the "
+            f"{cfg.pod_axis!r} axis has {psize} pods")
+    return x * w[lax.axis_index(cfg.pod_axis)]
 
 
 def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -108,6 +137,8 @@ def _wire_cast(buf: jax.Array, codec: str | None, fn) -> jax.Array:
 def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
                ctx: _ExecCtx) -> jax.Array:
     intra, pod = cfg.intra_axis, cfg.pod_axis
+    if isinstance(step, schedule_ir.Scale):
+        return _apply_cluster_weight(buf, cfg)
     if isinstance(step, schedule_ir.Compress):
         ctx.codec = step.codec
         return buf
@@ -186,12 +217,14 @@ def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
     cfg = resolve_config(cfg, x.nbytes)
     sched = schedule_ir.build_schedule("all_reduce", cfg.mode, cfg.n_chunks,
                                        cfg.compression)
+    if cfg.cluster_weights is not None:
+        sched = schedule_ir.with_cluster_scale(sched)
     if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
-        return lax.psum(x, cfg.dp_axes)
+        return lax.psum(_apply_cluster_weight(x, cfg), cfg.dp_axes)
     if cfg.pod_axis is None and sched.pipelined:
         # Degenerate 1-cluster pipeline: there is no C2C phase to hide,
         # so the chunk loop would only add α costs.  Plain intra psum.
-        return lax.psum(x, cfg.dp_axes)
+        return lax.psum(_apply_cluster_weight(x, cfg), cfg.dp_axes)
     isize = primitives.axis_size(cfg.intra_axis)
     flat, pad = _pad_to(x.astype(x.dtype), isize)
     out = _exec_steps(sched.steps, flat, cfg)
@@ -210,8 +243,11 @@ def hier_psum_scatter(x: jax.Array, cfg: CommConfig) -> jax.Array:
     flat, _ = _pad_to(x, isize)
     sched = schedule_ir.build_schedule("reduce_scatter", cfg.mode,
                                        cfg.n_chunks, cfg.compression)
+    if cfg.cluster_weights is not None:
+        sched = schedule_ir.with_cluster_scale(sched)
     if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
-        shard = primitives.hom_reduce_scatter(flat, intra)
+        shard = primitives.hom_reduce_scatter(
+            _apply_cluster_weight(flat, cfg), intra)
         if cfg.pod_axis is not None:
             shard = lax.psum(shard, cfg.pod_axis)
         return shard

@@ -204,7 +204,7 @@ def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
         # Reduce hop to the target — charge its volume for combiners.
         _, recv_vol = c2c_volume(step.coll, int(n), topo, ci)
         return ring_reduce_scatter_time(c, recv_vol / max(1, c.n_border))
-    return 0.0  # Compress/Decompress: free in the α–β model
+    return 0.0  # Scale/Compress/Decompress: free in the α–β model
 
 
 def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
@@ -303,8 +303,55 @@ def optimal_chunks(topo: HetTopology, coll: str, nbytes_per_rank: int,
 def aggregate_flops(topo: HetTopology, mfu: float = 0.4) -> float:
     """Deliverable FLOP/s of the whole fleet at the given MFU — the
     compute-side roofline term used throughout the figure models
-    (fig16/fig17 price compute as flops / (Σ ranks·tflops·MFU))."""
+    (fig16/fig17 price compute as flops / (Σ ranks·tflops·MFU)).
+
+    NOTE: *optimistic* on skewed fleets.  Summing throughputs assumes
+    the workload is split proportionally to each cluster's speed; with
+    the even per-rank batch split the weakest vendor group is the
+    straggler and the real step time is bounded by
+    :func:`straggler_step_time` (DESIGN.md §10), which this aggregate
+    can undershoot by the fleet's tflops spread."""
     return sum(c.n_ranks * c.tflops * 1e12 for c in topo.clusters) * mfu
+
+
+def cluster_compute_time(c: Cluster, flops: float, mfu: float = 0.4) -> float:
+    """Wall seconds one cluster needs for ``flops`` at the given MFU."""
+    agg = c.n_ranks * c.tflops * 1e12 * mfu
+    if agg <= 0.0 or flops <= 0.0:
+        return 0.0
+    return flops / agg
+
+
+def straggler_step_time(topo: HetTopology, step_flops: float,
+                        shares=None, comm_s=0.0,
+                        mfu: float = 0.4) -> float:
+    """Per-cluster step-time roofline ``max_c(compute_c + comm_c)``
+    (DESIGN.md §10) — the model that replaces the aggregate-flops
+    optimism for end-to-end step pricing.
+
+    ``shares`` is each cluster's fraction of the global batch; the
+    default is the even per-rank split (``share_c = N_c / G`` — every
+    device the same number of samples), under which the weakest vendor
+    group paces the step.  ``comm_s`` is the exposed communication time
+    — a scalar for the synchronous collective case or a per-cluster
+    sequence.  The skew-aware partitioner (``core.skew``) minimizes this
+    quantity over integer microbatch splits."""
+    G = max(1, topo.n_ranks)
+    if shares is None:
+        shares = [c.n_ranks / G for c in topo.clusters]
+    if isinstance(comm_s, (int, float)):
+        comm = [float(comm_s)] * topo.n_clusters
+    else:
+        comm = [float(x) for x in comm_s]
+    if len(shares) != topo.n_clusters or len(comm) != topo.n_clusters:
+        raise ValueError(
+            f"straggler_step_time: need one share and one comm term per "
+            f"cluster ({topo.n_clusters}); got {len(list(shares))} shares, "
+            f"{len(comm)} comm terms")
+    t = 0.0
+    for c, s, cm in zip(topo.clusters, shares, comm):
+        t = max(t, cluster_compute_time(c, step_flops * float(s), mfu) + cm)
+    return t
 
 
 def backward_compute_time(topo: HetTopology, step_flops: float,

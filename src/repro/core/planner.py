@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any, Sequence
 
 from . import cost_model, transport_sim
 from . import schedule as schedule_ir
@@ -180,6 +181,13 @@ class CommPlan:
     *readiness order* (``bucket_order`` is the execution order over
     ``buckets``) and ``overlap`` carries the exposed-time report the
     schedule was optimized for.
+
+    When planned with ``skew=`` (a ``core.skew.SkewSplit``) the plan
+    carries the uneven batch split it was scored under: ``compute_s``
+    holds the per-cluster compute times, ``predicted_straggler_s`` is
+    the straggler objective the candidates were ranked by, and
+    ``cluster_weights`` are the per-pod gradient weights every emitted
+    ``CommConfig`` threads into the weighted reduction (DESIGN.md §10).
     """
 
     topology: HetTopology          # the topology the times were priced on
@@ -190,6 +198,9 @@ class CommPlan:
     buckets: tuple[BucketPlan, ...]
     bucket_order: tuple[int, ...] = ()
     overlap: OverlapReport | None = None
+    skew: Any = None               # core.skew.SkewSplit (duck-typed)
+    compute_s: tuple[float, ...] = ()
+    cluster_weights: tuple[float, ...] | None = None
 
     @property
     def dp_axes(self) -> tuple[str, ...]:
@@ -210,6 +221,15 @@ class CommPlan:
         if self.overlap is not None:
             return self.overlap.exposed_comm_s
         return self.predicted_step_s
+
+    @property
+    def predicted_straggler_s(self) -> float:
+        """The skew objective ``max_c(compute_c) + exposed comm``
+        (cost_model.straggler_step_time with this plan's comm term);
+        without per-cluster compute times it degenerates to the exposed
+        comm time alone."""
+        comp = max(self.compute_s) if self.compute_s else 0.0
+        return comp + self.exposed_comm_s
 
     @property
     def validated(self) -> bool:
@@ -245,7 +265,8 @@ class CommPlan:
         c = b.candidate
         return CommConfig(mode=c.mode, pod_axis=self.pod_axis,
                           intra_axis=self.intra_axis,
-                          n_chunks=c.n_chunks, compression=c.compression)
+                          n_chunks=c.n_chunks, compression=c.compression,
+                          cluster_weights=self.cluster_weights)
 
     def summary(self) -> dict:
         """JSON-serializable description (dryrun/hillclimb result logs)."""
@@ -260,6 +281,14 @@ class CommPlan:
                         if self.overlap is not None else None),
             "validated": self.validated,
             "n_clusters": self.topology.n_clusters,
+            "skew": (None if not self.compute_s else {
+                "microbatches": (list(self.skew.microbatches)
+                                 if self.skew is not None else None),
+                "cluster_weights": (list(self.cluster_weights)
+                                    if self.cluster_weights else None),
+                "compute_s": list(self.compute_s),
+                "predicted_straggler_s": self.predicted_straggler_s,
+            }),
             "buckets": [
                 {"nbytes": b.nbytes, "mode": b.candidate.mode,
                  "n_chunks": b.candidate.n_chunks,
@@ -304,6 +333,12 @@ class CommPlan:
                 f"total comm {o.total_comm_s * 1e3:.2f} ms, exposed "
                 f"{o.exposed_comm_s * 1e3:.2f} ms "
                 f"({o.hidden_frac * 100:.0f}% hidden)")
+        if self.compute_s:
+            mbs = (self.skew.describe() if self.skew is not None else "-")
+            comp = "/".join(f"{c * 1e3:.1f}" for c in self.compute_s)
+            lines.append(
+                f"skew: microbatches {mbs}, compute {comp} ms/cluster, "
+                f"straggler step {self.predicted_straggler_s * 1e3:.2f} ms")
         return "\n".join(lines)
 
 
@@ -552,6 +587,8 @@ def plan(topo: HetTopology, bucket_sizes, *,
          try_balanced: bool = True,
          chunk_bytes: int = 4 << 20,
          backward_compute_s: float | None = None,
+         skew: Any = None,
+         skew_compute_s: Sequence[float] | None = None,
          _sim_cache: dict | None = None) -> CommPlan:
     """Plan the communication schedule for a list of gradient buckets.
 
@@ -586,6 +623,13 @@ def plan(topo: HetTopology, bucket_sizes, *,
         comm channel against the compute timeline, optimizes *exposed*
         rather than total comm time (``plan_bucket_overlap``), and
         attaches an ``OverlapReport`` to the returned plan.
+      skew / skew_compute_s: the uneven batch split the plan executes
+        under (``core.skew.SkewSplit``) and its per-cluster compute
+        times (``skew.compute_times``).  Candidates are then scored by
+        the *straggler* step time — max per-cluster compute plus the
+        exposed comm term (DESIGN.md §10) — and the plan carries the
+        split's per-pod gradient weights so every ``config_for`` result
+        executes the weighted reduction.
       _sim_cache: event-simulator memo shared across calls — launchers
         that plan twice (overlap buckets, then a monolithic fallback)
         pass one dict so identical C2C transfers are simulated once.
@@ -604,6 +648,10 @@ def plan(topo: HetTopology, bucket_sizes, *,
 
     kw = dict(max_chunks=max_chunks, compressions=compressions, tol=tol,
               flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes)
+    skew_fields = dict(
+        skew=skew,
+        compute_s=tuple(float(x) for x in (skew_compute_s or ())),
+        cluster_weights=(tuple(skew.weights) if skew is not None else None))
     best: CommPlan | None = None
     best_score: tuple | None = None
     sim_cache: dict = {} if _sim_cache is None else _sim_cache
@@ -614,9 +662,11 @@ def plan(topo: HetTopology, bucket_sizes, *,
                 plan_bucket(t, coll, n, _sim_cache=sim_cache, **kw)
                 for n in sizes)
             cand = CommPlan(t, balanced, coll, pod_axis, intra_axis, buckets,
-                            bucket_order=order)
-            # prefer fully validated plans; break ties on predicted time
-            score = (cand.validated, -cand.predicted_step_s)
+                            bucket_order=order, **skew_fields)
+            # prefer fully validated plans; break ties on the straggler
+            # objective (== predicted time when no skew compute is given)
+            score = (cand.validated, -cand.predicted_straggler_s,
+                     -cand.predicted_step_s)
         else:
             # readiness times: backward FLOPs are proportional to the
             # parameter bytes being differentiated, so bucket i's grads
@@ -651,9 +701,10 @@ def plan(topo: HetTopology, bucket_sizes, *,
                 monolithic_comm_s=mono.predicted_s)
             cand = CommPlan(t, balanced, coll, pod_axis, intra_axis,
                             tuple(buckets_l), bucket_order=order,
-                            overlap=report)
-            # exposed time is the objective; total time breaks ties
-            score = (cand.validated, -report.exposed_comm_s,
+                            overlap=report, **skew_fields)
+            # the straggler objective (= exposed time + any per-cluster
+            # compute) drives the choice; total time breaks ties
+            score = (cand.validated, -cand.predicted_straggler_s,
                      -cand.predicted_step_s)
         if best_score is None or score > best_score:
             best, best_score = cand, score

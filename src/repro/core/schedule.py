@@ -164,6 +164,18 @@ class Decompress(Step):
 
 
 @dataclasses.dataclass(frozen=True)
+class Scale(Step):
+    """Local pre-scale of the payload by this cluster's gradient weight
+    (``CommConfig.cluster_weights`` — the uneven-shard weighted
+    reduction of the skew-aware partitioner, DESIGN.md §10).  The weight
+    is constant within a cluster, so one pointwise multiply before the
+    first combining step makes every downstream reduction a plain
+    *intrinsic vendor* collective — no custom weighted reduce-op crosses
+    any fabric.  Free for the pricer and the simulator (it is a local
+    FLOP, not traffic)."""
+
+
+@dataclasses.dataclass(frozen=True)
 class Flat(Step):
     """The non-hierarchical baseline: one native collective spanning
     every data-parallel axis (the homogeneous-library emulation).
@@ -214,6 +226,19 @@ class Schedule:
             else:
                 out.append(s)
         return tuple(out), k
+
+
+def with_cluster_scale(sched: Schedule) -> Schedule:
+    """Weighted-reduction variant of ``sched``: prepend the
+    :class:`Scale` step.  A schedule-level wrapper rather than a builder
+    — the weights themselves are runtime values carried by the
+    ``CommConfig``, not schedule structure, so every registered mode
+    gains a weighted variant with no new builder (the
+    ``tools/check_schedule_cover.py`` skew matrix asserts exactly
+    that)."""
+    if any(isinstance(s, Scale) for s in sched.steps):
+        return sched
+    return dataclasses.replace(sched, steps=(Scale("start"),) + sched.steps)
 
 
 # ---------------------------------------------------------------------------

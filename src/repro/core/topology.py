@@ -173,6 +173,40 @@ def proportional_split(total_bytes: int, bandwidths: Sequence[float],
     return out
 
 
+def integer_split(total: int, weights: Sequence[float],
+                  floor: int = 0) -> list[int]:
+    """Largest-remainder integer split of ``total`` items proportionally
+    to ``weights``, every entry at least ``floor`` (the workload-side
+    sibling of :func:`proportional_split`: microbatches over clusters,
+    samples over hosts).  Deterministic: after each entry's floor and
+    integer quota, leftover units go to the largest fractional parts,
+    ties broken toward the larger weight, then the lower index.  The
+    result is monotone in the weights (a heavier entry never receives
+    less) and ``sum(result) == total``.
+
+    Raises ``ValueError`` when ``total`` cannot cover the floors or all
+    weights are zero."""
+    k = len(weights)
+    assert k > 0 and total >= 0
+    if total < floor * k:
+        raise ValueError(
+            f"integer_split: cannot give {k} entries a floor of {floor} "
+            f"out of {total} items")
+    tot_w = float(sum(weights))
+    if tot_w <= 0.0:
+        raise ValueError("integer_split: all weights are zero")
+    spare = total - floor * k
+    quotas = [spare * (float(w) / tot_w) for w in weights]
+    out = [floor + int(q) for q in quotas]
+    rem = total - sum(out)
+    order = sorted(range(k),
+                   key=lambda i: (-(quotas[i] - int(quotas[i])),
+                                  -weights[i], i))
+    for i in range(rem):
+        out[order[i % k]] += 1
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Presets
 # ---------------------------------------------------------------------------
@@ -190,6 +224,21 @@ def paper_testbed() -> HetTopology:
         Cluster("vendor3", n_nodes=4, devs_per_node=8, nics_per_node=8,
                 nic_Bps=400 * G, intra_Bps=240e9 / 8, tflops=200.0),
     ))
+
+
+def three_vendor_testbed(tflops_ratio: float = 4.0) -> HetTopology:
+    """Default 3-vendor skew topology (DESIGN.md §10): three equal-size
+    vendor groups (2 nodes x 8 devices, 8 x 200 Gbps NICs each) whose
+    per-device tflops span ``tflops_ratio`` geometrically — deliberately
+    comm-symmetric so partitioner experiments isolate compute skew from
+    bandwidth skew."""
+    G = 0.125e9
+    r = max(1.0, float(tflops_ratio))
+    tf = (100.0 * r, 100.0 * math.sqrt(r), 100.0)
+    return HetTopology(tuple(
+        Cluster(f"vendor{i}", n_nodes=2, devs_per_node=8, nics_per_node=8,
+                nic_Bps=200 * G, intra_Bps=300e9, tflops=t)
+        for i, t in enumerate(tf)))
 
 
 # TPU v5e constants used throughout the roofline analysis (system prompt).

@@ -162,7 +162,7 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
             nxt = topo.clusters[(ci + 1) % C]
             t = max(t, simulate_c2c_cpy(c, nxt, vol, mech, chunk_bytes))
         return t
-    return 0.0  # Compress / Decompress
+    return 0.0  # Scale / Compress / Decompress
 
 
 def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
@@ -190,6 +190,55 @@ def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
             t = start + dur
             stage_free[si] = t
         done = max(done, t)
+    return done
+
+
+def simulate_step(topo: HetTopology, sched: schedule_ir.Schedule,
+                  nbytes_per_rank: int, compute_s,
+                  mechanism: str = "hetccl",
+                  chunk_bytes: int = 4 << 20) -> float:
+    """End-to-end training-step event simulation with per-cluster
+    compute stages (DESIGN.md §10): cluster ``c``'s gradients only exist
+    after ``compute_s[c]`` seconds, so its intra phases run on a
+    per-cluster clock — a fast vendor group starts its ReduceScatter
+    while the straggler is still computing — and every C2C step is
+    synchronous, starting when the *last* cluster reaches it (paper
+    §4.4).  That synchronization point is what makes compute skew
+    visible end to end: with the even batch split the weakest cluster
+    gates every cross-cluster exchange.  Chunks pipeline through the
+    per-(step, cluster) stage resources exactly as in
+    ``simulate_schedule``.  Returns seconds."""
+    from . import cost_model  # local: keeps the module importable alone
+    C = topo.n_clusters
+    comp = [float(x) for x in compute_s]
+    if len(comp) != C:
+        raise ValueError(f"simulate_step: need one compute time per "
+                         f"cluster ({C}); got {len(comp)}")
+    steps, k = sched.unrolled()
+    k = max(1, min(k, nbytes_per_rank))
+    per = max(1, nbytes_per_rank // k)
+    stage_free = [[0.0] * C for _ in steps]
+    done = max(comp, default=0.0)
+    for chunk in range(k):
+        n_c = per if chunk < k - 1 else nbytes_per_rank - per * (k - 1)
+        t = list(comp)
+        for si, step in enumerate(steps):
+            if isinstance(step, (schedule_ir.IntraReduceScatter,
+                                 schedule_ir.IntraAllGather,
+                                 schedule_ir.IntraBcast,
+                                 schedule_ir.BorderGather)):
+                for ci in range(C):
+                    dur = cost_model._intra_step_time(step, topo, ci, n_c)
+                    t[ci] = max(t[ci], stage_free[si][ci]) + dur
+                    stage_free[si][ci] = t[ci]
+            elif isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
+                                   schedule_ir.Flat)):
+                dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
+                end = max(max(t), max(stage_free[si])) + dur
+                t = [end] * C
+                stage_free[si] = [end] * C
+            # Scale / Compress / Decompress: free
+        done = max(done, max(t))
     return done
 
 

@@ -1,1 +1,7 @@
-from .pipeline import DataConfig, Prefetcher, batches, synth_batch  # noqa: F401
+from .pipeline import (  # noqa: F401
+    DataConfig,
+    Prefetcher,
+    batches,
+    shares_for_hosts,
+    synth_batch,
+)

@@ -6,6 +6,13 @@ elastic: after a resize, host h of H' reads shard h/H' of the same
 global stream, so resuming at step s reproduces the exact global batch
 regardless of topology (the elastic-restore contract).
 
+Uneven sharding (the skew-aware workload partitioner, DESIGN.md §10):
+``host_shares`` assigns each host an explicit sample count — fast
+vendor groups read a larger slice of the same global batch.  Purity in
+(seed, step, host) is preserved; only the per-host shapes change, and
+``shares_for_hosts`` converts a throughput split (e.g.
+``core.skew.SkewSplit.shares``) into integer per-host counts.
+
 Prefetch runs in a daemon thread with a bounded queue; a slow storage
 read (simulated via ``inject_delay_s`` in tests) only stalls training
 once the queue drains — and ``get(timeout)`` can skip a straggling
@@ -35,11 +42,32 @@ class DataConfig:
     enc_seq: int = 0          # >0: also emit encoder frame embeddings
     d_model: int = 0
     prefetch: int = 4
+    # uneven per-host sample counts (skew-aware split; one entry per
+    # host, summing to global_batch).  None = the even split.
+    host_shares: tuple[int, ...] | None = None
 
     @property
     def host_batch(self) -> int:
+        if self.host_shares is not None:
+            assert len(self.host_shares) == self.n_hosts, (
+                f"host_shares needs one entry per host: "
+                f"{len(self.host_shares)} != {self.n_hosts}")
+            assert sum(self.host_shares) == self.global_batch, (
+                f"host_shares must sum to the global batch: "
+                f"{sum(self.host_shares)} != {self.global_batch}")
+            return self.host_shares[self.host_id]
         assert self.global_batch % self.n_hosts == 0
         return self.global_batch // self.n_hosts
+
+
+def shares_for_hosts(global_batch: int, weights) -> tuple[int, ...]:
+    """Integer per-host sample counts proportional to ``weights`` (e.g.
+    a ``SkewSplit``'s shares), every host at least one sample —
+    largest-remainder rounding via ``core.topology.integer_split``."""
+    # deferred import: repro.core's package init pulls jax, which the
+    # data layer otherwise never needs
+    from repro.core.topology import integer_split
+    return tuple(integer_split(int(global_batch), list(weights), floor=1))
 
 
 def synth_batch(cfg: DataConfig, step: int) -> dict:

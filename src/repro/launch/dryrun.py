@@ -62,7 +62,8 @@ def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
 
 
 def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
-              allow_int8: bool = False, shape_name: str | None = None):
+              allow_int8: bool = False, shape_name: str | None = None,
+              skew: str = "none"):
     """--plan auto: run the cost-model planner for this cell's
     production topology and gradient volume; returns
     (CommPlan, chosen Candidate).
@@ -82,8 +83,15 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     *exposed* comm time and may recommend ``hier_overlap``
     (``plan.recommended_mode()``); without a shape the single-bucket
     sequential plan of earlier revisions is returned unchanged.
+
+    ``skew='auto'`` (training shapes only) runs the joint skew + comm
+    optimizer (core/skew.py; DESIGN.md §10) instead of a bare comm
+    plan: the returned plan carries the uneven microbatch split, the
+    per-cluster compute times, and the per-pod gradient weights the
+    lowered step executes (``CommPlan.cluster_weights``).
     """
     from repro.core import cost_model, overlap, planner, topology
+    from repro.core import skew as skew_lib
     from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
 
     n_pods, _, tp_size = PRODUCTION_MULTI_SHAPE
@@ -101,22 +109,40 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
         flat_mechanism="native", try_balanced=False)
     # structural modes (fsdp / hier_zero1) execute a monolithic sync, so
     # their plan must be priced at that granularity
-    sizes, backward_s = [grad_bytes], None
-    if shape_name is not None and comm_mode not in ("fsdp", "hier_zero1"):
+    sizes, backward_s, train_shape = [grad_bytes], None, None
+    if shape_name is not None:
         shape = get_shape(shape_name)
         if shape.kind == "train":
-            backward_s = cost_model.backward_compute_time(
-                topo, model_flops_for(cfg, shape))
-            sizes = overlap.bucket_sizes_for_volume(grad_bytes, cfg.n_layers)
+            train_shape = shape
+            if comm_mode not in ("fsdp", "hier_zero1"):
+                backward_s = cost_model.backward_compute_time(
+                    topo, model_flops_for(cfg, shape))
+                sizes = overlap.bucket_sizes_for_volume(grad_bytes,
+                                                        cfg.n_layers)
     sim_cache: dict = {}
-    plan = planner.plan(topo, sizes, backward_compute_s=backward_s,
-                        _sim_cache=sim_cache, **plan_kw)
-    if backward_s is not None and plan.recommended_mode() != "hier_overlap":
+    skew_split = skew_comp = None
+    if skew == "auto" and train_shape is not None:
+        sp = skew_lib.optimize(
+            topo, model_flops_for(cfg, train_shape), sizes,
+            total_microbatches=max(topo.n_clusters,
+                                   train_shape.global_batch),
+            # structural modes execute one monolithic sequential sync —
+            # no backward window to hide behind, so score sequentially
+            backward_frac=(0.0 if comm_mode in ("fsdp", "hier_zero1")
+                           else 2.0 / 3.0),
+            _sim_cache=sim_cache, **plan_kw)
+        skew_split, skew_comp = sp.split, sp.compute_s
+        plan = sp.plan
+    else:
+        plan = planner.plan(topo, sizes, backward_compute_s=backward_s,
+                            _sim_cache=sim_cache, **plan_kw)
+    if plan.overlap is not None and plan.recommended_mode() != "hier_overlap":
         # overlap doesn't win -> execution is one monolithic collective;
         # re-plan at that granularity so config_for resolves a schedule
         # tuned for the payload that actually crosses the wire
-        plan = planner.plan(topo, [grad_bytes], _sim_cache=sim_cache,
-                            **plan_kw)
+        plan = planner.plan(topo, [grad_bytes], skew=skew_split,
+                            skew_compute_s=skew_comp,
+                            _sim_cache=sim_cache, **plan_kw)
     big = max(plan.buckets, key=lambda b: b.nbytes)
     return plan, big.candidate
 
@@ -156,7 +182,13 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     if is_train:
         tcfg = TrainConfig(comm_mode=comm_mode, n_chunks=n_chunks,
-                           dcn_compression=compression, plan=plan)
+                           dcn_compression=compression, plan=plan,
+                           # the fsdp sync path reads tcfg.cluster_weights
+                           # directly, so the plan's weights must be
+                           # mirrored here for the lowered HLO to run
+                           # the weighted reduction
+                           cluster_weights=(plan.cluster_weights
+                                            if plan is not None else None))
         build, _ = make_train_step(model, tcfg, mesh=mesh, donate=False)
         step, _ = build(pshape)
         if tcfg.comm_mode == "hier_zero1":
@@ -259,6 +291,11 @@ def main():
     ap.add_argument("--plan", default="manual", choices=["manual", "auto"],
                     help="auto: core.planner picks mode/chunks/compression "
                          "from the cost model instead of the --mode flags")
+    ap.add_argument("--skew", default="none", choices=["none", "auto"],
+                    help="auto (requires --plan auto, train shapes): "
+                         "core.skew jointly optimizes the uneven per-pod "
+                         "batch split with the comm plan; the lowered step "
+                         "runs the weighted gradient sync (DESIGN.md §10)")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--chunks", type=int, default=4)
@@ -270,6 +307,8 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    if args.skew == "auto" and args.plan != "auto":
+        ap.error("--skew auto requires --plan auto")
     mode, chunks, comp, plan = (args.mode or "fsdp", args.chunks,
                                 args.compression, None)
     try:
@@ -278,7 +317,7 @@ def main():
                 args.arch, multi_pod=args.mesh == "multi",
                 comm_mode=args.mode or "hier",
                 allow_int8=args.compression == "int8",
-                shape_name=args.shape)
+                shape_name=args.shape, skew=args.skew)
             # explicitly-flagged structural modes (fsdp / hier_zero1) keep
             # their optimizer wiring; the schedule comes from the plan,
             # resolved per bucket inside the collectives.  For the rest,

@@ -38,6 +38,11 @@ CELLS = {
         # pod hop as an explicit RS+AG exchange over the cluster ring —
         # the schedule-IR proof of generality, A/B'd against it1/it2.
         ("it9_border_rs", ["--mode", "hier_border_rs"]),
+        # skew-aware workload partitioner (DESIGN.md §10): the joint
+        # skew + comm optimizer; on the homogeneous multi-pod mesh the
+        # split degenerates to even (weights 1.0), so this A/Bs the
+        # weighted-sync wiring itself against it8 at zero skew.
+        ("it10_skew_auto", ["--plan", "auto", "--skew", "auto"]),
     ],
     ("olmo-1b", "train_4k", "single"): [
         ("it0_base", ["--mode", "hier"]),

@@ -11,6 +11,7 @@ none` runs single-device; `--mesh production` is the real 16x16 /
 """
 
 import argparse
+import dataclasses
 import os
 import sys
 
@@ -60,6 +61,12 @@ def main(argv=None):
                     help="auto: let core.planner pick mode/chunks/compression "
                          "per gradient bucket from the cost model, replacing "
                          "the hand-picked --mode/--chunks flags")
+    ap.add_argument("--skew", default="none", choices=["none", "auto"],
+                    help="auto: core.skew derives the uneven per-pod batch "
+                         "split from per-cluster tflops and runs the "
+                         "weighted gradient sync (DESIGN.md §10); with "
+                         "--plan auto the comm plan is jointly optimized "
+                         "with the split")
     ap.add_argument("--compression", default=None, choices=["bf16", "int8"])
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -86,8 +93,10 @@ def main(argv=None):
                                          mesh.devices.shape))["data"])
 
     plan = None
-    if args.plan == "auto" and mesh is not None:
+    cluster_weights = None
+    if (args.plan == "auto" or args.skew == "auto") and mesh is not None:
         from repro.core import cost_model, overlap, planner, topology
+        from repro.core import skew as skew_lib
 
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         n_pods = sizes.get("pod", 1)
@@ -110,11 +119,11 @@ def main(argv=None):
         # rather than total comm time (core/overlap.py).  Structural
         # modes execute one monolithic sync, so they are priced at that
         # granularity directly.
+        step_flops = (6.0 * cfg.active_param_count()
+                      * args.global_batch * args.seq)
         backward_s = None
         bucket_sizes = [grad_bytes]
         if args.mode not in ("fsdp", "hier_zero1"):
-            step_flops = (6.0 * cfg.active_param_count()
-                          * args.global_batch * args.seq)
             backward_s = cost_model.backward_compute_time(topo, step_flops)
             # same cap the executor uses (TrainConfig.bucket_cap_mb
             # defaults to this constant), so the priced layout matches
@@ -122,27 +131,67 @@ def main(argv=None):
             bucket_sizes = overlap.bucket_sizes_for_volume(
                 grad_bytes, cfg.n_layers, overlap.DEFAULT_CAP_BYTES)
         sim_cache: dict = {}
-        plan = planner.plan(topo, bucket_sizes,
-                            backward_compute_s=backward_s,
-                            _sim_cache=sim_cache, **plan_kw)
-        if (backward_s is not None
+        skew_split = skew_comp = None
+        if args.skew == "auto":
+            # joint skew + comm optimization (DESIGN.md §10): uneven
+            # integer microbatch split, weighted gradient sync, and the
+            # straggler objective.  tpu_multipod is homogeneous, so the
+            # split degenerates to even (weights 1.0) — the wiring still
+            # runs end to end for skewed topologies.
+            sp = skew_lib.optimize(
+                topo, step_flops, bucket_sizes,
+                total_microbatches=max(topo.n_clusters, args.global_batch),
+                # structural modes execute one monolithic sequential
+                # sync — no backward window to hide behind
+                backward_frac=(0.0 if args.mode in ("fsdp", "hier_zero1")
+                               else 2.0 / 3.0),
+                _sim_cache=sim_cache, **plan_kw)
+            skew_split, skew_comp = sp.split, sp.compute_s
+            cluster_weights = sp.split.weights
+            print("[skew] " + sp.describe(), flush=True)
+            if any(abs(w - 1.0) > 1e-9 for w in cluster_weights):
+                # this single-host driver shards the batch evenly per
+                # device (DataConfig below runs n_hosts=1); weighting
+                # gradients of an *even* batch would bias the mean, so
+                # the weighted sync only executes when the data layer
+                # delivers the matching uneven shards
+                # (DataConfig.host_shares on multi-host launches)
+                print("[skew] data shards are even per device — keeping "
+                      "the unweighted sync (the split above describes "
+                      "the intended uneven assignment)", flush=True)
+                cluster_weights = None
+            if args.plan == "auto":
+                plan = sp.plan
+        if args.plan == "auto" and plan is None:
+            plan = planner.plan(topo, bucket_sizes,
+                                backward_compute_s=backward_s,
+                                skew=skew_split, skew_compute_s=skew_comp,
+                                _sim_cache=sim_cache, **plan_kw)
+        if (plan is not None and plan.overlap is not None
                 and plan.recommended_mode() != "hier_overlap"):
             # overlap doesn't win -> execution is one monolithic
             # collective; re-plan at that granularity so config_for
             # resolves a schedule tuned for the real payload
-            plan = planner.plan(topo, [grad_bytes], _sim_cache=sim_cache,
-                                **plan_kw)
-        b = max(plan.buckets, key=lambda x: x.nbytes)
-        msg = (f"[plan] {plan.recommended_mode()} "
-               f"(biggest bucket: {b.candidate.mode} "
-               f"n_chunks={b.candidate.n_chunks} "
-               f"compression={b.candidate.compression}) "
-               f"predicted {plan.predicted_step_s*1e3:.2f} ms/sync total")
-        if plan.overlap is not None:
-            msg += (f", {plan.exposed_comm_s*1e3:.2f} ms exposed "
-                    f"(backward {plan.overlap.backward_compute_s*1e3:.2f} ms)")
-        print(msg + f" validated={plan.validated}", flush=True)
-        print(plan.describe(), flush=True)
+            plan = planner.plan(topo, [grad_bytes], skew=skew_split,
+                                skew_compute_s=skew_comp,
+                                _sim_cache=sim_cache, **plan_kw)
+        if (plan is not None and cluster_weights is None
+                and plan.cluster_weights is not None):
+            # mirror the even-data guard above on the executed plan
+            plan = dataclasses.replace(plan, cluster_weights=None)
+        if plan is not None:
+            b = max(plan.buckets, key=lambda x: x.nbytes)
+            msg = (f"[plan] {plan.recommended_mode()} "
+                   f"(biggest bucket: {b.candidate.mode} "
+                   f"n_chunks={b.candidate.n_chunks} "
+                   f"compression={b.candidate.compression}) "
+                   f"predicted {plan.predicted_step_s*1e3:.2f} ms/sync total")
+            if plan.overlap is not None:
+                msg += (f", {plan.exposed_comm_s*1e3:.2f} ms exposed "
+                        f"(backward "
+                        f"{plan.overlap.backward_compute_s*1e3:.2f} ms)")
+            print(msg + f" validated={plan.validated}", flush=True)
+            print(plan.describe(), flush=True)
 
     # optimizer structure (fsdp / zero1) is not a per-bucket knob; the plan
     # only replaces the schedule choice within the generic hier path.
@@ -152,6 +201,7 @@ def main(argv=None):
                 if plan.recommended_mode() == "hier_overlap" else "hier")
     tcfg = TrainConfig(comm_mode=mode,
                        dcn_compression=args.compression, plan=plan,
+                       cluster_weights=cluster_weights,
                        opt=OptConfig(lr=args.lr, warmup_steps=20))
     builder_or_step, init = make_train_step(model, tcfg, mesh=mesh)
     params, opt = init(jax.random.key(0))

@@ -70,7 +70,15 @@ class StragglerMonitor:
         self._t0 = time.monotonic()
 
     def stop(self) -> bool:
-        dt = time.monotonic() - self._t0
+        return self.observe(time.monotonic() - self._t0)
+
+    def observe(self, dt: float) -> bool:
+        """Record one step duration (seconds) directly — the testable
+        core of start/stop.  Flags only *relative* slowdowns vs the
+        trailing median, so a steadily skewed fleet (every step paced by
+        the slowest vendor group) is the new normal, not a straggler —
+        compute skew is the partitioner's job (core/skew.py), not this
+        monitor's."""
         med = float(np.median(self.times[-self.window:])) if self.times else dt
         self.times.append(dt)
         slow = len(self.times) > 4 and dt > self.factor * med

@@ -67,6 +67,11 @@ class TrainConfig:
     # planner-side bucket_sizes_for_volume uses, so a plan priced with
     # default caps describes the layout that actually executes
     bucket_cap_mb: int = overlap_lib.DEFAULT_CAP_BYTES >> 20
+    # per-pod gradient weights for the skew-aware uneven batch split
+    # (core/skew.py SkewSplit.weights: mean 1 over pods).  The weighted
+    # sync keeps psum(w*g)/n_dp the exact global-batch mean gradient
+    # when pod c holds weight*batch/n_pods of the samples.  None = even.
+    cluster_weights: tuple[float, ...] | None = None
     # planner.CommPlan: when set, the collectives resolve mode/chunks/
     # compression per gradient bucket from the plan (--plan auto) and the
     # hand-picked fields above only steer the optimizer wiring
@@ -89,7 +94,8 @@ class TrainConfig:
         return CommConfig(mode=mode, pod_axis=rt.pod_axis,
                           intra_axis=rt.dp_axis or "data",
                           n_chunks=self.n_chunks,
-                          compression=self.dcn_compression)
+                          compression=self.dcn_compression,
+                          cluster_weights=self.cluster_weights)
 
 
 def _spec_has(spec, name: str) -> bool:
@@ -184,6 +190,13 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
                     if _spec_has(s, "data"):
                         if rt.pod_axis is None:
                             return g
+                        if tcfg.cluster_weights is not None:
+                            # the autodiff transpose already did the
+                            # intra RS; the weight is constant within a
+                            # pod, so scaling here is still the exact
+                            # uneven-shard weighted reduction
+                            w = jnp.asarray(tcfg.cluster_weights, g.dtype)
+                            g = g * w[lax.axis_index(rt.pod_axis)]
                         if tcfg.dcn_compression:
                             return compression.compressed_psum(
                                 g, rt.pod_axis, tcfg.dcn_compression)

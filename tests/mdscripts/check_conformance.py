@@ -12,7 +12,16 @@ top-level leaves (odd sizes so every padding path runs).  Matrix:
 plus int8 rows for the hier/pipelined/overlap modes at a loose
 tolerance (the codec is lossy; error feedback recovers it over steps,
 so one sync is only bounded by the per-block quantization error —
-hier_border_rs takes no int8 wire, its builder rejects the codec).
+hier_border_rs takes no int8 wire, its builder rejects the codec),
+
+plus uneven-shard *weighted* rows (DESIGN.md §10): every mode runs the
+weighted gradient sync (``CommConfig.cluster_weights``, mean-1 per-pod
+weights) on inputs pre-scaled by 1/w per pod — the weighted reduction
+must reproduce the even-split flat fp32 baseline, which an unweighted
+sync of the same inputs would NOT (it would sum to
+sum_c isize * TREE / w_c != baseline), so these rows discriminate the
+weighting end to end through every schedule path (padding, chunk
+loops, codecs, border legs).
 
 Also the pod_axis=None × hier_pipelined regression: a 1-cluster config
 must fall back to the plain intra psum — no chunk loop in the lowered
@@ -101,6 +110,55 @@ for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
 # chunk count per mode — the codec is chunk-independent.
 for mode in ("hier", "hier_pipelined", "hier_overlap"):
     check(mode, 4, "int8")
+
+# --- uneven-shard weighted rows (skew partitioner; DESIGN.md §10) ----------
+# Per-pod gradient weights, mean 1 over the 2 pods (SkewSplit.weights
+# convention: pod 0 holds 3x the samples of pod 1).
+WEIGHTS = (1.5, 0.5)
+
+
+def weighted_sync_fn(mode, n_chunks, compression):
+    cfg = CommConfig(mode="hier" if mode == "hier_overlap" else mode,
+                     pod_axis="pod", intra_axis="data",
+                     n_chunks=n_chunks, compression=compression,
+                     cluster_weights=WEIGHTS)
+
+    def run(tree):
+        # pre-scale by 1/w so ONLY a correct weighted reduction can
+        # recover the flat fp32 baseline of the unscaled tree
+        inv = 1.0 / jnp.asarray(WEIGHTS, jnp.float32)[lax.axis_index("pod")]
+        tree = jax.tree.map(lambda g: g * inv, tree)
+        if mode == "hier_overlap":
+            return overlap.tree_hier_psum_overlap(tree, cfg, cap_bytes=CAP)
+        return tree_hier_psum(tree, cfg)
+
+    return jax.jit(shard_map(run, mesh=mesh, in_specs=(SPECS,),
+                             out_specs=SPECS, check_vma=False))
+
+
+def check_weighted(mode, n_chunks, compression):
+    got = jax.tree.map(np.asarray,
+                       weighted_sync_fn(mode, n_chunks, compression)(TREE))
+    tol = TOL[compression]
+    err = 0.0
+    for g, b in zip(jax.tree.leaves(got), jax.tree.leaves(BASE)):
+        assert g.shape == b.shape and g.dtype == b.dtype, (mode, g.shape)
+        assert np.all(np.isfinite(g)), ("weighted", mode, n_chunks,
+                                        compression)
+        err = max(err, float(np.max(np.abs(g - b))))
+        np.testing.assert_allclose(
+            g, b, rtol=tol, atol=tol,
+            err_msg=f"weighted {mode} n_chunks={n_chunks} "
+                    f"compression={compression}")
+    print(f"OK-W {mode:15s} n_chunks={n_chunks} "
+          f"compression={str(compression):5s} maxerr {err:.2e}")
+
+
+for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
+             "hier_overlap"):
+    for n_chunks in (1, 4):
+        for compression in (None, "bf16"):
+            check_weighted(mode, n_chunks, compression)
 
 # --- regression: pod_axis=None + hier_pipelined degenerates cleanly ----
 mesh1d = jax.make_mesh((8,), ("data",))

@@ -10,10 +10,15 @@ def test_collective_conformance_matrix_8dev():
     """flat/hier/hier_pipelined/hier_border_rs/hier_overlap × n_chunks
     {1,2,4} × compression {None, bf16} allclose to the flat fp32
     baseline; int8 within lossy-codec tolerance; pod_axis=None
-    pipelined regression."""
+    pipelined regression; plus the uneven-shard weighted rows (every
+    mode × n_chunks {1,4} × {None, bf16}: the weighted gradient sync
+    on 1/w-prescaled inputs must reproduce the even-split flat fp32
+    baseline — DESIGN.md §10)."""
     out = run_mdscript("check_conformance.py")
     # every cell of the matrix actually ran
     for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
                  "hier_overlap"):
         assert out.count(f"OK {mode:15s}") >= 6, mode
+        # uneven-shard weighted rows: 2 chunk counts x 2 codecs per mode
+        assert out.count(f"OK-W {mode:15s}") >= 4, ("weighted", mode)
     assert "fallback (no chunk loop)" in out

@@ -123,3 +123,22 @@ def test_straggler_monitor_flags_slow_steps():
     time.sleep(0.2)
     assert mon.stop()
     assert mon.flagged
+
+
+def test_straggler_monitor_synthetic_skewed_trace():
+    """observe() on a synthetic trace (no wall clock): a transient 4x
+    spike on an otherwise steady stream is flagged, while a constantly
+    skewed fleet — every step paced by the slowest vendor group, the
+    regime the skew partitioner (core/skew.py) fixes — is the new
+    normal and must NOT be flagged as a straggler."""
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(8):
+        assert not mon.observe(0.1)
+    assert mon.observe(0.4)           # 4x the trailing median
+    assert not mon.observe(0.1)       # recovery
+    assert mon.flagged == [8]
+    # steady 4x-slow steps: slow, but not straggling
+    steady = StragglerMonitor(factor=3.0)
+    for _ in range(12):
+        steady.observe(0.4)
+    assert steady.flagged == []

@@ -1,0 +1,297 @@
+"""Compute-skew-aware workload partitioner (core/skew.py; DESIGN.md
+§10): integer-split invariants as property tests through the hypothesis
+shim, the straggler objective vs the aggregate-flops optimism, joint
+skew + comm planning, the closed-form-vs-event-sim regression on a
+4x-skewed topology, and uneven data sharding."""
+
+import dataclasses
+import json
+
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core import cost_model, planner, skew, topology, transport_sim
+from repro.core import schedule as schedule_ir
+from repro.core.collectives import CommConfig
+from repro.core.topology import Cluster, HetTopology, integer_split
+from repro.data.pipeline import DataConfig, shares_for_hosts, synth_batch
+
+given, settings = hypothesis.given, hypothesis.settings
+
+MiB = 1 << 20
+
+
+def _topo(tflops, n_nodes=2):
+    """Equal-size clusters differing only in per-device tflops."""
+    return HetTopology(tuple(
+        Cluster(f"v{i}", n_nodes=n_nodes, devs_per_node=8, nics_per_node=8,
+                nic_Bps=200 * 0.125e9, intra_Bps=300e9, tflops=t)
+        for i, t in enumerate(tflops)))
+
+
+# ---------------------------------------------------------------------------
+# integer_split / partitioner invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50)
+@given(st.integers(0, 1 << 20),
+       st.lists(st.floats(1.0, 1e6), min_size=1, max_size=8),
+       st.sampled_from([0, 1]))
+def test_integer_split_conserves_and_floors(total, weights, floor):
+    if total < floor * len(weights):
+        with pytest.raises(ValueError):
+            integer_split(total, weights, floor)
+        return
+    out = integer_split(total, weights, floor)
+    assert sum(out) == total
+    assert all(o >= floor for o in out)
+
+
+@settings(max_examples=50)
+@given(st.lists(st.floats(1.0, 1e4), min_size=2, max_size=6),
+       st.integers(6, 512))
+def test_partitioner_sums_floor_and_monotone(tflops, total):
+    """Shard counts sum to the global batch, every cluster gets >= 1
+    microbatch, and (equal rank counts) the split is monotone in
+    tflops: a faster vendor group never receives fewer microbatches."""
+    topo = _topo(tflops)
+    split = skew.throughput_split(topo, total)
+    ms = split.microbatches
+    assert sum(ms) == total == split.total
+    assert all(m >= 1 for m in ms)
+    for i in range(len(tflops)):
+        for j in range(len(tflops)):
+            if tflops[i] >= tflops[j]:
+                assert ms[i] >= ms[j], (tflops, ms)
+    # weights are mean-1 and proportional to the shares
+    assert abs(sum(split.weights) / len(ms) - 1.0) < 1e-12
+
+
+def test_weights_exact_on_unequal_cluster_sizes():
+    """w_c = share_c * G / N_c, not C*m_c/M: on an unequal-rank fleet
+    the per-rank-even split must come out weight-1 everywhere (every
+    device holds the same number of samples), and the weights must stay
+    mean-1 over devices."""
+    topo = topology.paper_testbed()      # 32/32/16/32 ranks
+    G = topo.n_ranks
+    even = skew.even_split(topo, G)      # 1 microbatch per rank
+    assert even.microbatches == tuple(c.n_ranks for c in topo.clusters)
+    assert even.weights == pytest.approx((1.0,) * topo.n_clusters)
+    sk = skew.throughput_split(topo, G)
+    dev_mean = sum(w * n for w, n in zip(sk.weights, sk.n_ranks)) / G
+    assert dev_mean == pytest.approx(1.0)
+    # the equal-size fallback (n_ranks=None) keeps the C*m/M form
+    assert skew.SkewSplit((3, 1)).weights == pytest.approx((1.5, 0.5))
+
+
+@settings(max_examples=25)
+@given(st.lists(st.floats(1.0, 1e3), min_size=2, max_size=5),
+       st.integers(5, 256))
+def test_balanced_split_never_worse_than_even(tflops, total):
+    """The compute-straggler objective of the balanced split never
+    exceeds the even split's (the even split is in the candidate
+    set)."""
+    topo = _topo(tflops)
+    F = 1e18
+
+    def straggler(split):
+        return cost_model.straggler_step_time(topo, F, split.shares)
+
+    assert (straggler(skew.balance_compute(topo, total))
+            <= straggler(skew.even_split(topo, total)) * (1 + 1e-12))
+
+
+def test_split_rejects_too_few_microbatches():
+    topo = _topo([100.0, 200.0, 300.0])
+    with pytest.raises(ValueError):
+        skew.even_split(topo, 2)      # 3 clusters need >= 3 microbatches
+    with pytest.raises(ValueError):
+        skew.SkewSplit((4, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Straggler model vs the aggregate roofline
+# ---------------------------------------------------------------------------
+
+def test_straggler_at_least_aggregate_roofline():
+    """aggregate_flops is flagged optimistic: the even-split straggler
+    time is never below flops/aggregate, and on a skewed fleet it is
+    strictly worse by about the tflops spread."""
+    topo = _topo([400.0, 100.0])
+    F = 1e18
+    agg_t = F / cost_model.aggregate_flops(topo)
+    strag = cost_model.straggler_step_time(topo, F)
+    assert strag >= agg_t * (1 - 1e-12)
+    # 2 equal-rank clusters at 4x spread: straggler = F/(G/2 * 100) =
+    # 2.5x the aggregate time F/(G/2 * 500)
+    assert strag == pytest.approx(2.5 * agg_t, rel=1e-6)
+    # a throughput-proportional split recovers the aggregate roofline
+    bal = cost_model.straggler_step_time(topo, F, shares=(0.8, 0.2))
+    assert bal == pytest.approx(agg_t, rel=1e-6)
+
+
+def test_straggler_step_time_validates_lengths():
+    topo = _topo([100.0, 200.0])
+    with pytest.raises(ValueError):
+        cost_model.straggler_step_time(topo, 1e18, shares=(1.0,))
+    with pytest.raises(ValueError):
+        cost_model.straggler_step_time(topo, 1e18, comm_s=(0.1, 0.2, 0.3))
+    # per-cluster comm terms ride the max
+    t = cost_model.straggler_step_time(topo, 0.0, comm_s=(0.5, 0.1))
+    assert t == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the 3-vendor 4x-spread criterion
+# ---------------------------------------------------------------------------
+
+def test_skew_beats_even_on_three_vendor_4x():
+    """ISSUE 4 acceptance: on the default 3-vendor test topology with a
+    4x tflops spread the skew-aware plan's predicted step time beats
+    the even split by >= 15%, and the event simulation (per-cluster
+    compute stages) confirms the ranking."""
+    topo = topology.three_vendor_testbed(4.0)
+    step_flops = 6.0 * 3.2e9 * 128 * 4096
+    grad = 256 * MiB
+    sp = skew.optimize(topo, step_flops, [grad], total_microbatches=48,
+                       try_balanced=False, compressions=(None, "bf16"))
+    assert sp.speedup >= 1.15, sp.describe()
+    assert sp.predicted_step_s < sp.even_step_s
+    assert sum(sp.split.microbatches) == 48
+    # faster vendor groups get more microbatches
+    ms = sp.split.microbatches
+    assert ms[0] > ms[1] > ms[2]
+    # the event simulator reproduces the straggler and the ranking
+    sched = schedule_ir.build_schedule("all_reduce", "hier")
+    sim_even = transport_sim.simulate_step(
+        topo, sched, grad, skew.compute_times(topo, step_flops, sp.even))
+    sim_skew = transport_sim.simulate_step(
+        topo, sched, grad, skew.compute_times(topo, step_flops, sp.split))
+    assert sim_skew < sim_even
+    # summary is JSON-serializable for launcher logs
+    s = json.loads(json.dumps(sp.summary()))
+    assert s["speedup_vs_even"] >= 1.15
+    assert s["plan"]["skew"]["microbatches"] == list(ms)
+
+
+def test_skew_degenerates_to_even_on_homogeneous_fleet():
+    topo = topology.tpu_multipod(2, 8)
+    sp = skew.optimize(topo, 1e15, [4 * MiB], total_microbatches=8,
+                       flat_mechanism="native", try_balanced=False)
+    assert sp.split.microbatches == (4, 4)
+    assert sp.split.weights == (1.0, 1.0)
+    assert sp.speedup == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Regression: closed form vs event sim on a 4x-skewed two-cluster topo
+# ---------------------------------------------------------------------------
+
+def test_straggler_closed_form_vs_event_sim_4x_two_cluster():
+    """cost_model.straggler_step_time must agree with the per-cluster
+    compute-stage event simulation within the planner's 25% validation
+    band on a 4x-skewed two-cluster topology."""
+    topo = _topo([400.0, 100.0])
+    step_flops = 2e18
+    n = 64 * MiB
+    sched = schedule_ir.build_schedule("all_reduce", "hier")
+    est = cost_model.estimate_schedule(topo, sched, n)
+    for split in (skew.even_split(topo, 8),
+                  skew.balance_compute(topo, 8)):
+        comp = skew.compute_times(topo, step_flops, split)
+        closed = cost_model.straggler_step_time(
+            topo, step_flops, split.shares, comm_s=est.sequential_s)
+        sim = transport_sim.simulate_step(topo, sched, n, comp)
+        assert sim > 0.0
+        assert abs(closed - sim) / sim <= 0.25, (split, closed, sim)
+
+
+def test_simulate_step_validates_compute_lengths():
+    topo = _topo([400.0, 100.0])
+    sched = schedule_ir.build_schedule("all_reduce", "hier")
+    with pytest.raises(ValueError):
+        transport_sim.simulate_step(topo, sched, 1 * MiB, [0.1])
+
+
+def test_simulate_step_zero_compute_matches_schedule_sim():
+    """With no compute stages the step sim reduces to (at most) the
+    plain schedule sim — per-cluster clocks only relax the per-step max
+    the coarser interpreter takes."""
+    topo = topology.paper_testbed()
+    for k in (1, 4):
+        sched = schedule_ir.build_schedule("all_reduce", "hier_pipelined", k)
+        base = transport_sim.simulate_schedule(sched, topo, 16 * MiB)
+        stepped = transport_sim.simulate_step(
+            topo, sched, 16 * MiB, [0.0] * topo.n_clusters)
+        assert stepped <= base * (1 + 1e-9)
+        assert stepped > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Planner integration: plan(skew=...)
+# ---------------------------------------------------------------------------
+
+def test_plan_carries_skew_fields():
+    topo = topology.three_vendor_testbed(4.0)
+    split = skew.throughput_split(topo, 16)
+    comp = skew.compute_times(topo, 1e18, split)
+    p = planner.plan(topo, [16 * MiB], skew=split, skew_compute_s=comp,
+                     try_balanced=False)
+    assert p.skew is split
+    assert p.compute_s == comp
+    assert p.cluster_weights == split.weights
+    assert p.predicted_straggler_s == pytest.approx(
+        max(comp) + p.exposed_comm_s)
+    cfg = p.config_for(16 * MiB)
+    assert isinstance(cfg, CommConfig)
+    assert cfg.cluster_weights == split.weights
+    assert "skew: microbatches" in p.describe()
+    s = json.loads(json.dumps(p.summary()))
+    assert s["skew"]["compute_s"] == list(comp)
+
+
+def test_plan_without_skew_unchanged():
+    p = planner.plan(topology.paper_testbed(), [4 * MiB])
+    assert p.skew is None and p.compute_s == ()
+    assert p.cluster_weights is None
+    assert p.config_for(4 * MiB).cluster_weights is None
+    assert p.predicted_straggler_s == p.exposed_comm_s
+    assert p.summary()["skew"] is None
+
+
+# ---------------------------------------------------------------------------
+# Uneven data sharding
+# ---------------------------------------------------------------------------
+
+def test_shares_for_hosts_from_split():
+    topo = topology.three_vendor_testbed(4.0)
+    split = skew.throughput_split(topo, 16)
+    shares = shares_for_hosts(64, split.shares)
+    assert sum(shares) == 64
+    assert all(s >= 1 for s in shares)
+    assert shares[0] > shares[2]      # the fast vendor reads more
+
+
+def test_uneven_host_batches_shapes_and_determinism():
+    shares = (5, 2, 1)
+    cfgs = [DataConfig(vocab_size=64, global_batch=8, seq_len=16,
+                       n_hosts=3, host_id=h, host_shares=shares)
+            for h in range(3)]
+    parts = [synth_batch(c, step=3) for c in cfgs]
+    for p, s in zip(parts, shares):
+        assert p["tokens"].shape == (s, 16)
+        assert p["labels"].shape == (s, 16)
+    assert sum(p["tokens"].shape[0] for p in parts) == 8
+    # pure in (seed, step, host): regenerating host 0 is bit-identical
+    again = synth_batch(cfgs[0], step=3)
+    assert (parts[0]["tokens"] == again["tokens"]).all()
+
+
+def test_host_shares_must_cover_the_global_batch():
+    cfg = DataConfig(vocab_size=64, global_batch=8, seq_len=16,
+                     n_hosts=2, host_id=0, host_shares=(5, 2))
+    with pytest.raises(AssertionError):
+        _ = cfg.host_batch
+    cfg2 = dataclasses.replace(cfg, host_shares=(5, 2, 1))
+    with pytest.raises(AssertionError):
+        _ = cfg2.host_batch

@@ -62,6 +62,36 @@ def scan(root: pathlib.Path) -> dict[str, list[str]]:
     return found
 
 
+def check_skew_matrix() -> list[str]:
+    """Every planner-enumerable skew/mode combination must resolve to a
+    registered schedule builder: for each registered mode × collective
+    × chunking × wire codec, both the plain schedule and its weighted
+    (cluster-scaled) variant — what the skew partitioner executes
+    (``schedule.with_cluster_scale``, DESIGN.md §10) — must build.
+    Returns error strings (empty = covered)."""
+    errs: list[str] = []
+    colls = ("all_reduce", "reduce_scatter", "all_gather")
+    n = 0
+    for mode in schedule.registered_modes():
+        for coll in colls:
+            for k in (1, 4):
+                for comp in (None, "bf16"):
+                    tag = f"{mode}/{coll}/chunks={k}/codec={comp}"
+                    try:
+                        sched = schedule.build_schedule(coll, mode, k, comp)
+                        weighted = schedule.with_cluster_scale(sched)
+                    except Exception as e:  # noqa: BLE001 - report, don't die
+                        errs.append(f"{tag}: {type(e).__name__}: {e}")
+                        continue
+                    if not any(isinstance(s, schedule.Scale)
+                               for s in weighted.steps):
+                        errs.append(f"{tag}: with_cluster_scale added no "
+                                    "Scale step")
+                    n += 2
+    print(f"skew/mode matrix             : {n} schedule variants resolve")
+    return errs
+
+
 def main() -> int:
     registered = set(schedule.registered_modes())
     structural = schedule.STRUCTURAL_MODES
@@ -77,6 +107,7 @@ def main() -> int:
     print(f"registered schedule builders : {sorted(registered)}")
     print(f"structural wrapper modes     : {sorted(structural)}")
     print(f"mode strings found in source : {sorted(found)}")
+    skew_errs = check_skew_matrix()
     if missing:
         print("\nFAIL: mode strings without a registered schedule builder "
               "(register one in src/repro/core/schedule.py or add a "
@@ -85,7 +116,14 @@ def main() -> int:
             for s in sites[:5]:
                 print(f"  {mode!r}  {s}")
         return 1
-    print("OK: every mode string has a schedule builder")
+    if skew_errs:
+        print("\nFAIL: planner-enumerable skew/mode combinations that do "
+              "not resolve to a registered schedule builder:")
+        for e in skew_errs[:20]:
+            print(f"  {e}")
+        return 1
+    print("OK: every mode string has a schedule builder and every "
+          "skew/mode combination resolves")
     return 0
 
 

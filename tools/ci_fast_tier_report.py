@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Markdown summary of the fast-tier junit report, with test-count and
+duration deltas against the committed baseline
+(``tools/fast_tier_baseline.json``).
+
+CI appends the output to ``$GITHUB_STEP_SUMMARY`` so creep in either
+direction is visible on every run: a shrinking count means tests were
+lost (collection error, accidental deselection), a growing duration
+means the tier-1 gate is outgrowing its budget.  Update the baseline
+in the same PR that deliberately changes the suite.
+
+Run:  python tools/ci_fast_tier_report.py <junit.xml> [baseline.json]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import xml.etree.ElementTree as ET
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = ROOT / "tools" / "fast_tier_baseline.json"
+
+
+def junit_totals(junit_path: pathlib.Path) -> dict:
+    root = ET.parse(junit_path).getroot()
+    suites = [root] if root.tag == "testsuite" else list(root)
+    tot = {"tests": 0, "failures": 0, "errors": 0, "skipped": 0,
+           "duration_s": 0.0}
+    for s in suites:
+        tot["tests"] += int(s.get("tests", 0))
+        tot["failures"] += int(s.get("failures", 0))
+        tot["errors"] += int(s.get("errors", 0))
+        tot["skipped"] += int(s.get("skipped", 0))
+        tot["duration_s"] += float(s.get("time", 0.0))
+    return tot
+
+
+def _delta(now: float, base: float, unit: str = "") -> str:
+    d = now - base
+    sign = "+" if d >= 0 else ""
+    return f"{sign}{d:.0f}{unit}" if unit != "s" else f"{sign}{d:.1f}s"
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    junit = pathlib.Path(sys.argv[1])
+    baseline_path = (pathlib.Path(sys.argv[2]) if len(sys.argv) > 2
+                     else DEFAULT_BASELINE)
+    tot = junit_totals(junit)
+    base = None
+    if baseline_path.is_file():
+        base = json.loads(baseline_path.read_text())
+    print("### Fast-tier test report")
+    print()
+    print("| metric | this run | baseline | delta |")
+    print("|---|---|---|---|")
+    for key, fmt, unit in (("tests", "{:.0f}", ""),
+                           ("duration_s", "{:.1f}s", "s")):
+        now = float(tot[key])
+        if base is not None and key in base:
+            b = float(base[key])
+            print(f"| {key} | {fmt.format(now)} | {fmt.format(b)} "
+                  f"| {_delta(now, b, unit)} |")
+        else:
+            print(f"| {key} | {fmt.format(now)} | n/a | n/a |")
+    bad = tot["failures"] + tot["errors"]
+    print(f"| failures+errors | {bad} | 0 | {'+' if bad else ''}{bad} |")
+    if base is not None and tot["tests"] < int(base.get("tests", 0)):
+        print()
+        print("> :warning: fewer fast-tier tests than the baseline — "
+              "check for collection errors or accidental deselection.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
