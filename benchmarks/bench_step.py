@@ -1,0 +1,191 @@
+"""Packed-vs-per-leaf gradient data-path benchmark (BENCH_step.json).
+
+Measures the emulated 8-device gradient-sync step time and effective
+GB/s per comm mode for three data paths:
+
+  * ``per_leaf`` — one hierarchical collective per gradient leaf (the
+    per-message staging HetCCL §4.1 eliminates; what naive DDP and the
+    fsdp per-leaf sync do);
+  * ``legacy``   — the pre-packing dtype-bucketed path: per-step
+    re-flatten + per-chunk/per-codec re-pads
+    (``tree_hier_psum(packed=False)``);
+  * ``packed``   — the zero-copy packed data path (``core/packing.py``,
+    DESIGN.md §11): persistent layout, one pack, slice-only unpack, no
+    re-pads.
+
+The measured step is the gradient sync plus an SGD-style param update
+(the data-path hot loop of every comm mode we ship), NOT a model
+forward/backward — this benchmark isolates the comm data path the PR
+optimizes; EXPERIMENTS.md records the numbers.  Times are medians over
+``--steps`` jitted executions on 8 virtual CPU devices, so they are an
+*emulation* trajectory (relative deltas meaningful, absolute times
+not).
+
+Writes ``BENCH_step.json`` at the repo root.  The acceptance gate of
+the packed-data-path PR: >= 1.25x step-time improvement packed vs
+per_leaf on the ``hier_pipelined`` int8 cell.
+
+Run:  PYTHONPATH=src python benchmarks/bench_step.py [--quick]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import statistics    # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import overlap  # noqa: E402
+from repro.core.collectives import CommConfig, hier_psum, tree_hier_psum  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def grad_tree(n_layers: int, d: int, vocab: int):
+    """A transformer-shaped gradient tree with UNSTACKED layers: every
+    layer is its own subtree, so the per_leaf baseline really pays one
+    collective per parameter tensor (the per-message staging regime)."""
+    rng = np.random.default_rng(0)
+
+    def arr(*shape):
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+    tree = {"embed": arr(vocab, d), "lm_head": arr(vocab, d),
+            "final_norm": arr(d)}
+    for i in range(n_layers):
+        tree[f"layer_{i:02d}"] = {"wq": arr(d, d), "wo": arr(d, d),
+                                  "norm": arr(d)}
+    return tree
+
+
+def make_step(mode: str, n_chunks: int, compression, path: str, mesh,
+              specs, lr: float = 1e-3):
+    """One data-path step: gradient sync + SGD update, jitted over the
+    8-device mesh."""
+    cfg = CommConfig(mode="hier" if mode == "hier_overlap" else mode,
+                     pod_axis="pod", intra_axis="data",
+                     n_chunks=n_chunks, compression=compression)
+
+    def sync(grads):
+        if mode == "hier_overlap":
+            return overlap.tree_hier_psum_overlap(
+                grads, cfg, packed=(path == "packed"))
+        if path == "per_leaf":
+            return jax.tree.map(lambda g: hier_psum(g, cfg), grads)
+        return tree_hier_psum(grads, cfg, packed=(path == "packed"))
+
+    def step(params, grads):
+        g = sync(grads)
+        return jax.tree.map(lambda p, gi: p - lr * gi, params, g)
+
+    return jax.jit(shard_map(step, mesh=mesh, in_specs=(specs, specs),
+                             out_specs=specs, check_vma=False))
+
+
+def measure(fn, params, grads, steps: int, warmup: int = 2) -> float:
+    """Median wall seconds per executed step (post-compile)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(params, grads)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        out = fn(params, grads)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI perf smoke: fewer modes/steps")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--layers", type=int, default=24)
+    ap.add_argument("--d", type=int, default=192)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_step.json"))
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    tree = grad_tree(args.layers, args.d, args.vocab)
+    specs = jax.tree.map(lambda _: P(), tree)
+    total_bytes = sum(4 * lf.size for lf in jax.tree.leaves(tree))
+    n_leaves = len(jax.tree.leaves(tree))
+    steps = 5 if args.quick else args.steps
+
+    cells = [("hier", 1, None), ("hier_pipelined", 4, None),
+             ("hier_pipelined", 4, "int8")]
+    if not args.quick:
+        cells = [("flat", 1, None)] + cells + [("hier", 1, "bf16"),
+                                               ("hier_overlap", 1, None)]
+
+    results = {}
+    for mode, k, comp in cells:
+        tag = mode + (f"+{comp}" if comp else "")
+        paths = (("per_leaf", "packed") if mode == "flat"
+                 else ("per_leaf", "legacy", "packed"))
+        if mode == "hier_overlap":
+            paths = ("legacy", "packed")   # overlap has no per-leaf form
+        row = {"n_chunks": k, "compression": comp}
+        for path in paths:
+            fn = make_step(mode, k, comp, path, mesh, specs)
+            t = measure(fn, tree, tree, steps)
+            row[f"{path}_ms"] = round(t * 1e3, 3)
+            row[f"{path}_eff_GBps"] = round(total_bytes / t / 1e9, 3)
+        if "per_leaf_ms" in row:
+            row["speedup_packed_vs_per_leaf"] = round(
+                row["per_leaf_ms"] / row["packed_ms"], 3)
+        if "legacy_ms" in row:
+            row["speedup_packed_vs_legacy"] = round(
+                row["legacy_ms"] / row["packed_ms"], 3)
+        results[tag] = row
+        print(f"{tag:24s} " + "  ".join(
+            f"{p}={row.get(p + '_ms', '-')}ms" for p in
+            ("per_leaf", "legacy", "packed")) +
+            (f"  packed/per_leaf {row.get('speedup_packed_vs_per_leaf')}x"
+             if "per_leaf_ms" in row else ""), flush=True)
+
+    accept = results.get("hier_pipelined+int8", {}).get(
+        "speedup_packed_vs_per_leaf", 0.0)
+    out = {
+        "meta": {
+            "devices": 8, "mesh": "pod=2 x data=4",
+            "tree": {"layers": args.layers, "d": args.d,
+                     "vocab": args.vocab, "n_leaves": n_leaves,
+                     "grad_bytes": total_bytes},
+            "steps": steps, "quick": bool(args.quick),
+            "measured": "gradient sync + SGD update (comm data path "
+                        "only; emulated CPU devices — relative deltas "
+                        "meaningful, absolute times not)",
+            "acceptance": {
+                "cell": "hier_pipelined+int8",
+                "metric": "speedup_packed_vs_per_leaf",
+                "bar": 1.25,
+                "value": accept,
+                "pass": bool(accept >= 1.25),
+            },
+        },
+        "modes": results,
+    }
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"\nwrote {args.out}")
+    print(f"acceptance hier_pipelined+int8 packed vs per_leaf: "
+          f"{accept}x (bar 1.25x) -> {'PASS' if accept >= 1.25 else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ with the comm plan (DESIGN.md §10).
 from .collectives import (  # noqa: F401
     CommConfig,
     FlatShardMeta,
+    comm_layout,
     hier_all_gather,
     hier_all_to_all,
     hier_psum,
@@ -22,6 +23,12 @@ from .collectives import (  # noqa: F401
     resolve_config,
     tree_hier_psum_scatter,
     tree_hier_unscatter,
+    zero1_local_shard,
+)
+from .packing import (  # noqa: F401
+    PackedLayout,
+    comm_alignment,
+    plan_layout,
 )
 from .planner import (  # noqa: F401
     BucketPlan,

@@ -14,9 +14,14 @@ entry points build the schedule for their ``CommConfig.mode`` and run
 it step by step via ``primitives.py`` (``execute``).  New modes are
 added by registering a schedule builder — no decomposition lives here.
 
-The pytree entry points bucket leaves into one flat fp32/bf16 buffer per
-dtype before communicating (gradient bucketing): one α per phase instead
-of one per leaf, and clean, parseable HLO for the roofline analysis.
+The pytree entry points pack leaves into one flat buffer per wire dtype
+before communicating (gradient bucketing): one α per phase instead of
+one per leaf, and clean, parseable HLO for the roofline analysis.  The
+packed data path (``core/packing.py``, DESIGN.md §11) computes that
+layout once at trace time with every downstream alignment baked in —
+bf16 leaves stay 2 bytes on the wire, the chunk pipeline and the int8
+block codec never re-pad, and the traced step carries exactly one pack
+concatenate and one slice-only unpack.
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import compression, primitives
+from . import compression, packing, primitives
 from . import schedule as schedule_ir
 
 
@@ -83,26 +88,35 @@ def resolve_config(cfg, nbytes: int) -> CommConfig:
     return cfg if fn is None else fn(int(nbytes))
 
 
-def _apply_cluster_weight(x: jax.Array, cfg: CommConfig) -> jax.Array:
-    """Scale by this device's per-cluster gradient weight (uneven-shard
-    weighted reduction, DESIGN.md §10).  The weight is constant within a
-    cluster, so one local multiply before the first combining step keeps
-    every downstream reduction an intrinsic vendor collective."""
-    if cfg.cluster_weights is None:
-        return x
-    w = jnp.asarray(cfg.cluster_weights, x.dtype)
+def _cluster_weight_scalar(cfg: CommConfig) -> jax.Array:
+    """This device's per-cluster gradient weight as an f32 scalar
+    (uneven-shard weighted reduction, DESIGN.md §10)."""
+    w = jnp.asarray(cfg.cluster_weights, jnp.float32)
     if cfg.pod_axis is None:
         if w.shape[0] != 1:
             raise ValueError(
                 f"cluster_weights has {w.shape[0]} entries but the config "
                 "has no pod axis (single cluster)")
-        return x * w[0]
+        return w[0]
     psize = primitives.axis_size(cfg.pod_axis)
     if w.shape[0] != psize:
         raise ValueError(
             f"cluster_weights has {w.shape[0]} entries but the "
             f"{cfg.pod_axis!r} axis has {psize} pods")
-    return x * w[lax.axis_index(cfg.pod_axis)]
+    return w[lax.axis_index(cfg.pod_axis)]
+
+
+def _apply_cluster_weight(x: jax.Array, cfg: CommConfig) -> jax.Array:
+    """Scale by this device's per-cluster gradient weight.  The weight
+    is constant within a cluster, so one local multiply before the
+    first combining step keeps every downstream reduction an intrinsic
+    vendor collective.  The schedule interpreter defers this multiply
+    to the C2C stage (shard-sized data, or folded into the wire codec —
+    zero extra payload-sized HBM traffic); this full-payload form only
+    runs on the flat / single-cluster fallbacks."""
+    if cfg.cluster_weights is None:
+        return x
+    return x * _cluster_weight_scalar(cfg).astype(x.dtype)
 
 
 def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
@@ -119,10 +133,14 @@ def _pad_to(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
 @dataclasses.dataclass
 class _ExecCtx:
     """Mutable walk state: the pending wire codec (set by Compress /
-    cleared by Decompress) and the pod-alignment padding the border
-    exchange legs round-trip."""
+    cleared by Decompress), the pod-alignment padding the border
+    exchange legs round-trip, and the deferred cluster weight (set by
+    Scale, consumed by the first combining C2C step — applied to the
+    shard-sized payload or folded into the codec's scale vector, never
+    a full-payload pass)."""
     codec: str | None = None
     pod_pad: int = 0
+    weight: jax.Array | None = None
 
 
 def _wire_cast(buf: jax.Array, codec: str | None, fn) -> jax.Array:
@@ -138,7 +156,21 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
                ctx: _ExecCtx) -> jax.Array:
     intra, pod = cfg.intra_axis, cfg.pod_axis
     if isinstance(step, schedule_ir.Scale):
-        return _apply_cluster_weight(buf, cfg)
+        if cfg.cluster_weights is None:
+            return buf
+        if pod is None:
+            # single cluster: no C2C stage to fold into — apply now
+            return _apply_cluster_weight(buf, cfg)
+        # defer to the combining C2C step: the weight is constant within
+        # a cluster and the intra phases are linear, so w·RS(x) == RS(w·x)
+        # — applying it on the 1/intra_size shard (or inside the codec's
+        # scale vector) costs zero payload-sized HBM traffic
+        ctx.weight = _cluster_weight_scalar(cfg)
+        return buf
+    if isinstance(step, (schedule_ir.Pack, schedule_ir.Unpack)):
+        # performed at the pytree entry points (core/packing.py); the
+        # array-level interpreter receives an already-packed buffer
+        return buf
     if isinstance(step, schedule_ir.Compress):
         ctx.codec = step.codec
         return buf
@@ -161,6 +193,7 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
     if isinstance(step, schedule_ir.C2CRed):
         if pod is None:
             return buf
+        w, ctx.weight = ctx.weight, None
         if step.scatter:
             # border-communicator leg 1: combining reduce-scatter over
             # the cluster ring — each cluster ends owning 1/P of the
@@ -170,10 +203,15 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
             if ctx.pod_pad:
                 buf = jnp.concatenate(
                     [buf, jnp.zeros((ctx.pod_pad,), buf.dtype)])
+            if w is not None:
+                buf = buf * w.astype(buf.dtype)
             return _wire_cast(buf, ctx.codec,
                               lambda b: primitives.hom_reduce_scatter(b, pod))
         if ctx.codec is not None:
-            return compression.compressed_psum(buf, pod, ctx.codec)
+            # weight folds into the codec's nb-sized scale vector
+            return compression.compressed_psum(buf, pod, ctx.codec, weight=w)
+        if w is not None:
+            buf = buf * w.astype(buf.dtype)
         return primitives.c2c_red(buf, pod)
     if isinstance(step, schedule_ir.C2CCpy):
         if pod is None:
@@ -192,7 +230,8 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
         return primitives.c2c_cpy(buf, pod)
     if isinstance(step, schedule_ir.ChunkLoop):
         from . import pipelined  # local import to avoid cycle
-        return pipelined.execute_chunk_loop(step, buf, cfg)
+        w, ctx.weight = ctx.weight, None
+        return pipelined.execute_chunk_loop(step, buf, cfg, weight=w)
     if isinstance(step, schedule_ir.Flat):
         raise ValueError("Flat steps are handled by the entry points")
     raise NotImplementedError(f"no executor for step {step!r}")
@@ -309,11 +348,61 @@ def hier_all_to_all(x: jax.Array, cfg: CommConfig, split_dim: int,
 
 
 # ---------------------------------------------------------------------------
-# Pytree entry points with dtype-bucketed fusion
+# Pytree entry points with dtype-bucketed fusion (packed data path)
 # ---------------------------------------------------------------------------
 
+def _dp_world(cfg) -> int:
+    """Total data-parallel world size of ``cfg`` (CommConfig or
+    CommPlan — both expose ``dp_axes``)."""
+    world = 1
+    for ax in cfg.dp_axes:
+        world *= primitives.axis_size(ax)
+    return world
+
+
+def wire_block(compression_codec: str | None) -> int:
+    """Block alignment the wire codec needs: the int8 codec quantizes
+    in ``kernels.quant.BLOCK``-element blocks; everything else is
+    block-free."""
+    from repro.kernels import quant as _qk
+    return _qk.BLOCK if compression_codec == "int8" else 1
+
+
+def _comm_layout_resolved(leaves, cfg, world: int | None = None
+                          ) -> tuple[packing.PackedLayout, dict]:
+    """(layout, per-segment resolved CommConfig) for one gradient sync:
+    one segment per wire dtype, each aligned for the schedule that
+    segment will actually run.  The config is resolved ONCE — by the
+    segment's unpadded payload — and returned so execution runs exactly
+    the schedule the buffer was aligned for (re-resolving a planner
+    ``CommPlan`` at the *padded* size could land on a neighboring
+    bucket whose chunk count the alignment never baked in, silently
+    reviving the legacy re-pads)."""
+    if world is None:
+        world = _dp_world(cfg)
+    metas = packing.tree_metas(leaves)
+    cfgs: dict[str, CommConfig] = {}
+
+    def align_for(dt: str, used: int) -> int:
+        c = resolve_config(cfg, used * packing.itemsize_of(dt))
+        cfgs[dt] = c
+        return packing.comm_alignment(world, c.n_chunks,
+                                      wire_block(c.compression))
+
+    layout = packing.plan_layout(metas, world=world, align_for=align_for)
+    return layout, cfgs
+
+
+def comm_layout(leaves, cfg, world: int | None = None) -> packing.PackedLayout:
+    """The persistent packed layout for one gradient sync (see
+    ``_comm_layout_resolved``)."""
+    return _comm_layout_resolved(leaves, cfg, world)[0]
+
+
 def _bucket(tree: Any) -> tuple[dict[Any, jax.Array], Any, list]:
-    """Flatten a pytree into one 1-D buffer per dtype."""
+    """Legacy per-step flatten: one 1-D buffer per dtype, rebuilt with
+    fresh concatenates every call (kept as the unpacked baseline the
+    benchmarks A/B against — the packed path replaces it)."""
     leaves, treedef = jax.tree.flatten(tree)
     buckets: dict[Any, list[jax.Array]] = {}
     meta = []
@@ -334,16 +423,29 @@ def _unbucket(joined: dict, treedef, meta) -> Any:
     return jax.tree.unflatten(treedef, leaves)
 
 
-def tree_hier_psum(tree: Any, cfg: CommConfig) -> Any:
+def tree_hier_psum(tree: Any, cfg: CommConfig, packed: bool = True) -> Any:
     """Gradient sync: bucketed AllReduceH over the whole pytree.
 
     ``cfg`` may be a single ``CommConfig`` or a planner ``CommPlan``:
     each dtype bucket resolves its own schedule by flat-buffer size
     (``resolve_config``), so e.g. a small bf16 bucket can ride a
-    compressed sequential hier while the f32 bulk is pipelined."""
-    joined, treedef, meta = _bucket(tree)
-    out = {dt: hier_psum(buf, cfg) for dt, buf in joined.items()}
-    return _unbucket(out, treedef, meta)
+    compressed sequential hier while the f32 bulk is pipelined.
+
+    ``packed`` (default) runs the zero-copy data path: the persistent
+    ``core/packing.py`` layout bakes every downstream padding in once,
+    so the traced step performs exactly one pack concatenate per wire
+    dtype and a slice-only unpack, and no collective re-pads
+    (DESIGN.md §11; asserted by ``tests/mdscripts/check_packed.py``).
+    ``packed=False`` keeps the legacy per-step re-flatten for A/B."""
+    if not packed:
+        joined, treedef, meta = _bucket(tree)
+        out = {dt: hier_psum(buf, cfg) for dt, buf in joined.items()}
+        return _unbucket(out, treedef, meta)
+    leaves, treedef = jax.tree.flatten(tree)
+    layout, cfgs = _comm_layout_resolved(leaves, cfg)
+    bufs = packing.pack(layout, leaves)
+    out = {dt: hier_psum(buf, cfgs[dt]) for dt, buf in bufs.items()}
+    return jax.tree.unflatten(treedef, packing.unpack(layout, out))
 
 
 def tree_hier_psum_mean(tree: Any, cfg: CommConfig) -> Any:
@@ -358,44 +460,94 @@ def tree_hier_psum_mean(tree: Any, cfg: CommConfig) -> Any:
 
 @dataclasses.dataclass(frozen=True)
 class FlatShardMeta:
-    """Static metadata for the bucketed flat view of a pytree."""
+    """Static metadata for the packed flat f32 master view of a pytree
+    (ZeRO-1).  The master is the concatenation of per-wire-dtype
+    segments (``core/packing.py`` layout, each segment aligned to
+    ``intra_size·BLOCK``), sharded *per segment* over the intra axis —
+    so the gradient ReduceScatter and the param-reconstruction
+    AllGather can each run in the segment's own wire dtype (bf16
+    leaves cost 2 bytes on both hops; the old single-f32-buffer layout
+    silently doubled their wire bytes)."""
     treedef: Any
-    meta: tuple          # ((dtype, shape, size), ...)
-    total: int           # unpadded total elements (single dtype assumed)
-    padded: int
-
-    def unflatten(self, flat: jax.Array) -> Any:
-        leaves = []
-        off = 0
-        for dt, shape, size in self.meta:
-            leaves.append(lax.dynamic_slice_in_dim(flat, off, size)
-                          .reshape(shape).astype(dt))
-            off += size
-        return jax.tree.unflatten(self.treedef, leaves)
+    layout: packing.PackedLayout
+    total: int           # unpadded total elements across segments
+    padded: int          # master length (sum of padded segments)
 
 
-def tree_flatten_f32(tree: Any, intra_size: int) -> tuple[jax.Array, FlatShardMeta]:
-    """Concatenate all leaves (cast to f32) into one padded flat buffer."""
+def _zero1_layout(leaves, intra_size: int) -> packing.PackedLayout:
+    """The persistent master layout shared by the bootstrap, the
+    scattered grad sync, and the param reconstruction: segments per
+    wire dtype, aligned so every segment's intra shard is whole and the
+    int8 codec (if the pod hop compresses) never re-pads."""
+    return packing.plan_layout(packing.tree_metas(leaves),
+                               world=max(1, int(intra_size)),
+                               block=packing.DEFAULT_BLOCK)
+
+
+def zero1_local_shard(tree: Any, cfg: CommConfig) -> tuple[jax.Array, FlatShardMeta]:
+    """Bootstrap the ZeRO-1 f32 master shard from local params inside
+    shard_map: pack per segment, cast f32, take this device's slice of
+    each segment, concatenate once."""
+    intra = cfg.intra_axis
+    isize = primitives.axis_size(intra)
+    rank = lax.axis_index(intra)
     leaves, treedef = jax.tree.flatten(tree)
-    meta = tuple((lf.dtype, lf.shape, lf.size) for lf in leaves)
-    flat = jnp.concatenate([lf.reshape(-1).astype(jnp.float32) for lf in leaves])
-    total = flat.size
-    pad = (-total) % intra_size
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    return flat, FlatShardMeta(treedef, meta, total, total + pad)
+    layout = _zero1_layout(leaves, isize)
+    bufs = packing.pack(layout, leaves)
+    parts = []
+    for seg in layout.segments:
+        ssz = seg.padded // isize
+        parts.append(lax.dynamic_slice_in_dim(
+            bufs[seg.dtype].astype(jnp.float32), rank * ssz, ssz))
+    shard = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return shard, FlatShardMeta(treedef, layout, layout.used_total,
+                                layout.padded_total)
 
 
 def tree_hier_psum_scatter(tree: Any, cfg: CommConfig) -> tuple[jax.Array, FlatShardMeta]:
-    """Grad sync for ZeRO-1: returns the summed flat f32 shard
-    (size padded/intra_size) plus metadata to reconstruct params."""
+    """Grad sync for ZeRO-1: returns the summed flat f32 master shard
+    (size padded/intra_size) plus metadata to reconstruct params.
+
+    Segments are laid out per wire dtype but the *gradient reduction*
+    runs in f32 for every segment — same accumulation numerics as the
+    old single-f32-buffer path (summing bf16 grads in bf16 would be a
+    silent precision regression, not a wire-format change).  The 2-byte
+    bf16 wire win lands on the param-reconstruction AllGather
+    (``tree_hier_unscatter``), where casting before vs after the gather
+    is value-identical."""
     isize = primitives.axis_size(cfg.intra_axis)
-    flat, fmeta = tree_flatten_f32(tree, isize)
-    shard = hier_psum_scatter(flat, cfg)
-    return shard, fmeta
+    leaves, treedef = jax.tree.flatten(tree)
+    layout = _zero1_layout(leaves, isize)
+    bufs = packing.pack(layout, leaves)
+    shards = [hier_psum_scatter(bufs[seg.dtype].astype(jnp.float32), cfg)
+              for seg in layout.segments]
+    shard = shards[0] if len(shards) == 1 else jnp.concatenate(shards)
+    return shard, FlatShardMeta(treedef, layout, layout.used_total,
+                                layout.padded_total)
 
 
 def tree_hier_unscatter(shard: jax.Array, fmeta: FlatShardMeta,
                         cfg: CommConfig) -> Any:
-    flat = primitives.hom_all_gather(shard, cfg.intra_axis)
-    return fmeta.unflatten(flat[:fmeta.total])
+    """Inverse of ``tree_hier_psum_scatter``: gather each segment's
+    shard slice over the intra axis *in the segment's wire dtype* — a
+    bf16 segment's reconstruction AllGather moves 2 bytes/elem where
+    the old unconditional-f32 gather moved 4 — and slice the leaves
+    back out."""
+    intra = cfg.intra_axis
+    isize = primitives.axis_size(intra)
+    gathered: dict[str, jax.Array] = {}
+    off = 0
+    for seg in fmeta.layout.segments:
+        ssz = seg.padded // isize
+        piece = shard[off:off + ssz]
+        off += ssz
+        gathered[seg.dtype] = primitives.hom_all_gather(
+            piece.astype(seg.dtype), intra)
+    leaves = []
+    for sl in fmeta.layout.slots:
+        buf = gathered[sl.segment]
+        piece = buf[sl.offset:sl.offset + sl.size].reshape(sl.shape)
+        if str(piece.dtype) != sl.dtype:
+            piece = piece.astype(sl.dtype)
+        leaves.append(piece)
+    return jax.tree.unflatten(fmeta.treedef, leaves)

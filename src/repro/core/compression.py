@@ -10,18 +10,107 @@ step's gradient.
 Codecs:
   * ``bf16`` — round-to-nearest bf16 on the wire (2x), lossless enough
                for grads that are already bf16-scaled.
-  * ``int8`` — per-chunk symmetric int8 with an f32 scale (≈4x); the
+  * ``int8`` — per-block symmetric int8 with an f32 scale (≈4x); the
                psum runs in int32 partial sums so the reduction is exact
                given the shared scale (scale = global max via pmax).
+
+The int8 block codec is implemented by the fused Pallas kernels in
+``kernels/quant.py`` (one read pass for the per-block amax, one fused
+scale+round+clip+cast pass for the encode, one fused decode pass) when
+running on TPU — ``REPRO_PALLAS_QUANT=1/0`` overrides the backend
+default, and the jnp fallback mirrors the kernels bit-for-bit for CPU
+emulation.  Payloads packed by ``core/packing.py`` arrive pre-aligned
+to the BLOCK granularity, so the legacy zero-pad concatenate below is
+a dead branch on the packed data path (asserted by the jaxpr test).
+
+Cluster-weight folding (schedule IR ``Scale``, DESIGN.md §10/§11):
+``compressed_psum(..., weight=w)`` applies the per-cluster gradient
+weight *inside the codec* — on the nb-sized scale vector (encode side:
+quantizing with ``scale/w`` ≡ multiplying the payload by ``w``; the
+pmax'd shared scale covers ``w·x`` because per-block amax scales
+linearly in ``w``) — so the weighted reduction costs zero extra
+payload-sized HBM traffic.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-_CHUNK = 1024  # scale granularity for int8
+from repro.kernels import quant as _qk
+
+BLOCK = _qk.BLOCK          # scale granularity for int8
+_CHUNK = BLOCK             # legacy alias (pre-packing callers)
+
+
+def use_pallas() -> bool:
+    """Whether the fused Pallas codec kernels run (TPU default;
+    ``REPRO_PALLAS_QUANT`` forces either way — interpret-mode Pallas on
+    CPU is correct but slow, so emulation defaults to the fused jnp
+    mirror)."""
+    env = os.environ.get("REPRO_PALLAS_QUANT")
+    if env is not None:
+        return env not in ("0", "false", "False", "")
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Block codec primitives (Pallas on TPU, fused-jnp mirror elsewhere).
+# All take/return flat f32 payloads whose size % BLOCK == 0.
+# ---------------------------------------------------------------------------
+
+def _block_amax(xf: jax.Array) -> jax.Array:
+    """Per-block |max| of flat f32 ``xf`` -> (nb,) f32 (one read pass)."""
+    if use_pallas():
+        return _qk.amax_block_call(xf, interpret=jax.default_backend() != "tpu")
+    return jnp.max(jnp.abs(xf.reshape(-1, BLOCK)), axis=1)
+
+
+def _encode_scaled(xf: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize flat f32 ``xf`` with per-block ``scale`` -> (nb, BLOCK)
+    int8 (one fused scale+round+clip+cast pass)."""
+    if use_pallas():
+        return _qk.quant_scaled_call(xf, scale,
+                                     interpret=jax.default_backend() != "tpu")
+    blocks = xf.reshape(-1, BLOCK)
+    return jnp.clip(jnp.round(blocks / scale[:, None]),
+                    -127, 127).astype(jnp.int8)
+
+
+def _decode(q: jax.Array, scale: jax.Array, gain=None) -> jax.Array:
+    """Decode (nb, BLOCK) int8/int32 with per-block ``scale`` -> flat
+    f32.  ``gain`` is the fused epilogue: post-sum scalars (cluster
+    scale, 1/n mean) multiply the nb-sized scale vector, never the
+    payload.  int32 is the ring accumulator's output — the Pallas
+    kernel reads either width (it upcasts to f32 in-register), so the
+    hot collective decode stays fused too."""
+    if use_pallas() and q.dtype in (jnp.int8, jnp.int32):
+        return _qk.dequant_int8_call(q, scale, gain=gain,
+                                     interpret=jax.default_backend() != "tpu")
+    if gain is not None:
+        scale = scale * gain
+    return (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+
+
+def _shared_scale(amax: jax.Array, axis: str | None) -> jax.Array:
+    if axis is not None:
+        amax = lax.pmax(amax, axis)
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def _flat_blocks(x: jax.Array) -> tuple[jax.Array, int]:
+    """Flat f32 view padded to BLOCK.  Packed payloads
+    (core/packing.py) are pre-aligned, so ``pad == 0`` and no
+    concatenate is traced; the pad branch only serves legacy unpacked
+    callers."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    pad = (-xf.size) % BLOCK
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
+    return xf, pad
 
 
 def _ring_int8_sum(q: jax.Array, axis: str) -> jax.Array:
@@ -41,58 +130,59 @@ def _ring_int8_sum(q: jax.Array, axis: str) -> jax.Array:
     return summed
 
 
-def compressed_psum(x: jax.Array, axis: str, codec: str) -> jax.Array:
-    """All-reduce ``x`` over ``axis`` with wire compression.  Exposes the
-    same signature as lax.psum on 1-D inputs."""
+def compressed_psum(x: jax.Array, axis: str, codec: str,
+                    weight: jax.Array | None = None) -> jax.Array:
+    """All-reduce ``x`` over ``axis`` with wire compression.  Exposes
+    the same signature as lax.psum on 1-D inputs; ``weight`` is this
+    device's cluster gradient weight (the deferred ``Scale`` step),
+    folded into the codec at zero payload cost (module docstring)."""
     if codec == "bf16":
+        if weight is not None:
+            x = x * jnp.asarray(weight, x.dtype)  # fuses into the cast below
         return lax.psum(x.astype(jnp.bfloat16), axis).astype(x.dtype)
     if codec == "int8":
-        return _int8_psum(x, axis)
+        return _int8_psum(x, axis, weight=weight)
     raise ValueError(f"unknown codec {codec!r}")
 
 
-def _int8_psum(x: jax.Array, axis: str) -> jax.Array:
+def _int8_psum(x: jax.Array, axis: str,
+               weight: jax.Array | None = None) -> jax.Array:
     """All-reduce with int8 WIRE bytes: the payload crosses the (DCN)
     axis as int8 via a reduce ring of ppermutes, accumulating locally in
     int32, with one shared f32 scale per block (pmax'd so the integer
     sums are exact).  A plain psum of int32 would quadruple the wire."""
     orig = x.dtype
-    xf = x.astype(jnp.float32).reshape(-1)
-    n = xf.size
-    pad = (-n) % _CHUNK
-    if pad:
-        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
-    blocks = xf.reshape(-1, _CHUNK)
-    # shared scale across the axis so integer partial sums stay exact
-    amax = lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
-
+    xf, pad = _flat_blocks(x)
+    amax = _block_amax(xf)
+    if weight is not None:
+        # amax(w·x) == w·amax(x) for w > 0: the weighted payload's
+        # shared scale comes from the nb-sized vector, not a payload pass
+        weight = jnp.asarray(weight, jnp.float32)
+        amax = amax * weight
+    scale = _shared_scale(amax, axis)
+    enc_scale = scale if weight is None else scale / weight
+    q = _encode_scaled(xf, enc_scale)
     summed = _ring_int8_sum(q, axis)
-    out = summed.astype(jnp.float32) * scale[:, None]
-    out = out.reshape(-1)
+    out = _decode(summed, scale)
     if pad:
         out = out[:-pad]
     return out.reshape(x.shape).astype(orig)
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Standalone per-chunk int8 quantization (used by the Pallas
-    kernel's reference path and the serving KV-cache transfer)."""
-    xf = x.astype(jnp.float32).reshape(-1)
-    pad = (-xf.size) % _CHUNK
-    if pad:
-        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.float32)])
-    blocks = xf.reshape(-1, _CHUNK)
-    amax = jnp.max(jnp.abs(blocks), axis=1)
+    """Standalone per-block int8 quantization (local scale — the
+    serving KV-cache transfer and the kernel reference path)."""
+    xf, _ = _flat_blocks(x)
+    if use_pallas():
+        return _qk.quant_int8_call(xf, interpret=jax.default_backend() != "tpu")
+    amax = _block_amax(xf)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
-    return q, scale
+    return _encode_scaled(xf, scale), scale
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, size: int,
-                    dtype=jnp.float32) -> jax.Array:
-    out = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:size]
+                    dtype=jnp.float32, gain=None) -> jax.Array:
+    out = _decode(q, scale, gain=gain)[:size]
     return out.astype(dtype)
 
 
@@ -112,17 +202,11 @@ def psum_ef(x: jax.Array, residual: jax.Array, axis: str,
         summed = lax.psum(enc, axis).astype(x.dtype)
         return summed, corrected - enc.astype(corrected.dtype)
     if codec == "int8":
-        cf = corrected.astype(jnp.float32).reshape(-1)
-        pad = (-cf.size) % _CHUNK
-        if pad:
-            cf = jnp.concatenate([cf, jnp.zeros((pad,), jnp.float32)])
-        blocks = cf.reshape(-1, _CHUNK)
-        amax = lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis)
-        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-        q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
-        local_dec = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
-        summed = (_ring_int8_sum(q, axis).astype(jnp.float32)
-                  * scale[:, None]).reshape(-1)
+        cf, pad = _flat_blocks(corrected)
+        scale = _shared_scale(_block_amax(cf), axis)
+        q = _encode_scaled(cf, scale)
+        local_dec = _decode(q, scale)
+        summed = _decode(_ring_int8_sum(q, axis), scale)
         if pad:
             summed, local_dec = summed[:-pad], local_dec[:-pad]
         new_res = (corrected.reshape(-1).astype(jnp.float32) - local_dec)

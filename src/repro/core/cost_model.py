@@ -204,6 +204,14 @@ def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
         # Reduce hop to the target — charge its volume for combiners.
         _, recv_vol = c2c_volume(step.coll, int(n), topo, ci)
         return ring_reduce_scatter_time(c, recv_vol / max(1, c.n_border))
+    if isinstance(step, (schedule_ir.Pack, schedule_ir.Unpack)):
+        # local data-path cost of the packed comm buffer (DESIGN.md
+        # §11): one launch α plus one pass of the payload through the
+        # on-device copy engine (d2d_Bps ≈ HBM-bound memcpy) — the cost
+        # the packed layout pays once per sync instead of once per
+        # bucket/chunk/codec re-pad
+        vol = schedule_ir.eval_volume(step.vol, n, topo, c)
+        return c.alpha_native_s + vol / c.d2d_Bps
     return 0.0  # Scale/Compress/Decompress: free in the α–β model
 
 
@@ -260,6 +268,14 @@ def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
     mode = "hier_pipelined" if n_chunks > 1 else "hier"
     sched = schedule_ir.build_schedule(coll, mode, n_chunks)
     return estimate_schedule(topo, sched, nbytes_per_rank, hetccl_alpha)
+
+
+def pack_pass_time(topo: HetTopology, nbytes: float) -> float:
+    """Seconds for one Pack or Unpack pass of ``nbytes`` on the slowest
+    cluster (the synchronous data path waits for it) — what the packed
+    flat baseline adds per sync, mirroring the per-step Pack/Unpack
+    charge of ``_intra_step_time``."""
+    return max(c.alpha_native_s + nbytes / c.d2d_Bps for c in topo.clusters)
 
 
 def flat_host_forwarding_time(topo: HetTopology, coll: str, nbytes_per_rank: int) -> float:

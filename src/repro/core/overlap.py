@@ -29,7 +29,14 @@ This module supplies both halves of that optimization:
 
 Sizes follow cost_model conventions: bytes, seconds.  Wire payloads are
 f32 (the sync buffer is the f32 flat view of each bucket, mirroring
-``collectives.tree_flatten_f32``).
+the ZeRO-1 master layout of ``collectives.FlatShardMeta``).
+
+Execution rides the packed data path (``core/packing.py``, DESIGN.md
+§11): the whole tree is packed ONCE into a single bucket-sliced buffer
+whose per-bucket bounds are aligned for each bucket's resolved
+schedule, and every bucket's sync runs on a *slice of that one buffer*
+— replacing the old per-bucket re-flatten (one concatenate per bucket
+per step) with one pack and one unpack.
 """
 
 from __future__ import annotations
@@ -41,7 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from . import collectives
+from . import collectives, packing
 
 # Default per-bucket payload cap.  Large enough that α costs amortize,
 # small enough that the first bucket's sync can start well before the
@@ -200,9 +207,43 @@ def _bucket_buffer(tree: Any, spec: BucketSpec) -> tuple[jax.Array, list]:
     return jnp.concatenate(parts), meta
 
 
+def _packed_bucket_plan(tree: Any, layout: Sequence[BucketSpec], cfg):
+    """Enumerate bucket pieces in readiness order and compute the
+    persistent bucket-sliced packed layout: each bucket's bound is
+    aligned for the schedule that bucket resolves to, so its slice of
+    the one buffer feeds ``hier_psum`` with zero re-padding."""
+    world = collectives._dp_world(cfg)
+    pieces: list[jax.Array] = []
+    meta: list[tuple] = []     # (key, lo, li, shape, dtype, size)
+    bucket_metas: list[list[tuple]] = []
+    aligns: list[int] = []
+    rcs: list = []             # resolved CommConfig per bucket
+    for spec in layout:
+        bm: list[tuple] = []
+        for key, lo, hi in spec.entries:
+            leaves = jax.tree.leaves(tree[key])
+            for li, lf in enumerate(leaves):
+                piece = lf if lo is None else lax.slice_in_dim(lf, lo, hi,
+                                                               axis=0)
+                pieces.append(piece)
+                meta.append((key, lo, li, piece.shape, lf.dtype, piece.size))
+                bm.append((str(lf.dtype), tuple(piece.shape),
+                           int(piece.size)))
+        bucket_metas.append(bm)
+        # resolve ONCE per bucket, by the spec's payload: execution
+        # must run exactly the schedule the slice was aligned for
+        rc = collectives.resolve_config(cfg, spec.nbytes)
+        rcs.append(rc)
+        aligns.append(packing.comm_alignment(
+            world, rc.n_chunks, collectives.wire_block(rc.compression)))
+    return pieces, meta, rcs, packing.plan_bucket_layout(bucket_metas,
+                                                         align=aligns)
+
+
 def tree_hier_psum_overlap(tree: Any, cfg,
                            cap_bytes: int = DEFAULT_CAP_BYTES,
-                           layout: Sequence[BucketSpec] | None = None) -> Any:
+                           layout: Sequence[BucketSpec] | None = None,
+                           packed: bool = True) -> Any:
     """Gradient sync: AllReduceH per readiness-ordered bucket, buckets
     chained so XLA issues their C2C traffic in readiness order and can
     overlap it with the backward compute still producing later buckets.
@@ -212,21 +253,54 @@ def tree_hier_psum_overlap(tree: Any, cfg,
     a plan tuned on the same bucket layout drives execution directly.
     Numerically identical to ``tree_hier_psum`` up to f32 casting and
     reduction order (the conformance matrix asserts so).
+
+    With ``packed`` (default) the tree is packed once and every bucket
+    syncs a slice of the one buffer (zero-copy data path, DESIGN.md
+    §11); ``packed=False`` keeps the legacy per-bucket re-flatten for
+    A/B benchmarking.
+
+    Overlap caveat: the single pack naively makes bucket 0's slice
+    data-depend on the whole concatenate.  Bucket bounds align exactly
+    with piece boundaries, so XLA's algebraic simplifier rewrites each
+    ``slice(concatenate)`` to consume only that bucket's pieces and the
+    readiness chain (the ``optimization_barrier`` edges below) remains
+    the only cross-bucket dependency; if a backend ever fails to split
+    the concat, exposure regresses silently (numerics are unaffected) —
+    the legacy path is the escape hatch.
     """
     if layout is None:
         layout = partition_tree(tree, cap_bytes)
     pieces: dict[tuple, jax.Array] = {}
     token = None
-    for spec in layout:
-        buf, meta = _bucket_buffer(tree, spec)
-        buf = _chain(buf, token)
-        out = collectives.hier_psum(buf, cfg)
-        token = lax.slice_in_dim(out, 0, 1)
-        off = 0
-        for key, lo, hi, li, shape, dtype, size in meta:
-            piece = lax.dynamic_slice_in_dim(out, off, size)
+    if packed:
+        plist, meta, rcs, playout = _packed_bucket_plan(tree, layout, cfg)
+        buf = packing.pack_bucketed(playout, plist)
+        outs = []
+        for (start, end), rc in zip(playout.bucket_bounds, rcs):
+            seg = _chain(buf[start:end], token)
+            out = collectives.hier_psum(seg, rc)
+            token = lax.slice_in_dim(out, 0, 1)
+            outs.append(out)
+        # slice-only unpack: every slot reads straight from its own
+        # bucket's output (bounds are known statically) — no rebuild of
+        # the full payload
+        starts = [s for s, _ in playout.bucket_bounds]
+        for sl, (key, lo, li, shape, dtype, size) in zip(playout.slots,
+                                                         meta):
+            off = sl.offset - starts[sl.bucket]
+            piece = outs[sl.bucket][off:off + size]
             pieces[(key, lo, li)] = piece.reshape(shape).astype(dtype)
-            off += size
+    else:
+        for spec in layout:
+            buf, meta = _bucket_buffer(tree, spec)
+            buf = _chain(buf, token)
+            out = collectives.hier_psum(buf, cfg)
+            token = lax.slice_in_dim(out, 0, 1)
+            off = 0
+            for key, lo, hi, li, shape, dtype, size in meta:
+                piece = lax.dynamic_slice_in_dim(out, off, size)
+                pieces[(key, lo, li)] = piece.reshape(shape).astype(dtype)
+                off += size
 
     # ---- reassemble the tree -------------------------------------------
     def rebuild(key: str) -> Any:

@@ -31,12 +31,15 @@ from . import schedule as schedule_ir
 
 
 def execute_chunk_loop(step: "schedule_ir.ChunkLoop", flat: jax.Array,
-                       cfg) -> jax.Array:
+                       cfg, weight: jax.Array | None = None) -> jax.Array:
     """ChunkLoop interpreter of the schedule IR (DESIGN.md §9): run the
     loop body's start/c2c/end phases chunk-pipelined.  The shipped
     pipelined schedules all carry the AllReduceH body (ReduceScatter →
     c2cRed → AllGather) — the scan below *is* that body's pipeline; a
-    builder emitting a different chunked body must extend this."""
+    builder emitting a different chunked body must extend this.
+    ``weight`` is the deferred cluster-scale (schedule ``Scale`` step),
+    applied at the C2C stage on shard-sized data (or folded into the
+    codec) instead of a full-payload pass."""
     kinds = {type(s) for s in step.body}
     if not {schedule_ir.IntraReduceScatter, schedule_ir.C2CRed,
             schedule_ir.IntraAllGather} <= kinds:
@@ -46,14 +49,18 @@ def execute_chunk_loop(step: "schedule_ir.ChunkLoop", flat: jax.Array,
     if any(isinstance(s, schedule_ir.C2CRed) and s.scatter for s in step.body):
         raise NotImplementedError(
             "the border-communicator exchange is not chunk-pipelined")
-    return pipelined_hier_psum(flat, cfg)
+    return pipelined_hier_psum(flat, cfg, weight=weight)
 
 
-def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False) -> jax.Array:
+def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False,
+                        weight: jax.Array | None = None) -> jax.Array:
     """AllReduceH on a 1-D array, chunked + phase-pipelined.
 
     flat must already be padded to a multiple of intra_size; returns the
-    all-reduced array of the same shape.
+    all-reduced array of the same shape.  Buffers from the packed data
+    path (``core/packing.py``) are pre-aligned to ``intra·k``, so the
+    chunk split below never re-pads (``pad == 0``) — the pad branch
+    only serves legacy unpacked callers.
     """
     assert flat.ndim == 1
     intra, pod = cfg.intra_axis, cfg.pod_axis
@@ -62,6 +69,8 @@ def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False) -> jax.Arr
         # add k-1 extra α costs and a scan around what is exactly one
         # intra-cluster all-reduce.  Fall back to the plain native psum
         # (== ReduceScatter+AllGather fused by the platform library).
+        if weight is not None:
+            flat = flat * weight.astype(flat.dtype)
         return lax.psum(flat, intra)
     isize = primitives.axis_size(intra)
     k = max(1, int(cfg.n_chunks))
@@ -77,32 +86,45 @@ def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False) -> jax.Arr
         if pod is None:
             return shard
         if use_ring:
+            if weight is not None:
+                shard = shard * weight.astype(shard.dtype)
             return primitives.c2c_red_ring(shard, pod)
         if cfg.compression is not None:
             from . import compression
-            return compression.compressed_psum(shard, pod, cfg.compression)
+            return compression.compressed_psum(shard, pod, cfg.compression,
+                                               weight=weight)
+        if weight is not None:
+            shard = shard * weight.astype(shard.dtype)
         return primitives.c2c_red(shard, pod)
 
     zshard = jnp.zeros((chunk // isize,), flat.dtype)
 
-    def step(carry, xi):
-        rs_prev, ar_prev = carry
+    def write(out, ag, i):
+        # chunk i-2's gathered result lands at its final offset via an
+        # in-place dynamic_update_slice on the carried output buffer
+        # (XLA aliases it across iterations) — iterations 0/1 write
+        # pipeline-fill zeros at a clamped offset 0, overwritten by the
+        # real chunk 0 at i=2.  No concatenate, and no extra zero-chunk
+        # collectives (the flush stays outside the loop).
+        return lax.dynamic_update_slice(out, ag, ((i - 2) * chunk,))
+
+    def step(carry, i):
+        rs_prev, ar_prev, out = carry
+        xi = lax.dynamic_index_in_dim(chunks, i, 0, keepdims=False)
         # three independent collectives; XLA may run them concurrently
         rs_i = primitives.hom_reduce_scatter(xi, intra)      # ICI
         ar_i = pod_reduce(rs_prev)                            # DCN
         ag_i = primitives.hom_all_gather(ar_prev, intra)      # ICI
-        return (rs_i, ar_i), ag_i
+        return (rs_i, ar_i, write(out, ag_i, i)), None
 
-    (rs_last, ar_last), outs = lax.scan(step, (zshard, zshard), chunks)
-    # flush the two in-flight chunks
+    out0 = jnp.zeros((k * chunk,), flat.dtype)
+    (rs_last, ar_last, out), _ = lax.scan(step, (zshard, zshard, out0),
+                                          jnp.arange(k))
+    # flush the two in-flight chunks (k-2 and k-1)
     ar_tail = pod_reduce(rs_last)
-    ag_tail1 = primitives.hom_all_gather(ar_last, intra)
-    ag_tail2 = primitives.hom_all_gather(ar_tail, intra)
-    full = jnp.concatenate([outs.reshape(-1), ag_tail1, ag_tail2])
-    # outs[0] and outs[1] are zeros from pipeline fill; real data starts
-    # at outs[2] ... ag_tail2.  Slice the valid window.
-    valid = full[2 * chunk:2 * chunk + k * chunk]
-    return valid[:n]
+    out = write(out, primitives.hom_all_gather(ar_last, intra), k)
+    out = write(out, primitives.hom_all_gather(ar_tail, intra), k + 1)
+    return out[:n]
 
 
 def pipelined_all_gather(x: jax.Array, cfg) -> jax.Array:

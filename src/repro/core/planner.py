@@ -352,13 +352,27 @@ def _hetccl_alpha(topo: HetTopology) -> float:
 
 def _price_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
                     nbytes: int,
-                    flat_mechanism: str = "host") -> tuple[float, float]:
+                    flat_mechanism: str = "host",
+                    packed: bool = False) -> tuple[float, float]:
     """(full seconds, C2C leg seconds) of one candidate schedule.
     Hierarchical schedules are priced step by step by the IR's pricing
     interpreter (codec wire ratios and multi-leg exchanges ride the
-    steps themselves); flat schedules are priced per mechanism."""
+    steps themselves); flat schedules are priced per mechanism.
+
+    With ``packed`` the schedule is priced through its packed-data-path
+    variant (``schedule.with_packing``): one Pack in the start phase,
+    one Unpack in the end phase — every candidate pays the same
+    per-sync packing cost (flat included), so the planner's *relative*
+    ranking within a bucket is codec/pipeline-driven while bucket-count
+    decisions (overlap vs monolithic) see the per-bucket pack α it must
+    amortize."""
     if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
-        return _price_flat(topo, sched.coll, nbytes, flat_mechanism)
+        t, c2c = _price_flat(topo, sched.coll, nbytes, flat_mechanism)
+        if packed:
+            t += 2.0 * cost_model.pack_pass_time(topo, nbytes)
+        return t, c2c
+    if packed:
+        sched = schedule_ir.with_packing(sched)
     est = cost_model.estimate_schedule(topo, sched, nbytes)
     t = est.pipelined_s if sched.pipelined else est.sequential_s
     return t, est.c2c_s
@@ -496,10 +510,12 @@ def _model_leg(topo: HetTopology, coll: str, mech: str, wire: int) -> float:
 
 def _price_candidates(topo: HetTopology, coll: str, nbytes: int,
                       max_chunks: int, compressions,
-                      flat_mechanism: str) -> list[tuple[float, Candidate]]:
+                      flat_mechanism: str,
+                      packed: bool = False) -> list[tuple[float, Candidate]]:
     priced: list[tuple[float, Candidate]] = []
     for sched in _candidate_schedules(coll, max_chunks, compressions):
-        t, _ = _price_schedule(topo, sched, nbytes, flat_mechanism)
+        t, _ = _price_schedule(topo, sched, nbytes, flat_mechanism,
+                               packed=packed)
         priced.append((t, Candidate.of(sched)))
     return priced
 
@@ -535,11 +551,12 @@ def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
                 tol: float = 0.25,
                 flat_mechanism: str = "host",
                 chunk_bytes: int = 4 << 20,
+                packed: bool = False,
                 _sim_cache: dict | None = None) -> BucketPlan:
     """Choose the best validated schedule for one bucket on one topology
     (sequential objective: minimize the bucket's own sync time)."""
     priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
-                               flat_mechanism)
+                               flat_mechanism, packed=packed)
     priced.sort(key=lambda x: x[0])
     return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
                             chunk_bytes, _sim_cache)
@@ -552,6 +569,7 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
                         tol: float = 0.25,
                         flat_mechanism: str = "host",
                         chunk_bytes: int = 4 << 20,
+                        packed: bool = False,
                         _sim_cache: dict | None = None) -> BucketPlan:
     """Choose the schedule minimizing the bucket's *exposed* time.
 
@@ -571,7 +589,7 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
         return (inc, _COMP_RANK[cand.compression], t)
 
     priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
-                               flat_mechanism)
+                               flat_mechanism, packed=packed)
     priced.sort(key=key)
     return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
                             chunk_bytes, _sim_cache)
@@ -589,6 +607,7 @@ def plan(topo: HetTopology, bucket_sizes, *,
          backward_compute_s: float | None = None,
          skew: Any = None,
          skew_compute_s: Sequence[float] | None = None,
+         packed: bool = False,
          _sim_cache: dict | None = None) -> CommPlan:
     """Plan the communication schedule for a list of gradient buckets.
 
@@ -623,6 +642,13 @@ def plan(topo: HetTopology, bucket_sizes, *,
         comm channel against the compute timeline, optimizes *exposed*
         rather than total comm time (``plan_bucket_overlap``), and
         attaches an ``OverlapReport`` to the returned plan.
+      packed: price every candidate through the packed data path
+        (``schedule.with_packing``) — one Pack + one Unpack per bucket
+        sync, charged at launch-α + one on-device-copy pass.  Launchers
+        executing ``TrainConfig.packed`` pass True so the overlap-vs-
+        monolithic decision sees the per-bucket pack α it must amortize
+        (DESIGN.md §11); analytical callers comparing against raw
+        ``estimate_schedule`` output keep the default.
       skew / skew_compute_s: the uneven batch split the plan executes
         under (``core.skew.SkewSplit``) and its per-cluster compute
         times (``skew.compute_times``).  Candidates are then scored by
@@ -647,7 +673,8 @@ def plan(topo: HetTopology, bucket_sizes, *,
             topologies.append((bal, True))
 
     kw = dict(max_chunks=max_chunks, compressions=compressions, tol=tol,
-              flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes)
+              flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes,
+              packed=packed)
     skew_fields = dict(
         skew=skew,
         compute_s=tuple(float(x) for x in (skew_compute_s or ())),
@@ -676,13 +703,22 @@ def plan(topo: HetTopology, bucket_sizes, *,
             buckets_l: list[BucketPlan] = []
             timeline: list[OverlapBucket] = []
             free = 0.0
+            # the packed overlap chain packs the WHOLE tree once and
+            # syncs slices (check_packed.py asserts one pack), so the
+            # per-bucket candidates are priced unpacked and the chain's
+            # single pack+unpack is charged once on the report below —
+            # charging Pack/Unpack per bucket would bias the
+            # overlap-vs-monolithic decision by 2(N-1) launch αs the
+            # execution never pays
+            bucket_kw = dict(kw)
+            bucket_kw["packed"] = False
             for n in sizes:
                 acc += n
                 ready = backward_compute_s * acc / total_b
                 bp = plan_bucket_overlap(
                     t, coll, n, ready_s=ready, free_s=free,
                     backward_s=backward_compute_s,
-                    _sim_cache=sim_cache, **kw)
+                    _sim_cache=sim_cache, **bucket_kw)
                 start = max(ready, free)
                 end = start + bp.predicted_s
                 exposed = (max(0.0, end - backward_compute_s)
@@ -693,10 +729,14 @@ def plan(topo: HetTopology, bucket_sizes, *,
                 free = end
             mono = plan_bucket(t, coll, sum(sizes), _sim_cache=sim_cache,
                                **kw)
+            # the chain's one pack + one unpack: charged conservatively
+            # as fully exposed (the unpack runs after the last bucket)
+            chain_pack = (2.0 * cost_model.pack_pass_time(t, sum(sizes))
+                          if packed else 0.0)
             report = OverlapReport(
                 backward_compute_s,
-                sum(b.predicted_s for b in buckets_l),
-                max(0.0, free - backward_compute_s),
+                sum(b.predicted_s for b in buckets_l) + chain_pack,
+                max(0.0, free - backward_compute_s) + chain_pack,
                 tuple(timeline),
                 monolithic_comm_s=mono.predicted_s)
             cand = CommPlan(t, balanced, coll, pod_axis, intra_axis,

@@ -176,6 +176,26 @@ class Scale(Step):
 
 
 @dataclasses.dataclass(frozen=True)
+class Pack(Step):
+    """Local data-path step writing every gradient leaf into the
+    persistent dtype-bucketed comm buffer (``core/packing.py``): one
+    fused concatenate at the pytree boundary.  The executor's pytree
+    entry points perform it (the array-level interpreter sees an
+    already-packed buffer and treats the step as identity); the pricer
+    and the simulator charge one launch α plus one HBM pass of ``vol``
+    bytes through the cluster's on-device copy bandwidth — the cost the
+    planner amortizes when choosing bucket granularity (DESIGN.md §11)."""
+    vol: str = FULL
+
+
+@dataclasses.dataclass(frozen=True)
+class Unpack(Step):
+    """Inverse of :class:`Pack`: static-slice every leaf back out of
+    the synced buffer.  Same pricing model as Pack."""
+    vol: str = FULL
+
+
+@dataclasses.dataclass(frozen=True)
 class Flat(Step):
     """The non-hierarchical baseline: one native collective spanning
     every data-parallel axis (the homogeneous-library emulation).
@@ -226,6 +246,21 @@ class Schedule:
             else:
                 out.append(s)
         return tuple(out), k
+
+
+def with_packing(sched: Schedule) -> Schedule:
+    """Packed-data-path variant of ``sched``: wrap the steps in one
+    :class:`Pack` and one :class:`Unpack`.  A schedule-level wrapper
+    like :func:`with_cluster_scale` — the packed layout is a runtime
+    value (``core/packing.py``), not schedule structure, so every
+    registered mode gains a packed variant with no new builder
+    (``tools/check_schedule_cover.py`` asserts exactly that).
+    Idempotent; the Pack sits first so its cost lands in the start
+    phase, the Unpack last (end phase)."""
+    if any(isinstance(s, (Pack, Unpack)) for s in sched.steps):
+        return sched
+    return dataclasses.replace(
+        sched, steps=(Pack("start"),) + sched.steps + (Unpack("end"),))
 
 
 def with_cluster_scale(sched: Schedule) -> Schedule:

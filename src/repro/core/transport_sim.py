@@ -143,7 +143,8 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
     from . import cost_model  # local: keeps the module importable alone
     if isinstance(step, (schedule_ir.IntraReduceScatter,
                          schedule_ir.IntraAllGather, schedule_ir.IntraBcast,
-                         schedule_ir.BorderGather)):
+                         schedule_ir.BorderGather,
+                         schedule_ir.Pack, schedule_ir.Unpack)):
         return max(cost_model._intra_step_time(step, topo, ci, nbytes)
                    for ci in range(topo.n_clusters))
     if isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
@@ -185,7 +186,14 @@ def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
         n_c = per if chunk < k - 1 else nbytes_per_rank - per * (k - 1)
         t = 0.0
         for si, step in enumerate(steps):
-            dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
+            if isinstance(step, (schedule_ir.Pack, schedule_ir.Unpack)):
+                # packing happens ONCE per sync at trace time, outside
+                # the chunk loop — charge the full payload on the first
+                # chunk only (mirrors the pricer's single pass)
+                dur = (0.0 if chunk else _sim_step_time(
+                    step, topo, nbytes_per_rank, mechanism, chunk_bytes))
+            else:
+                dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
             start = max(t, stage_free[si])
             t = start + dur
             stage_free[si] = t
@@ -223,10 +231,17 @@ def simulate_step(topo: HetTopology, sched: schedule_ir.Schedule,
         n_c = per if chunk < k - 1 else nbytes_per_rank - per * (k - 1)
         t = list(comp)
         for si, step in enumerate(steps):
-            if isinstance(step, (schedule_ir.IntraReduceScatter,
-                                 schedule_ir.IntraAllGather,
-                                 schedule_ir.IntraBcast,
-                                 schedule_ir.BorderGather)):
+            if isinstance(step, (schedule_ir.Pack, schedule_ir.Unpack)):
+                # once per sync, not per chunk (see simulate_schedule)
+                for ci in range(C):
+                    dur = (0.0 if chunk else cost_model._intra_step_time(
+                        step, topo, ci, nbytes_per_rank))
+                    t[ci] = max(t[ci], stage_free[si][ci]) + dur
+                    stage_free[si][ci] = t[ci]
+            elif isinstance(step, (schedule_ir.IntraReduceScatter,
+                                   schedule_ir.IntraAllGather,
+                                   schedule_ir.IntraBcast,
+                                   schedule_ir.BorderGather)):
                 for ci in range(C):
                     dur = cost_model._intra_step_time(step, topo, ci, n_c)
                     t[ci] = max(t[ci], stage_free[si][ci]) + dur

@@ -5,6 +5,22 @@ KV-cache transfer: symmetric per-block int8 with an f32 scale.  On TPU
 this fuses the amax reduction, scaling, rounding and clipping into one
 VMEM pass per block (the jnp fallback materializes three HBM-sized
 intermediates).  Block = 1024 lanes = 8 full 128-lane vregs.
+
+Three kernel families (``core/compression.py`` is the consumer):
+
+  * ``quant_int8_call`` — fused amax+scale+round+clip, one pass.  Used
+    when the scale is local (standalone quantization, KV transfer).
+  * ``amax_block_call`` + ``quant_scaled_call`` — the *shared-scale*
+    collective codec: the per-block amax reduction is its own one-read
+    pass so the scales can be ``pmax``'d across the axis (integer
+    partial sums stay exact), then the quantize runs one fused
+    read+write pass with the agreed scale.  The per-cluster gradient
+    weight folds into the nb-sized scale vector (scale/w on the
+    encode side ≡ multiplying the payload by w), so the schedule IR's
+    ``Scale`` step costs zero payload-sized HBM traffic.
+  * ``dequant_int8_call`` — decode; an optional ``gain`` folds any
+    post-sum scalar (cluster scale epilogue, 1/n mean) into the same
+    nb-sized scale multiply instead of a payload-sized pass.
 """
 
 from __future__ import annotations
@@ -31,6 +47,16 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[0] = (q_ref[0].astype(jnp.float32) * s_ref[0, 0]).astype(x_ref.dtype)
 
 
+def _amax_kernel(x_ref, a_ref):
+    a_ref[0, 0] = jnp.max(jnp.abs(x_ref[0].astype(jnp.float32)))
+
+
+def _quant_scaled_kernel(x_ref, s_ref, q_ref):
+    x = x_ref[0].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s_ref[0, 0]), -127, 127)
+    q_ref[0] = q.astype(jnp.int8)
+
+
 def quant_int8_call(x: jax.Array, *, interpret: bool = True):
     """x: flat (N,) with N % BLOCK == 0 -> (q (nb, BLOCK) int8, s (nb,) f32)."""
     assert x.ndim == 1 and x.size % BLOCK == 0, x.shape
@@ -49,9 +75,53 @@ def quant_int8_call(x: jax.Array, *, interpret: bool = True):
     return q, s[:, 0]
 
 
-def dequant_int8_call(q: jax.Array, s: jax.Array, *, dtype=jnp.float32,
+def amax_block_call(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x: flat (N,) with N % BLOCK == 0 -> per-block |max| (nb,) f32.
+    The one read pass of the shared-scale collective codec (the caller
+    pmax'es the result across the comm axis before quantizing)."""
+    assert x.ndim == 1 and x.size % BLOCK == 0, x.shape
+    nb = x.size // BLOCK
+    a = pl.pallas_call(
+        _amax_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        interpret=interpret,
+    )(x.reshape(nb, BLOCK))
+    return a[:, 0]
+
+
+def quant_scaled_call(x: jax.Array, scale: jax.Array, *,
                       interpret: bool = True) -> jax.Array:
+    """Quantize flat ``x`` with a caller-provided per-block scale
+    (shared-scale codec): one fused scale+round+clip+cast pass.
+    Cluster-weight folding happens in the nb-sized ``scale`` argument
+    (pass ``scale / w``), never on the payload."""
+    assert x.ndim == 1 and x.size % BLOCK == 0, x.shape
+    nb = x.size // BLOCK
+    q = pl.pallas_call(
+        _quant_scaled_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.int8),
+        interpret=interpret,
+    )(x.reshape(nb, BLOCK), scale.reshape(nb, 1))
+    return q
+
+
+def dequant_int8_call(q: jax.Array, s: jax.Array, *, dtype=jnp.float32,
+                      gain: jax.Array | float | None = None,
+                      interpret: bool = True) -> jax.Array:
+    """Decode (nb, BLOCK) int8 with per-block scale ``s``.  ``gain``
+    is the fused epilogue: any post-sum scalar (cluster weight, 1/n
+    mean) multiplies the nb-sized scale vector here instead of costing
+    a payload-sized HBM pass after the decode."""
     nb = q.shape[0]
+    if gain is not None:
+        s = s * gain
     out = pl.pallas_call(
         _dequant_kernel,
         grid=(nb,),
@@ -60,5 +130,5 @@ def dequant_int8_call(q: jax.Array, s: jax.Array, *, dtype=jnp.float32,
         out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, BLOCK), dtype),
         interpret=interpret,
-    )(q, s.reshape(nb, 1))
+    )(q, s.reshape(nb, 1).astype(jnp.float32))
     return out.reshape(-1)

@@ -63,7 +63,7 @@ def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
 
 def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
               allow_int8: bool = False, shape_name: str | None = None,
-              skew: str = "none"):
+              skew: str = "none", packed: bool = True):
     """--plan auto: run the cost-model planner for this cell's
     production topology and gradient volume; returns
     (CommPlan, chosen Candidate).
@@ -106,7 +106,12 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
         coll="reduce_scatter" if comm_mode == "hier_zero1" else "all_reduce",
         pod_axis="pod" if multi_pod else None, intra_axis="data",
         compressions=(None, "bf16", "int8") if allow_int8 else (None, "bf16"),
-        flat_mechanism="native", try_balanced=False)
+        flat_mechanism="native", try_balanced=False,
+        # candidates are priced for the data path that will execute:
+        # Pack/Unpack steps when packed (DESIGN.md §11), legacy re-pads
+        # free when --no-packed — so the A/B axis compares the same
+        # plan under both executors
+        packed=packed)
     # structural modes (fsdp / hier_zero1) execute a monolithic sync, so
     # their plan must be priced at that granularity
     sizes, backward_s, train_shape = [grad_bytes], None, None
@@ -152,7 +157,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                use_pallas: bool = False, n_chunks: int = 4,
                compression: str | None = None,
                capacity_factor: float = 1.25,
-               remat_policy: str = "none", plan=None):
+               remat_policy: str = "none", plan=None,
+               packed: bool = True):
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     ok, why = cell_applicable(cfg, shape)
@@ -183,6 +189,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if is_train:
         tcfg = TrainConfig(comm_mode=comm_mode, n_chunks=n_chunks,
                            dcn_compression=compression, plan=plan,
+                           packed=packed,
                            # the fsdp sync path reads tcfg.cluster_weights
                            # directly, so the plan's weights must be
                            # mirrored here for the lowered HLO to run
@@ -192,13 +199,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         build, _ = make_train_step(model, tcfg, mesh=mesh, donate=False)
         step, _ = build(pshape)
         if tcfg.comm_mode == "hier_zero1":
+            from repro.core import packing
             from repro.train import optimizer as opt_lib
             # the flat master is built from LOCAL (TP-sharded) leaves per
             # model column, scattered over data: global dim = local shard
-            # x (data x model)
+            # x (data x model).  The master layout is the packed
+            # per-wire-dtype one (collectives._zero1_layout), so the
+            # padded size comes from the same planner the step executes.
             isize, tpsize = sizes["data"], sizes.get("model", 1)
             specs = model.param_specs(pshape)
-            local_total = 0
+            local_metas = []
             for leaf, spec in zip(jax.tree.leaves(pshape),
                                   jax.tree.leaves(specs)):
                 n = 1
@@ -211,8 +221,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                                    else (names,)):
                             div *= sizes[nm]
                     n *= s // div
-                local_total += n
-            padded_local = -(-local_total // isize) * isize
+                local_metas.append((str(leaf.dtype), (n,), n))
+            layout = packing.plan_layout(local_metas, world=isize,
+                                         block=packing.DEFAULT_BLOCK)
+            padded_local = layout.padded_total
             shard_n = padded_local // isize
             gdim = shard_n * isize * tpsize
             shard = jax.ShapeDtypeStruct((gdim,), jnp.float32)
@@ -304,6 +316,9 @@ def main():
     ap.add_argument("--capacity-factor", type=float, default=1.25)
     ap.add_argument("--remat-policy", default="none",
                     choices=["none", "save_collectives"])
+    ap.add_argument("--no-packed", action="store_true",
+                    help="disable the zero-copy packed gradient data "
+                         "path (legacy per-step re-flatten; A/B axis)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -317,7 +332,8 @@ def main():
                 args.arch, multi_pod=args.mesh == "multi",
                 comm_mode=args.mode or "hier",
                 allow_int8=args.compression == "int8",
-                shape_name=args.shape, skew=args.skew)
+                shape_name=args.shape, skew=args.skew,
+                packed=not args.no_packed)
             # explicitly-flagged structural modes (fsdp / hier_zero1) keep
             # their optimizer wiring; the schedule comes from the plan,
             # resolved per bucket inside the collectives.  For the rest,
@@ -343,7 +359,8 @@ def main():
                          use_pallas=args.pallas, n_chunks=chunks,
                          compression=comp,
                          capacity_factor=args.capacity_factor,
-                         remat_policy=args.remat_policy, plan=plan)
+                         remat_policy=args.remat_policy, plan=plan,
+                         packed=not args.no_packed)
     except Exception as e:  # noqa: BLE001
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm_mode": mode, "status": "error",

@@ -68,6 +68,9 @@ def main(argv=None):
                          "--plan auto the comm plan is jointly optimized "
                          "with the split")
     ap.add_argument("--compression", default=None, choices=["bf16", "int8"])
+    ap.add_argument("--no-packed", action="store_true",
+                    help="disable the zero-copy packed gradient data "
+                         "path (legacy per-step re-flatten; A/B axis)")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -113,7 +116,10 @@ def main(argv=None):
             compressions=allowed, flat_mechanism="native",
             # balanced subgroups are advisory (the mesh can't subdivide
             # pods) — executable plans price the mesh as it runs
-            try_balanced=False)
+            try_balanced=False,
+            # the step executes the packed data path, so candidates are
+            # priced with the Pack/Unpack steps (DESIGN.md §11)
+            packed=not args.no_packed)
         # overlap axis: price the readiness-ordered layer buckets against
         # the backward-compute timeline so the plan optimizes exposed
         # rather than total comm time (core/overlap.py).  Structural
@@ -202,6 +208,7 @@ def main(argv=None):
     tcfg = TrainConfig(comm_mode=mode,
                        dcn_compression=args.compression, plan=plan,
                        cluster_weights=cluster_weights,
+                       packed=not args.no_packed,
                        opt=OptConfig(lr=args.lr, warmup_steps=20))
     builder_or_step, init = make_train_step(model, tcfg, mesh=mesh)
     params, opt = init(jax.random.key(0))

@@ -67,6 +67,11 @@ class TrainConfig:
     # planner-side bucket_sizes_for_volume uses, so a plan priced with
     # default caps describes the layout that actually executes
     bucket_cap_mb: int = overlap_lib.DEFAULT_CAP_BYTES >> 20
+    # zero-copy packed gradient data path (core/packing.py, DESIGN.md
+    # §11): one persistent trace-time layout, one pack + one unpack per
+    # step, no per-bucket/per-chunk re-concatenation.  False keeps the
+    # legacy per-step re-flatten (benchmarks A/B both).
+    packed: bool = True
     # per-pod gradient weights for the skew-aware uneven batch split
     # (core/skew.py SkewSplit.weights: mean 1 over pods).  The weighted
     # sync keeps psum(w*g)/n_dp the exact global-batch mean gradient
@@ -163,6 +168,9 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
             # reconstruction (ZeRO-1): RS(ICI) -> c2cRed(DCN) gives the
             # synced f32 shard that feeds Adam directly.
             shard, fmeta = coll.tree_hier_psum_scatter(grads, ccfg)
+            # (the packed master layout groups leaves by wire dtype so
+            # the sync and the reconstruction gather below run bf16
+            # segments at 2 bytes/elem — collectives.FlatShardMeta)
             # grad norm on the scattered shard.  Replicated leaves
             # (norms/biases, <0.1% of params) appear once per TP column
             # and are over-counted x tp — documented approximation;
@@ -176,9 +184,8 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
             clip = jnp.minimum(1.0, tcfg.opt.grad_clip / (gnorm + 1e-9))
             zstate = opt_lib.zero_update(shard, opt_state, tcfg.opt,
                                          clip / n_dp)
-            flat_full = coll.hier_all_gather_flat(zstate.flat_param, ccfg,
-                                                  fmeta.total)
-            new_params = fmeta.unflatten(flat_full)
+            new_params = coll.tree_hier_unscatter(zstate.flat_param, fmeta,
+                                                  ccfg)
             new_opt = zstate
         else:
             if tcfg.comm_mode == "fsdp":
@@ -190,16 +197,23 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
                     if _spec_has(s, "data"):
                         if rt.pod_axis is None:
                             return g
+                        w = None
                         if tcfg.cluster_weights is not None:
                             # the autodiff transpose already did the
                             # intra RS; the weight is constant within a
                             # pod, so scaling here is still the exact
                             # uneven-shard weighted reduction
-                            w = jnp.asarray(tcfg.cluster_weights, g.dtype)
-                            g = g * w[lax.axis_index(rt.pod_axis)]
+                            w = jnp.asarray(tcfg.cluster_weights,
+                                            jnp.float32)[
+                                lax.axis_index(rt.pod_axis)]
                         if tcfg.dcn_compression:
+                            # weight folds into the codec's scale vector
+                            # (zero payload-sized HBM traffic)
                             return compression.compressed_psum(
-                                g, rt.pod_axis, tcfg.dcn_compression)
+                                g, rt.pod_axis, tcfg.dcn_compression,
+                                weight=w)
+                        if w is not None:
+                            g = g * w.astype(g.dtype)
                         return lax.psum(g, rt.pod_axis)
                     return coll.hier_psum(g, ccfg) if dp_axes else g
                 grads = jax.tree.map(sync, grads, specs)
@@ -208,9 +222,11 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
                 # bucket's C2C with the backward ops still producing
                 # later buckets (core/overlap.py)
                 grads = overlap_lib.tree_hier_psum_overlap(
-                    grads, ccfg, cap_bytes=tcfg.bucket_cap_mb << 20)
+                    grads, ccfg, cap_bytes=tcfg.bucket_cap_mb << 20,
+                    packed=tcfg.packed)
             elif dp_axes:
-                grads = coll.tree_hier_psum(grads, ccfg)
+                grads = coll.tree_hier_psum(grads, ccfg,
+                                            packed=tcfg.packed)
             gnorm = _global_grad_norm(grads, specs, rt) / n_dp
             clip = jnp.minimum(1.0, tcfg.opt.grad_clip / (gnorm + 1e-9))
             new_params, new_opt = opt_lib.adam_update(grads, opt_state, params,
@@ -225,12 +241,10 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
     # ---------------- init ------------------------------------------------
     def zero_bootstrap(params):
         """Build the ZeRO master shard from (local) params inside
-        shard_map: flatten -> slice this device's data-axis shard."""
-        isize = lax.psum(1, ccfg.intra_axis)
-        flat, fmeta = coll.tree_flatten_f32(params, isize)
-        shard_size = fmeta.padded // isize
-        off = lax.axis_index(ccfg.intra_axis) * shard_size
-        shard = lax.dynamic_slice_in_dim(flat, off, shard_size)
+        shard_map: pack per wire-dtype segment, slice this device's
+        per-segment shard (the same persistent layout the scattered
+        grad sync and the reconstruction gather use)."""
+        shard, _ = coll.zero1_local_shard(params, ccfg)
         return opt_lib.zero_init_from_flatparam(shard)
 
     def init_fn(key):

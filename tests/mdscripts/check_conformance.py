@@ -106,10 +106,13 @@ for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
         for compression in (None, "bf16"):
             check(mode, n_chunks, compression)
 
-# lossy int8 wire: hierarchical modes only (flat never compresses), one
-# chunk count per mode — the codec is chunk-independent.
+# lossy int8 wire: hierarchical modes only (flat never compresses),
+# every chunk count — the packed data path must keep the block codec
+# pad-free through the chunk pipeline (hier_border_rs takes no int8
+# wire, its builder rejects the codec).
 for mode in ("hier", "hier_pipelined", "hier_overlap"):
-    check(mode, 4, "int8")
+    for n_chunks in (1, 2, 4):
+        check(mode, n_chunks, "int8")
 
 # --- uneven-shard weighted rows (skew partitioner; DESIGN.md §10) ----------
 # Per-pod gradient weights, mean 1 over the 2 pods (SkewSplit.weights
@@ -159,6 +162,47 @@ for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
     for n_chunks in (1, 4):
         for compression in (None, "bf16"):
             check_weighted(mode, n_chunks, compression)
+
+# weighted int8: the cluster weight folds into the codec's scale vector
+# (scale/w on the encode side — zero payload-sized HBM traffic), which
+# must still reproduce the even-split fp32 baseline within codec tol.
+for mode in ("hier", "hier_pipelined", "hier_overlap"):
+    for n_chunks in (1, 4):
+        check_weighted(mode, n_chunks, "int8")
+
+# --- legacy (unpacked) data path stays correct ------------------------------
+# The packed path is the default above; pin the packed=False branch so
+# the benchmark A/B baseline cannot rot.
+
+
+def check_legacy(mode, n_chunks, compression):
+    cfg = CommConfig(mode="hier" if mode == "hier_overlap" else mode,
+                     pod_axis="pod", intra_axis="data",
+                     n_chunks=n_chunks, compression=compression)
+
+    def run(tree):
+        if mode == "hier_overlap":
+            return overlap.tree_hier_psum_overlap(tree, cfg, cap_bytes=CAP,
+                                                  packed=False)
+        return tree_hier_psum(tree, cfg, packed=False)
+
+    fn = jax.jit(shard_map(run, mesh=mesh, in_specs=(SPECS,),
+                           out_specs=SPECS, check_vma=False))
+    got = jax.tree.map(np.asarray, fn(TREE))
+    tol = TOL[compression]
+    for g, b in zip(jax.tree.leaves(got), jax.tree.leaves(BASE)):
+        np.testing.assert_allclose(
+            g, b, rtol=tol, atol=tol,
+            err_msg=f"legacy {mode} n_chunks={n_chunks} "
+                    f"compression={compression}")
+    print(f"OK-L {mode:15s} n_chunks={n_chunks} "
+          f"compression={str(compression):5s}")
+
+
+for mode, n_chunks, compression in (("hier", 1, None),
+                                    ("hier_pipelined", 4, "int8"),
+                                    ("hier_overlap", 2, "bf16")):
+    check_legacy(mode, n_chunks, compression)
 
 # --- regression: pod_axis=None + hier_pipelined degenerates cleanly ----
 mesh1d = jax.make_mesh((8,), ("data",))

@@ -1,0 +1,186 @@
+"""Packed gradient data path: jaxpr-level zero-copy assertions plus
+the ZeRO-1 per-dtype wire checks (DESIGN.md §11).
+
+The acceptance bar of the packed path is *structural*, not just
+numeric: the traced gradient sync must contain exactly ONE pack
+concatenate (all leaves + padding fused into one op) and a slice-only
+unpack — no per-bucket, per-chunk, or per-codec ``jnp.concatenate``
+anywhere in the step, for every comm mode including the chunk-
+pipelined int8 worst case that used to re-pad three times.  The legacy
+(unpacked) path must trace strictly more concatenates on the same
+tree, or the assertion is vacuous.
+
+Also covered here (needs the 8-device mesh):
+  * ZeRO-1 packed master: scatter + unscatter round-trips a mixed
+    f32/bf16 tree to the flat fp32 baseline, and the reconstruction
+    AllGather runs in bf16 for the bf16 segment (2 bytes on the wire —
+    the dtype-preservation satellite).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import lax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import overlap  # noqa: E402
+from repro.core import collectives as coll  # noqa: E402
+from repro.core.collectives import CommConfig  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+L = 6
+ks = jax.random.split(jax.random.key(3), 5)
+TREE = {
+    "embed": jax.random.normal(ks[0], (37, 19), jnp.float32),
+    "layers": {"wq": jax.random.normal(ks[1], (L, 19, 19), jnp.float32),
+               "norm_scale": jax.random.normal(ks[2], (L, 19), jnp.float32)},
+    "final_norm": {"scale": jax.random.normal(ks[3], (19,), jnp.float32)},
+    "lm_head": jax.random.normal(ks[4], (37, 19), jnp.float32),
+}
+SPECS = jax.tree.map(lambda _: P(), TREE)
+
+
+def _count(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in ``jaxpr``, recursing into
+    every sub-jaxpr (scan/while/pjit/shard_map bodies)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    total += _count(v.jaxpr, name)
+                elif hasattr(v, "eqns"):
+                    total += _count(v, name)
+    return total
+
+
+def _gather_in_dtypes(jaxpr) -> list:
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "all_gather":
+            out.append(eqn.invars[0].aval.dtype)
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    out.extend(_gather_in_dtypes(v.jaxpr))
+                elif hasattr(v, "eqns"):
+                    out.extend(_gather_in_dtypes(v))
+    return out
+
+
+def sync_jaxpr(mode, n_chunks, compression, packed, weights=None):
+    cfg = CommConfig(mode="hier" if mode == "hier_overlap" else mode,
+                     pod_axis="pod", intra_axis="data", n_chunks=n_chunks,
+                     compression=compression, cluster_weights=weights)
+
+    def run(tree):
+        if mode == "hier_overlap":
+            return overlap.tree_hier_psum_overlap(tree, cfg, packed=packed)
+        return coll.tree_hier_psum(tree, cfg, packed=packed)
+
+    fn = shard_map(run, mesh=mesh, in_specs=(SPECS,), out_specs=SPECS,
+                   check_vma=False)
+    return jax.make_jaxpr(fn)(TREE)
+
+
+# --- exactly one pack, slice-only unpack, per mode --------------------------
+# (the all-f32 smoke tree has one wire-dtype segment, so "one pack" ==
+# one concatenate in the whole traced step)
+for mode, n_chunks, compression in (
+        ("hier", 1, None),
+        ("hier", 1, "int8"),
+        ("hier_pipelined", 4, None),
+        ("hier_pipelined", 4, "int8"),       # the old triple-re-pad case
+        ("hier_border_rs", 1, "bf16"),
+):
+    packed_c = _count(sync_jaxpr(mode, n_chunks, compression, True).jaxpr,
+                      "concatenate")
+    legacy_c = _count(sync_jaxpr(mode, n_chunks, compression, False).jaxpr,
+                      "concatenate")
+    assert packed_c == 1, (
+        f"{mode}/k={n_chunks}/{compression}: packed path traced {packed_c} "
+        f"concatenates, want exactly 1 (the single pack)")
+    assert legacy_c > packed_c, (
+        f"{mode}/k={n_chunks}/{compression}: legacy traced {legacy_c}, "
+        f"not more than packed {packed_c} — assertion is vacuous")
+    print(f"OK-J {mode:15s} k={n_chunks} codec={str(compression):5s} "
+          f"packed_concats={packed_c} legacy={legacy_c}")
+
+# weighted sync must not add payload passes or concats (Scale defers
+# into the C2C stage / codec scale vector)
+wj = sync_jaxpr("hier_pipelined", 4, "int8", True, weights=(1.5, 0.5))
+assert _count(wj.jaxpr, "concatenate") == 1, "weighted sync added concats"
+print("OK-J weighted hier_pipelined int8: still exactly one pack")
+
+# the overlap chain packs once and unpacks by slicing each bucket's
+# output directly; stacked leaves split across buckets each reassemble
+# with one concatenate — bounded by leaf count, never per step/bucket
+CAP = 2 * (19 * 19 + 19) * 4
+cfg_o = CommConfig(mode="hier", pod_axis="pod", intra_axis="data",
+                   n_chunks=1)
+fn_o = shard_map(lambda t: overlap.tree_hier_psum_overlap(t, cfg_o,
+                                                          cap_bytes=CAP),
+                 mesh=mesh, in_specs=(SPECS,), out_specs=SPECS,
+                 check_vma=False)
+oc = _count(jax.make_jaxpr(fn_o)(TREE).jaxpr, "concatenate")
+n_stacked = 2        # wq + norm_scale can split across layer buckets
+assert oc <= 1 + n_stacked, f"overlap packed path traced {oc} concatenates"
+print(f"OK-J hier_overlap packed: {oc} concatenates (pack + "
+      f"<= {n_stacked} stacked-leaf reassemblies)")
+
+# --- ZeRO-1 packed master: mixed-dtype roundtrip + bf16 wire ----------------
+MTREE = {
+    "w_f32": jax.random.normal(ks[0], (33, 7), jnp.float32),
+    "w_bf16": jax.random.normal(ks[1], (41,), jnp.float32).astype(jnp.bfloat16),
+    "b_f32": jax.random.normal(ks[2], (5,), jnp.float32),
+}
+MSPECS = jax.tree.map(lambda _: P(), MTREE)
+cfg_z = CommConfig(mode="hier", pod_axis="pod", intra_axis="data", n_chunks=1)
+
+
+def zsync(tree):
+    shard, fmeta = coll.tree_hier_psum_scatter(tree, cfg_z)
+    return coll.tree_hier_unscatter(shard, fmeta, cfg_z)
+
+
+zfn = jax.jit(shard_map(zsync, mesh=mesh, in_specs=(MSPECS,),
+                        out_specs=MSPECS, check_vma=False))
+base_fn = jax.jit(shard_map(
+    lambda t: jax.tree.map(
+        lambda g: lax.psum(g.astype(jnp.float32),
+                           ("pod", "data")).astype(g.dtype), t),
+    mesh=mesh, in_specs=(MSPECS,), out_specs=MSPECS, check_vma=False))
+got = jax.tree.map(np.asarray, zfn(MTREE))
+want = jax.tree.map(np.asarray, base_fn(MTREE))
+for k in MTREE:
+    g, w = got[k], want[k]
+    assert g.dtype == w.dtype, (k, g.dtype)
+    # bf16 segments REDUCE in f32 (same accumulation as the old flat
+    # path — only the reconstruction gather rides the 2-byte wire), so
+    # the tolerance is one bf16 rounding, not an accumulation drift
+    tol = 0.02 if g.dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(g.astype(np.float32), w.astype(np.float32),
+                               rtol=tol, atol=tol, err_msg=k)
+print("OK-Z zero1 packed scatter/unscatter mixed-dtype roundtrip")
+
+# the reconstruction gather must move the bf16 segment at 2 bytes/elem:
+# at least one all_gather consumes a bf16 operand
+zj = jax.make_jaxpr(shard_map(zsync, mesh=mesh, in_specs=(MSPECS,),
+                              out_specs=MSPECS, check_vma=False))(MTREE)
+dts = _gather_in_dtypes(zj.jaxpr)
+assert any(dt == jnp.bfloat16 for dt in dts), (
+    f"no bf16 all_gather in the zero1 reconstruction (got {dts}) — "
+    "the bf16 segment is riding the wire upcast")
+print(f"OK-Z bf16 segment gathers in bf16 (all_gather dtypes: "
+      f"{sorted(set(str(d) for d in dts))})")
+
+print("ALL-OK")

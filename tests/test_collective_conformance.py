@@ -15,10 +15,17 @@ def test_collective_conformance_matrix_8dev():
     on 1/w-prescaled inputs must reproduce the even-split flat fp32
     baseline — DESIGN.md §10)."""
     out = run_mdscript("check_conformance.py")
-    # every cell of the matrix actually ran
+    # every cell of the matrix actually ran (the packed data path is
+    # the default executor for all of these rows)
     for mode in ("flat", "hier", "hier_pipelined", "hier_border_rs",
                  "hier_overlap"):
         assert out.count(f"OK {mode:15s}") >= 6, mode
         # uneven-shard weighted rows: 2 chunk counts x 2 codecs per mode
         assert out.count(f"OK-W {mode:15s}") >= 4, ("weighted", mode)
+    # int8 x chunk-count rows (packed block codec never re-pads) and
+    # weighted-int8 rows (weight folded into the codec scale vector)
+    assert out.count("compression=int8 ") >= 9 + 6
+    assert out.count("OK-W hier_pipelined  n_chunks=4 compression=int8") == 1
+    # the legacy (unpacked) A/B baseline stays correct
+    assert out.count("OK-L") >= 3
     assert "fallback (no chunk loop)" in out

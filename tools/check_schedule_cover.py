@@ -28,12 +28,13 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
-def _load_schedule():
-    """Load core/schedule.py directly — `from repro.core import
-    schedule` would execute the package __init__, which imports the
-    collectives and therefore jax; this gate must run with no deps."""
-    path = ROOT / "src" / "repro" / "core" / "schedule.py"
-    spec = importlib.util.spec_from_file_location("hetccl_schedule", path)
+def _load_module(name: str, fname: str):
+    """Load a core module directly — `from repro.core import ...` would
+    execute the package __init__, which imports the collectives and
+    therefore jax; this gate must run with no deps.  (core/schedule.py
+    and the layout half of core/packing.py are pure stdlib.)"""
+    path = ROOT / "src" / "repro" / "core" / fname
+    spec = importlib.util.spec_from_file_location(name, path)
     mod = importlib.util.module_from_spec(spec)
     # dataclasses resolves cls.__module__ through sys.modules at class
     # creation time — register before exec
@@ -42,7 +43,8 @@ def _load_schedule():
     return mod
 
 
-schedule = _load_schedule()
+schedule = _load_module("hetccl_schedule", "schedule.py")
+packing = _load_module("hetccl_packing", "packing.py")
 
 # A quoted token that looks like a comm mode: "flat" or "hier" with
 # optional _word suffixes.  Prose words like "hierarchical" don't match
@@ -92,6 +94,74 @@ def check_skew_matrix() -> list[str]:
     return errs
 
 
+def check_packed_matrix() -> list[str]:
+    """Every structural/registered mode's schedule must round-trip
+    through the packed data path: ``with_packing`` wraps it in exactly
+    one leading Pack and one trailing Unpack, idempotently, composing
+    with the weighted (cluster-scaled) variant — what
+    ``TrainConfig.packed`` executes (DESIGN.md §11).  And the packer
+    layout math itself must hold its invariants for every alignment the
+    comm modes can request (the jax-free half of core/packing.py)."""
+    errs: list[str] = []
+    n = 0
+    modes = set(schedule.registered_modes()) | set(
+        schedule.STRUCTURAL_MODES.values())
+    for mode in sorted(modes):
+        for coll in ("all_reduce", "reduce_scatter", "all_gather"):
+            for k in (1, 4):
+                tag = f"packed/{mode}/{coll}/chunks={k}"
+                try:
+                    sched = schedule.build_schedule(coll, mode, k)
+                    pk = schedule.with_packing(sched)
+                    w = schedule.with_cluster_scale(pk)
+                except Exception as e:  # noqa: BLE001 - report, don't die
+                    errs.append(f"{tag}: {type(e).__name__}: {e}")
+                    continue
+                if not isinstance(pk.steps[0], schedule.Pack):
+                    errs.append(f"{tag}: first step is not Pack")
+                if not isinstance(pk.steps[-1], schedule.Unpack):
+                    errs.append(f"{tag}: last step is not Unpack")
+                if schedule.with_packing(pk) is not pk:
+                    errs.append(f"{tag}: with_packing not idempotent")
+                if sum(isinstance(s, (schedule.Pack, schedule.Unpack))
+                       for s in w.steps) != 2:
+                    errs.append(f"{tag}: weighted variant lost packing")
+                n += 1
+    # pure layout math: the alignments every comm mode can request keep
+    # the shard/chunk/int8-block derivations whole
+    metas = [("float32", (37, 19), 703), ("bfloat16", (6, 19), 114),
+             ("float32", (19,), 19), ("float16", (5, 5, 5), 125)]
+    for world in (1, 2, 4, 8):
+        for k in (1, 2, 4):
+            for block in (1, packing.DEFAULT_BLOCK):
+                try:
+                    lay = packing.plan_layout(metas, world=world,
+                                              n_chunks=k, block=block)
+                    lay.validate()
+                except Exception as e:  # noqa: BLE001
+                    errs.append(f"layout/w={world}/k={k}/b={block}: {e}")
+                    continue
+                for seg in lay.segments:
+                    if seg.padded % (world * k) or \
+                            (seg.padded // (world * k)) % block:
+                        errs.append(
+                            f"layout/w={world}/k={k}/b={block}: segment "
+                            f"{seg.dtype} padded={seg.padded} misaligned")
+                n += 1
+    try:
+        blay = packing.plan_bucket_layout(
+            [[("float32", (10,), 10)], [("float32", (7,), 7)]],
+            align=[8, 4])
+        blay.validate()
+        if blay.bucket_bounds[0][1] != blay.bucket_bounds[1][0]:
+            errs.append("bucket layout: non-contiguous bucket bounds")
+        n += 1
+    except Exception as e:  # noqa: BLE001
+        errs.append(f"bucket layout: {e}")
+    print(f"packed-path matrix           : {n} variants round-trip")
+    return errs
+
+
 def main() -> int:
     registered = set(schedule.registered_modes())
     structural = schedule.STRUCTURAL_MODES
@@ -108,6 +178,7 @@ def main() -> int:
     print(f"structural wrapper modes     : {sorted(structural)}")
     print(f"mode strings found in source : {sorted(found)}")
     skew_errs = check_skew_matrix()
+    packed_errs = check_packed_matrix()
     if missing:
         print("\nFAIL: mode strings without a registered schedule builder "
               "(register one in src/repro/core/schedule.py or add a "
@@ -122,8 +193,15 @@ def main() -> int:
         for e in skew_errs[:20]:
             print(f"  {e}")
         return 1
-    print("OK: every mode string has a schedule builder and every "
-          "skew/mode combination resolves")
+    if packed_errs:
+        print("\nFAIL: packed-data-path round-trip failures "
+              "(schedule.with_packing / core.packing layout):")
+        for e in packed_errs[:20]:
+            print(f"  {e}")
+        return 1
+    print("OK: every mode string has a schedule builder, every skew/mode "
+          "combination resolves, and every schedule round-trips the "
+          "packed data path")
     return 0
 
 

@@ -9,7 +9,17 @@ lost (collection error, accidental deselection), a growing duration
 means the tier-1 gate is outgrowing its budget.  Update the baseline
 in the same PR that deliberately changes the suite.
 
+When a ``BENCH_step.json`` perf trajectory is passed as the third
+argument (the packed gradient data-path benchmark,
+``benchmarks/bench_step.py``), a non-blocking perf-smoke section with
+the per-mode step-time / GB/s deltas (packed vs per-leaf vs legacy) is
+appended too.  There is deliberately NO repo-root default: the
+committed ``BENCH_step.json`` snapshot must not masquerade as fresh CI
+data — only the ``perf-smoke`` job, which just ran the bench, renders
+the table (via ``bench_section``).
+
 Run:  python tools/ci_fast_tier_report.py <junit.xml> [baseline.json]
+          [BENCH_step.json]
 """
 
 from __future__ import annotations
@@ -43,6 +53,44 @@ def _delta(now: float, base: float, unit: str = "") -> str:
     return f"{sign}{d:.0f}{unit}" if unit != "s" else f"{sign}{d:.1f}s"
 
 
+def bench_section(bench_path: pathlib.Path) -> None:
+    """Perf-smoke table from the packed data-path benchmark.  Purely
+    informational (non-blocking): the numbers are an emulated-CPU
+    trajectory — relative deltas meaningful, absolute times not."""
+    if not bench_path.is_file():
+        return
+    try:
+        bench = json.loads(bench_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"\n> :warning: unreadable bench file {bench_path}: {e}")
+        return
+    meta = bench.get("meta", {})
+    acc = meta.get("acceptance", {})
+    print()
+    print("### Perf smoke — packed gradient data path (non-blocking)")
+    print()
+    print(f"{meta.get('devices', '?')} emulated devices, "
+          f"{meta.get('tree', {}).get('grad_bytes', 0) / 2 ** 20:.1f} MiB "
+          f"grads/step; medians of {meta.get('steps', '?')} steps")
+    print()
+    print("| mode | per-leaf ms | legacy ms | packed ms | packed GB/s "
+          "| vs per-leaf |")
+    print("|---|---|---|---|---|---|")
+    for tag, row in bench.get("modes", {}).items():
+        speed = row.get("speedup_packed_vs_per_leaf")
+        print(f"| {tag} | {row.get('per_leaf_ms', '-')} "
+              f"| {row.get('legacy_ms', '-')} "
+              f"| {row.get('packed_ms', '-')} "
+              f"| {row.get('packed_eff_GBps', '-')} "
+              f"| {f'{speed}x' if speed is not None else '-'} |")
+    if acc:
+        mark = ":white_check_mark:" if acc.get("pass") else ":warning:"
+        print()
+        print(f"> {mark} acceptance: {acc.get('cell')} "
+              f"{acc.get('metric')} = {acc.get('value')}x "
+              f"(bar {acc.get('bar')}x)")
+
+
 def main() -> int:
     if len(sys.argv) < 2:
         print(__doc__)
@@ -50,6 +98,7 @@ def main() -> int:
     junit = pathlib.Path(sys.argv[1])
     baseline_path = (pathlib.Path(sys.argv[2]) if len(sys.argv) > 2
                      else DEFAULT_BASELINE)
+    bench_path = pathlib.Path(sys.argv[3]) if len(sys.argv) > 3 else None
     tot = junit_totals(junit)
     base = None
     if baseline_path.is_file():
@@ -73,6 +122,8 @@ def main() -> int:
         print()
         print("> :warning: fewer fast-tier tests than the baseline — "
               "check for collection errors or accidental deselection.")
+    if bench_path is not None:
+        bench_section(bench_path)
     return 0
 
 
