@@ -413,6 +413,8 @@ print(json.dumps({"flat": t(flat), "hier": t(hier)}))
              f"{ovh:+.1f}%walltime(paper<=2%)")]
 
 
+from benchmarks.fig_a2a import fig_a2a_dispatch  # noqa: E402
+
 ALL_FIGURES = [
     ("fig3", fig3_datapath_overhead),
     ("fig9", fig9_planner_vs_fixed),
@@ -424,6 +426,7 @@ ALL_FIGURES = [
     ("fig16", fig16_training_speedup),
     ("fig17", fig17_scalability),
     ("fig18_19", fig18_19_serving),
+    ("fig_a2a", fig_a2a_dispatch),
     ("fig_overlap", fig_overlap_exposed),
     ("fig_border", fig_border_rs),
     ("fig_skew", fig_skew_partition),

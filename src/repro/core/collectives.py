@@ -234,6 +234,11 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
         return pipelined.execute_chunk_loop(step, buf, cfg, weight=w)
     if isinstance(step, schedule_ir.Flat):
         raise ValueError("Flat steps are handled by the entry points")
+    if isinstance(step, (schedule_ir.IntraAll2All,
+                         schedule_ir.BorderExchange)):
+        # the flat-buffer interpreter has no split/concat dims; the
+        # token-dimension walker in hier_all_to_all executes these
+        raise ValueError("All2All steps are handled by hier_all_to_all")
     raise NotImplementedError(f"no executor for step {step!r}")
 
 
@@ -336,15 +341,76 @@ def hier_all_gather(x: jax.Array, cfg: CommConfig, gather_dim: int = 0) -> jax.A
 
 
 # ---------------------------------------------------------------------------
-# AllToAllH: intra all_to_all then pod all_to_all (ring-scheduled by XLA)
+# All2AllH (paper §5): intra dispatch -> border exchange -> redistribute
 # ---------------------------------------------------------------------------
+
+def _block_transpose(x: jax.Array, axis: int, a: int, b: int) -> jax.Array:
+    """View dimension ``axis`` (length a·b·m) as [a, b, m] blocks and
+    swap to [b, a, m].  A local relayout (reshape + transpose), no
+    communication — the token resort between the phases of the
+    hierarchical All2All."""
+    m = x.shape[axis] // (a * b)
+    y = x.reshape(x.shape[:axis] + (a, b, m) + x.shape[axis + 1:])
+    return jnp.swapaxes(y, axis, axis + 1).reshape(x.shape)
+
 
 def hier_all_to_all(x: jax.Array, cfg: CommConfig, split_dim: int,
                     concat_dim: int) -> jax.Array:
-    if cfg.mode == "flat" or cfg.pod_axis is None:
+    """Global All2All over (pod, intra) via the mode's schedule,
+    value-identical to the flat ``lax.all_to_all`` over both axes
+    (global rank order pod-major).  The ``hier_a2a`` decomposition:
+
+      IntraAll2All(start)  — resort destination blocks along split_dim
+            from global pod-major (p', d') to intra-major (d', p')
+            [a local block transpose], then exchange over the intra
+            axis: each rank ends holding the tokens its intra index is
+            responsible for, grouped per destination pod.
+      BorderExchange       — pairwise cross-cluster exchange over the
+            pod axis of the destination-pod-contiguous blocks (when
+            split and concat share an axis the intra exchange
+            concatenated sender blocks onto it, so one more local
+            block transpose regroups [D'', P'] -> [P', D'']).
+      IntraAll2All(end)    — model-only: the pairwise exchange already
+            lands tokens on their destination ranks here; the pricer
+            and the simulator charge the general border-rank case.
+
+    A BorderExchange with no preceding intra dispatch (the ``flat_a2a``
+    reference, or the legacy ``hier`` C2CCpy decomposition) lowers to
+    the one global exchange."""
+    cfg = resolve_config(cfg, x.nbytes)
+    sched = schedule_ir.build_schedule("all_to_all", cfg.mode, cfg.n_chunks,
+                                       cfg.compression)
+    flat_sched = any(isinstance(s, schedule_ir.Flat) for s in sched.steps)
+    if flat_sched or cfg.pod_axis is None:
         return primitives.hom_all_to_all(x, cfg.dp_axes, split_dim, concat_dim)
-    y = primitives.hom_all_to_all(x, cfg.intra_axis, split_dim, concat_dim)
-    return primitives.hom_all_to_all(y, cfg.pod_axis, split_dim, concat_dim)
+    pod, intra = cfg.pod_axis, cfg.intra_axis
+    P_ = primitives.axis_size(pod)
+    D_ = primitives.axis_size(intra)
+    steps, _ = sched.unrolled()     # the a2a path is not chunk-pipelined
+    codec: str | None = None
+    dispatched = False
+    for step in steps:
+        if isinstance(step, schedule_ir.Compress):
+            codec = step.codec
+        elif isinstance(step, schedule_ir.Decompress):
+            codec = None
+        elif isinstance(step, schedule_ir.IntraAll2All):
+            if step.model_only:
+                continue
+            x = _block_transpose(x, split_dim, P_, D_)
+            x = primitives.hom_all_to_all(x, intra, split_dim, concat_dim)
+            dispatched = True
+        elif isinstance(step, (schedule_ir.BorderExchange,
+                               schedule_ir.C2CCpy)):
+            if not dispatched:
+                x = _wire_cast(x, codec, lambda b: primitives.hom_all_to_all(
+                    b, (pod, intra), split_dim, concat_dim))
+                continue
+            if split_dim == concat_dim:
+                x = _block_transpose(x, split_dim, D_, P_)
+            x = _wire_cast(x, codec, lambda b: primitives.hom_all_to_all(
+                b, pod, split_dim, concat_dim))
+    return x
 
 
 # ---------------------------------------------------------------------------

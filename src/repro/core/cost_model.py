@@ -198,6 +198,13 @@ def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
     if isinstance(step, (schedule_ir.IntraAllGather, schedule_ir.IntraBcast)):
         return ring_all_gather_time(
             c, schedule_ir.eval_volume(step.vol, n, topo, c))
+    if isinstance(step, schedule_ir.IntraAll2All):
+        # intra dispatch/redistribute of the hierarchical All2All (§5):
+        # each rank keeps 1/N of ``vol`` and exchanges the rest — the
+        # same (N-1)/N per-rank traffic profile as a ReduceScatter of
+        # ``vol``, on the same ring fabric
+        return ring_reduce_scatter_time(
+            c, schedule_ir.eval_volume(step.vol, n, topo, c))
     if isinstance(step, schedule_ir.BorderGather):
         # c2cRed bounce (Fig. 8): received partials land on free offsets
         # of the border ranks and take one extra intra-cluster native
@@ -243,7 +250,8 @@ def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
             raise ValueError(
                 "flat schedules are priced per mechanism — use "
                 "flat_host_forwarding_time or planner._price_flat")
-        if not isinstance(st, (schedule_ir.C2CRed, schedule_ir.C2CCpy)):
+        if not isinstance(st, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
+                               schedule_ir.BorderExchange)):
             continue
         wire = max(1, int(n * st.wire_ratio))
         t = 0.0

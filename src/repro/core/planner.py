@@ -471,7 +471,22 @@ def _candidate_schedules(coll: str, max_chunks: int,
     """Every schedule the planner searches for one bucket: the flat
     baseline plus, per wire codec, the sequential hier decomposition,
     the §4.3 border-communicator exchange (all_reduce; lossless/bf16
-    wire only), and the chunk-pipelined family."""
+    wire only), and the chunk-pipelined family.  All2All buckets (the
+    MoE dispatch/combine payload) search their own family instead: the
+    flat native baseline, the ``flat_a2a`` reference (one global
+    exchange, priced through the same Table-7 volume path as the
+    hierarchical schedule), and the §5 ``hier_a2a`` decomposition per
+    lossless/bf16 codec, chunk-pipelined."""
+    if coll == "all_to_all":
+        out = [schedule_ir.build_schedule(coll, "flat"),
+               schedule_ir.build_schedule(coll, "flat_a2a")]
+        for comp in compressions:
+            if comp == "int8":
+                continue  # token activations take no error feedback
+            for k in _chunk_candidates(max_chunks):
+                out.append(schedule_ir.build_schedule(coll, "hier_a2a",
+                                                      k, comp))
+        return out
     out = [schedule_ir.build_schedule(coll, "flat")]
     for comp in compressions:
         out.append(schedule_ir.build_schedule(coll, "hier", 1, comp))

@@ -113,6 +113,32 @@ class IntraBcast(Step):
 
 
 @dataclasses.dataclass(frozen=True)
+class IntraAll2All(Step):
+    """Intra-cluster All2All of ``vol`` bytes per rank (the local
+    dispatch/redistribute phases of the hierarchical All2All, §5).  The
+    ``end`` redistribute moves only the remotely received tokens
+    (``REMOTE``) and is ``model_only`` on the all-border execution
+    mapping, where every rank already holds its final shard after the
+    border exchange."""
+    vol: str = FULL
+    model_only: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BorderExchange(Step):
+    """Cross-cluster pairwise exchange over the border communicators
+    (§5): each cluster ships its destination-sorted remote tokens
+    straight to the owning cluster's border ranks — every byte crosses
+    exactly one border, unlike the copy ring where remote shards transit
+    intermediate clusters.  Volume is the Table-7 All2All row
+    ((G-N)·n per cluster, n keyed by tokens×hidden×dtype) scaled by
+    ``vol_ratio``; ``wire_ratio`` scales the wire bytes (codec)."""
+    coll: str = "all_to_all"
+    wire_ratio: float = 1.0
+    vol_ratio: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
 class BorderGather(Step):
     """Fig. 8 bounce: C2C partials land on free offsets of the border
     ranks and take one extra intra-cluster combining hop to their
@@ -418,3 +444,59 @@ def _build_hier_border_rs(coll: str, n_chunks: int,
              ), compression),
              IntraAllGather("end", INTRA_SHARD))
     return Schedule(coll, "hier_border_rs", 1, compression, steps)
+
+
+@register_builder("hier_a2a")
+def _build_hier_a2a(coll: str, n_chunks: int,
+                    compression: str | None, topo) -> Schedule:
+    """§5 hierarchical All2All: intra-a2a sorts each rank's tokens into
+    per-destination-cluster contiguous blocks on the border ranks, the
+    border communicators exchange each block pairwise with its owning
+    cluster (one border crossing per byte — the optimal cross-cluster
+    volume), and a final intra-a2a redistributes the received remote
+    tokens to their destination ranks.  Against ``flat_a2a`` this pays
+    two local exchanges but halves the border traffic: the copy ring
+    drains every remote byte through intermediate clusters (vol_ratio
+    1.0 of the Table-7 row) while the pairwise exchange ships it direct
+    (vol_ratio 0.5 — a conservative C/2 bound on the ring-transit
+    multiplier)."""
+    if coll != "all_to_all":
+        # the pairwise border exchange is defined for All2All; other
+        # collectives keep the plain hier decomposition so the mode
+        # string stays usable end to end (e.g. the gradient all-reduce
+        # of a CommConfig whose MoE layers run hier_a2a)
+        return Schedule(coll, "hier_a2a", 1, compression,
+                        _hier_steps(coll, compression))
+    if compression == "int8":
+        raise ValueError(
+            "hier_a2a supports only lossless/bf16 wire codecs: token "
+            "activations have no error-feedback step to absorb the int8 "
+            "block quantization")
+    r = CODEC_WIRE_RATIO[compression]
+    body = (IntraAll2All("start", FULL),
+            *_wrap_codec((BorderExchange("c2c", coll, r, vol_ratio=0.5),),
+                         compression),
+            # redistribute only the remotely received tokens; on the
+            # all-border mapping the pairwise exchange already lands
+            # them on their destination ranks
+            IntraAll2All("end", REMOTE, model_only=True))
+    if n_chunks <= 1:
+        return Schedule(coll, "hier_a2a", 1, compression, body)
+    return Schedule(coll, "hier_a2a", n_chunks, compression,
+                    (ChunkLoop("all", n_chunks, body),))
+
+
+@register_builder("flat_a2a")
+def _build_flat_a2a(coll: str, n_chunks: int,
+                    compression: str | None, topo) -> Schedule:
+    """Reference flat All2All: one global exchange whose remote bytes
+    drain around the cluster copy ring (vol_ratio 1.0 of the Table-7
+    row) — the baseline ``hier_a2a`` halves.  Emitted as a
+    :class:`BorderExchange` rather than a :class:`Flat` step so the α–β
+    pricer and the event sim charge it through the same Table-7 volume
+    path as ``hier_a2a`` (like-for-like cross-cluster byte accounting).
+    Like ``flat``, it takes no wire codec and no chunk pipeline."""
+    if coll != "all_to_all":
+        return Schedule(coll, "flat_a2a", 1, None, (Flat("c2c", coll),))
+    return Schedule(coll, "flat_a2a", 1, None,
+                    (BorderExchange("c2c", coll, 1.0, vol_ratio=1.0),))

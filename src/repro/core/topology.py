@@ -262,6 +262,33 @@ def tpu_pod_cluster(name: str, n_chips: int = 256, dcn_Bps: float = V5E_DCN_BPS)
                    alpha_native_s=1e-6, alpha_hetccl_s=5e-6, alpha_host_s=1e-3)
 
 
-def tpu_multipod(n_pods: int = 2, chips_per_pod: int = 256) -> HetTopology:
+def tpu_multipod(n_pods: int = 2, chips_per_pod: int = 256,
+                 dcn_Bps: float = V5E_DCN_BPS) -> HetTopology:
+    """``n_pods`` equal TPU pods.  ``dcn_Bps`` scales every chip's DCN
+    uplink — lowering it models a border-scarce deployment (oversubscribed
+    inter-pod fabric), the regime where the pairwise-exchange schedules
+    (hier_border_rs, hier_a2a) win over their flat counterparts."""
     return HetTopology(tuple(
-        tpu_pod_cluster(f"pod{i}", chips_per_pod) for i in range(n_pods)))
+        tpu_pod_cluster(f"pod{i}", chips_per_pod, dcn_Bps)
+        for i in range(n_pods)))
+
+
+def tpu_multipod_scarce(n_pods: int = 2, chips_per_pod: int = 256,
+                        nics_per_pod: int = 4,
+                        nic_Bps: float = V5E_DCN_BPS) -> HetTopology:
+    """Border-scarce multipod: each pod is a single scale-up domain
+    (the full ICI fabric inside, so intra collectives never touch a
+    NIC) with only ``nics_per_pod`` DCN uplinks for the whole pod —
+    the §4.3.2 border-scarce regime, opposite of ``tpu_multipod``
+    where every chip is a border rank.  This is where the pairwise
+    border-exchange schedules (hier_border_rs, hier_a2a) beat their
+    flat counterparts: the cross-cluster leg is the bottleneck and
+    halving its volume dwarfs the extra intra phases."""
+    return HetTopology(tuple(
+        Cluster(f"pod{i}", n_nodes=1, devs_per_node=chips_per_pod,
+                nics_per_node=nics_per_pod, nic_Bps=nic_Bps,
+                intra_Bps=V5E_ICI_LINK_BPS * V5E_ICI_LINKS / 2,
+                tflops=V5E_PEAK_FLOPS / 1e12, d2d_Bps=V5E_HBM_BPS,
+                alpha_native_s=1e-6, alpha_hetccl_s=5e-6,
+                alpha_host_s=1e-3)
+        for i in range(n_pods)))

@@ -143,12 +143,12 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
     from . import cost_model  # local: keeps the module importable alone
     if isinstance(step, (schedule_ir.IntraReduceScatter,
                          schedule_ir.IntraAllGather, schedule_ir.IntraBcast,
-                         schedule_ir.BorderGather,
+                         schedule_ir.IntraAll2All, schedule_ir.BorderGather,
                          schedule_ir.Pack, schedule_ir.Unpack)):
         return max(cost_model._intra_step_time(step, topo, ci, nbytes)
                    for ci in range(topo.n_clusters))
     if isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
-                         schedule_ir.Flat)):
+                         schedule_ir.BorderExchange, schedule_ir.Flat)):
         mech = "host" if isinstance(step, schedule_ir.Flat) else mechanism
         wire_ratio = getattr(step, "wire_ratio", 1.0)
         vol_ratio = getattr(step, "vol_ratio", 1.0)
@@ -241,12 +241,14 @@ def simulate_step(topo: HetTopology, sched: schedule_ir.Schedule,
             elif isinstance(step, (schedule_ir.IntraReduceScatter,
                                    schedule_ir.IntraAllGather,
                                    schedule_ir.IntraBcast,
+                                   schedule_ir.IntraAll2All,
                                    schedule_ir.BorderGather)):
                 for ci in range(C):
                     dur = cost_model._intra_step_time(step, topo, ci, n_c)
                     t[ci] = max(t[ci], stage_free[si][ci]) + dur
                     stage_free[si][ci] = t[ci]
             elif isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
+                                   schedule_ir.BorderExchange,
                                    schedule_ir.Flat)):
                 dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
                 end = max(max(t), max(stage_free[si])) + dur

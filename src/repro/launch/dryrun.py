@@ -61,12 +61,29 @@ def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return 2.0 * n * shape.global_batch  # one token per request
 
 
+def moe_a2a_bytes(cfg: ModelConfig, shape: ShapeConfig | None,
+                  n_chips: int) -> int:
+    """Per-rank All2All payload of one MoE layer's dispatch (and
+    combine): the capacity-padded expert buckets each rank ships —
+    tokens×hidden×dtype (Table 2).  Tokens are sliced 1/world on the ep
+    path, padded by the capacity factor; 4 B/elem matches the f32
+    gradient-volume convention of ``auto_plan``."""
+    from repro.models import moe as moe_lib
+
+    tokens = (shape.global_batch * shape.seq_len
+              if shape is not None and shape.kind == "train" else 4096)
+    t_loc = max(1, tokens // max(1, n_chips))
+    cap = moe_lib._capacity(t_loc, cfg.top_k, cfg.n_experts, 1.25)
+    return max(1, cfg.n_experts * cap * cfg.d_model * 4)
+
+
 def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
               allow_int8: bool = False, shape_name: str | None = None,
-              skew: str = "none", packed: bool = True):
+              skew: str = "none", packed: bool = True,
+              border_scarce: bool = False):
     """--plan auto: run the cost-model planner for this cell's
     production topology and gradient volume; returns
-    (CommPlan, chosen Candidate).
+    (CommPlan, chosen Candidate, a2a CommPlan | None).
 
     The ZeRO-1 gradient sync rides reduce_scatter (no end AllGather in
     the synced step), so its plan is priced on that collective.  Lossy
@@ -89,6 +106,15 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     plan: the returned plan carries the uneven microbatch split, the
     per-cluster compute times, and the per-pod gradient weights the
     lowered step executes (``CommPlan.cluster_weights``).
+
+    MoE architectures additionally get an **All2All plan**: the
+    per-MoE-layer dispatch volume (``moe_a2a_bytes``) is planned as one
+    bucket per MoE layer over the same topology, enumerating the a2a
+    schedule family (flat / flat_a2a / hier_a2a) — its
+    ``recommended_mode()`` is what ``models/moe.py`` runs
+    (``Runtime.moe_a2a_mode``).  ``border_scarce`` swaps the production
+    topology for ``topology.tpu_multipod_scarce`` (one scale-up domain
+    per pod, few DCN uplinks) — the regime where ``hier_a2a`` wins.
     """
     from repro.core import cost_model, overlap, planner, topology
     from repro.core import skew as skew_lib
@@ -99,7 +125,9 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
         n_pods = 1
     chips_per_pod = (
         PRODUCTION_MULTI_SHAPE[1] * PRODUCTION_MULTI_SHAPE[2])
-    topo = topology.tpu_multipod(n_pods, chips_per_pod)
+    topo = (topology.tpu_multipod_scarce(n_pods, chips_per_pod)
+            if border_scarce else
+            topology.tpu_multipod(n_pods, chips_per_pod))
     cfg = get_config(arch)
     grad_bytes = max(1, cfg.param_count() * 4 // tp_size)
     plan_kw = dict(
@@ -149,7 +177,17 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
                             skew_compute_s=skew_comp,
                             _sim_cache=sim_cache, **plan_kw)
     big = max(plan.buckets, key=lambda b: b.nbytes)
-    return plan, big.candidate
+    a2a_plan = None
+    if cfg.n_experts:
+        a2a_bytes = moe_a2a_bytes(cfg, train_shape,
+                                  n_pods * chips_per_pod)
+        a2a_plan = planner.plan(
+            topo, [a2a_bytes] * max(1, cfg.n_layers),
+            coll="all_to_all",
+            pod_axis="pod" if multi_pod else None, intra_axis="data",
+            compressions=(None, "bf16"), flat_mechanism="native",
+            try_balanced=False, _sim_cache=sim_cache)
+    return plan, big.candidate, a2a_plan
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
@@ -158,7 +196,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                compression: str | None = None,
                capacity_factor: float = 1.25,
                remat_policy: str = "none", plan=None,
-               packed: bool = True):
+               packed: bool = True, moe_a2a_mode: str = "flat"):
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     ok, why = cell_applicable(cfg, shape)
@@ -176,7 +214,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     fsdp = is_train and comm_mode == "fsdp"
     rt = runtime_for_mesh(mesh, fsdp=fsdp, sp=sp, use_pallas=use_pallas,
                           remat_policy=remat_policy,
-                          moe_capacity_factor=capacity_factor)
+                          moe_capacity_factor=capacity_factor,
+                          moe_a2a_mode=moe_a2a_mode,
+                          # skew-aware per-cluster expert capacity rides
+                          # the same weights as the gradient sync
+                          moe_cluster_weights=(plan.cluster_weights
+                                               if plan is not None else None))
     model = Model(cfg, rt)
     if fsdp:
         model = model.with_fsdp(sizes["data"])
@@ -286,6 +329,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "param_count": cfg.param_count(),
         "active_param_count": cfg.active_param_count(),
     }
+    if cfg.n_experts:
+        result["moe_a2a_mode"] = moe_a2a_mode
     if plan is not None:
         result["plan"] = plan.summary()
     return result
@@ -319,6 +364,11 @@ def main():
     ap.add_argument("--no-packed", action="store_true",
                     help="disable the zero-copy packed gradient data "
                          "path (legacy per-step re-flatten; A/B axis)")
+    ap.add_argument("--border-scarce", action="store_true",
+                    help="price --plan auto against the border-scarce "
+                         "multipod topology (one scale-up domain per "
+                         "pod, few DCN uplinks) instead of the "
+                         "every-chip-a-border-rank default")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -326,14 +376,21 @@ def main():
         ap.error("--skew auto requires --plan auto")
     mode, chunks, comp, plan = (args.mode or "fsdp", args.chunks,
                                 args.compression, None)
+    moe_a2a_mode = "flat"
     try:
         if args.plan == "auto":
-            plan, chosen = auto_plan(
+            plan, chosen, a2a_plan = auto_plan(
                 args.arch, multi_pod=args.mesh == "multi",
                 comm_mode=args.mode or "hier",
                 allow_int8=args.compression == "int8",
                 shape_name=args.shape, skew=args.skew,
-                packed=not args.no_packed)
+                packed=not args.no_packed,
+                border_scarce=args.border_scarce)
+            if a2a_plan is not None:
+                moe_a2a_mode = a2a_plan.recommended_mode()
+                print(f"[plan] MoE dispatch/combine All2All -> "
+                      f"{moe_a2a_mode}", flush=True)
+                print(a2a_plan.describe(), flush=True)
             # explicitly-flagged structural modes (fsdp / hier_zero1) keep
             # their optimizer wiring; the schedule comes from the plan,
             # resolved per bucket inside the collectives.  For the rest,
@@ -360,7 +417,8 @@ def main():
                          compression=comp,
                          capacity_factor=args.capacity_factor,
                          remat_policy=args.remat_policy, plan=plan,
-                         packed=not args.no_packed)
+                         packed=not args.no_packed,
+                         moe_a2a_mode=moe_a2a_mode)
     except Exception as e:  # noqa: BLE001
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm_mode": mode, "status": "error",

@@ -37,7 +37,9 @@ def mesh_axis_sizes(mesh) -> dict[str, int]:
 def runtime_for_mesh(mesh, *, fsdp: bool = False, sp: bool = False,
                      use_pallas: bool = False, remat: bool = True,
                      remat_policy: str = "none",
-                     moe_capacity_factor: float = 1.25):
+                     moe_capacity_factor: float = 1.25,
+                     moe_a2a_mode: str = "flat",
+                     moe_cluster_weights=None):
     """Build the Runtime matching a production/test mesh."""
     from repro.parallel.sharding import Runtime
 
@@ -50,4 +52,9 @@ def runtime_for_mesh(mesh, *, fsdp: bool = False, sp: bool = False,
         tp_size=sizes.get("model", 1),
         sp=sp, remat=remat, remat_policy=remat_policy,
         use_pallas=use_pallas,
-        moe_capacity_factor=moe_capacity_factor)
+        moe_capacity_factor=moe_capacity_factor,
+        # the ep a2a group is the model axis (experts never shard over
+        # pods), so its cluster axis stays None on every shipped mesh
+        moe_a2a_mode=moe_a2a_mode,
+        moe_cluster_weights=(tuple(moe_cluster_weights)
+                             if moe_cluster_weights else None))

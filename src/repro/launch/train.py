@@ -97,6 +97,8 @@ def main(argv=None):
 
     plan = None
     cluster_weights = None
+    moe_a2a_mode = rt.moe_a2a_mode
+    moe_weights = None
     if (args.plan == "auto" or args.skew == "auto") and mesh is not None:
         from repro.core import cost_model, overlap, planner, topology
         from repro.core import skew as skew_lib
@@ -198,6 +200,48 @@ def main(argv=None):
                         f"{plan.overlap.backward_compute_s*1e3:.2f} ms)")
             print(msg + f" validated={plan.validated}", flush=True)
             print(plan.describe(), flush=True)
+        if args.plan == "auto" and cfg.n_experts:
+            # MoE dispatch/combine All2All: the ep payload is token
+            # activations (E x capacity x d_model), not gradients, so it
+            # gets its own plan over the a2a candidate family
+            # (flat / flat_a2a / hier_a2a; DESIGN.md §12).  int8 is
+            # excluded by the hier_a2a builder — activations have no
+            # error-feedback step to absorb the quantization bias.
+            from repro.models import moe as moe_lib
+
+            tokens = max(1, args.global_batch * args.seq)
+            t_loc = max(1, tokens // max(1, topo.n_ranks))
+            cap = moe_lib._capacity(t_loc, cfg.top_k, cfg.n_experts,
+                                    rt.moe_capacity_factor)
+            a2a_bytes = max(1, cfg.n_experts * cap * cfg.d_model * 4)
+            a2a_plan = planner.plan(
+                topo, [a2a_bytes] * max(1, cfg.n_layers),
+                coll="all_to_all",
+                pod_axis="pod" if n_pods > 1 else None, intra_axis="data",
+                compressions=(None, "bf16"), flat_mechanism="native",
+                try_balanced=False, _sim_cache=sim_cache)
+            moe_a2a_mode = a2a_plan.recommended_mode()
+            # skew split -> expert capacity: slow clusters host fewer
+            # hot-expert slots.  Capacity allocation never weights
+            # gradients, so the even-data guard above does not apply.
+            if skew_split is not None:
+                moe_weights = skew_split.weights
+            print(f"[plan] MoE dispatch/combine All2All -> {moe_a2a_mode} "
+                  f"({a2a_bytes / 2 ** 20:.1f} MiB/layer)", flush=True)
+            print(a2a_plan.describe(), flush=True)
+
+    if cfg.n_experts and (moe_a2a_mode != rt.moe_a2a_mode
+                          or moe_weights != rt.moe_cluster_weights):
+        # the Runtime is closed over by the model, so rebuild both with
+        # the planned MoE a2a knobs before the train step traces
+        rt = dataclasses.replace(
+            rt, moe_a2a_mode=moe_a2a_mode,
+            moe_cluster_weights=(tuple(moe_weights) if moe_weights
+                                 else None))
+        model = Model(cfg, rt)
+        if args.mode == "fsdp" and mesh is not None:
+            model = model.with_fsdp(dict(zip(mesh.axis_names,
+                                             mesh.devices.shape))["data"])
 
     # optimizer structure (fsdp / zero1) is not a per-bucket knob; the plan
     # only replaces the schedule choice within the generic hier path.

@@ -61,6 +61,15 @@ def _tp_dim(path, shape, cfg: ModelConfig, tp: int, stacked: bool) -> int | None
     nd = len(shape)
     if _in_moe(path) and name in ("w_gate", "w_up", "w_down"):
         if moe.strategy(cfg, tp) == "ep":
+            if cfg.n_experts % tp:
+                # fail here, not deep inside shard_map arg binding
+                raise ValueError(
+                    f"MoE expert parallelism needs the tensor-parallel "
+                    f"size to divide the expert count: "
+                    f"n_experts={cfg.n_experts} % tp={tp} = "
+                    f"{cfg.n_experts % tp}; pick a tp that divides "
+                    f"{cfg.n_experts} or drop below n_experts to select "
+                    f"the etp strategy")
             return off  # shard the expert dim
         # etp: shard d_ff (last dim for gate/up, middle for down)
         return nd - 1 if name in ("w_gate", "w_up") else off + 1

@@ -3,9 +3,13 @@
 * ``ep``  (n_experts >= tp, e.g. qwen3-moe 128e/16): classic expert
   parallelism — experts live on TP devices (E/tp each); tokens are
   scatter-packed into per-destination capacity buckets and exchanged
-  with one all_to_all over the model axis each way (the Table-2 MoE
-  traffic the paper's AllToAllH handles; at multi-pod scale the a2a
-  stays intra-pod because experts are sharded over the model axis only).
+  with one All2All each way *through the schedule IR*
+  (``collectives.hier_all_to_all``; the Table-2 MoE traffic the paper's
+  §5 AllToAllH handles).  ``Runtime.moe_a2a_mode`` selects the
+  planner-chosen decomposition (``flat_a2a`` / ``hier_a2a``) and
+  ``Runtime.moe_cluster_weights`` the skew-aware per-cluster expert
+  capacity (``cluster_capacities``) so slow clusters host fewer hot
+  tokens.
 
 * ``etp`` (n_experts < tp, e.g. mixtral 8e/16): expert-tensor
   parallelism — every device holds a 1/tp slice of *every* expert's FFN
@@ -27,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core import collectives, topology
 from repro.parallel.sharding import Runtime, copy_to_tp, reduce_from_tp, tp_entry_axis
 from . import layers
 
@@ -77,18 +82,37 @@ def _capacity(T: int, k: int, E: int, factor: float) -> int:
     return max(8, int(math.ceil(T * k / E * factor / 8.0)) * 8)
 
 
-def _pack(x2d, ids, w, E: int, C: int):
+def cluster_capacities(T: int, k: int, E: int, factor: float,
+                       weights) -> tuple[int, ...]:
+    """Skew-aware per-cluster expert capacity (DESIGN.md §10/§12): the
+    even capacity budget ``n_clusters · _capacity(...)`` redistributed
+    by the per-cluster compute weights (``core.skew`` splits, mean 1),
+    so slow clusters host fewer hot-token slots and their expert FFN
+    shrinks in proportion to their throughput.  Largest-remainder
+    integer split: slot-conserving (sums to the even budget) and
+    monotone in the weights, with an 8-slot floor per cluster."""
+    base = _capacity(T, k, E, factor)
+    caps = topology.integer_split(base * len(tuple(weights)), weights,
+                                  floor=8)
+    return tuple(int(c) for c in caps)
+
+
+def _pack(x2d, ids, w, E: int, C: int, cap=None):
     """Scatter tokens into per-expert capacity buckets.
 
     Returns buf (E, C, D) and (slot, keep) (T, k) for the combine
     gather.  The scatter runs once per routing slot (k is tiny) so the
-    token matrix is never materialized k times."""
+    token matrix is never materialized k times.  ``cap`` (optional,
+    (E,) int array <= C) drops tokens above a per-expert capacity while
+    the buffer stays uniformly C-padded — the skew-aware per-cluster
+    capacities ride this mask so the a2a shapes stay identical across
+    ranks."""
     T, k = ids.shape
     flat_e = ids.reshape(-1)                              # (T*k,) t-major
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
     pos = jnp.cumsum(onehot, axis=0) - 1                  # occupancy index
     slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0].reshape(T, k)
-    keep = slot < C
+    keep = slot < (C if cap is None else cap[ids])
     slot_c = jnp.where(keep, slot, 0)
     buf = jnp.zeros((E, C, x2d.shape[1]), x2d.dtype)
     for j in range(k):
@@ -134,6 +158,12 @@ def apply_moe(p, x, cfg: ModelConfig, rt: Runtime):
     # each model column owns a disjoint 1/tp slice of the tokens, so the
     # expert compute is not duplicated.  The end all_gather rebuilds the
     # full token range (and its transpose scatters the cotangent back).
+    if E % tp:
+        raise ValueError(
+            f"MoE expert parallelism needs the tensor-parallel size to "
+            f"divide the expert count: n_experts={E} % tp={tp} "
+            f"(axis {rt.tp_axis!r}) = {E % tp}; pick a tp that divides "
+            f"{E} or drop below n_experts to select the etp strategy")
     el = E // tp                                          # local experts
     pad_t = (-T) % tp
     if pad_t:  # tiny decode batches: pad with weight-0 tokens
@@ -146,20 +176,40 @@ def apply_moe(p, x, cfg: ModelConfig, rt: Runtime):
     x_loc = lax.dynamic_slice_in_dim(x2d, col * T_loc, T_loc, axis=0)
     ids_loc = lax.dynamic_slice_in_dim(ids, col * T_loc, T_loc, axis=0)
     w_loc = lax.dynamic_slice_in_dim(w, col * T_loc, T_loc, axis=0)
-    C = _capacity(T_loc, k, E, rt.moe_capacity_factor)
-    buf, route = _pack(x_loc, ids_loc, w_loc, E, C)       # (E, C, D)
-    buf = buf.reshape(tp, el, C, D)
-    # a2a: dim0 -> devices; receive (tp, el, C, D) = sources' buckets for
-    # my local experts.
-    recv = lax.all_to_all(buf, rt.tp_axis, split_axis=0, concat_axis=0,
-                          tiled=False)
+    if rt.moe_cluster_weights:
+        # skew-aware per-cluster expert capacity: column col's experts
+        # live on cluster col·n_cl/tp; tokens above that cluster's
+        # capacity drop via the pack mask while the buffer stays
+        # uniformly padded to the largest capacity (identical a2a
+        # shapes on every rank)
+        caps = cluster_capacities(T_loc, k, E, rt.moe_capacity_factor,
+                                  rt.moe_cluster_weights)
+        n_cl = len(caps)
+        C = max(caps)
+        cap_e = jnp.asarray(
+            [caps[(e // el) * n_cl // tp] for e in range(E)], jnp.int32)
+        buf, route = _pack(x_loc, ids_loc, w_loc, E, C, cap=cap_e)
+    else:
+        C = _capacity(T_loc, k, E, rt.moe_capacity_factor)
+        buf, route = _pack(x_loc, ids_loc, w_loc, E, C)   # (E, C, D)
+    # dispatch a2a through the schedule IR (hier_all_to_all): tiled on
+    # the expert dim (E = tp·el), so block i — the buckets destined to
+    # column i's experts — lands on column i.  ``rt.moe_a2a_mode`` picks
+    # the decomposition the planner selected (flat_a2a / hier_a2a); on
+    # a single-cluster ep group (moe_a2a_pod_axis=None, the standard
+    # mesh) every mode lowers to the one native exchange.
+    a2a_cfg = collectives.CommConfig(
+        mode=rt.moe_a2a_mode, pod_axis=rt.moe_a2a_pod_axis,
+        intra_axis=rt.tp_axis, n_chunks=1, compression=None)
+    recv = collectives.hier_all_to_all(buf, a2a_cfg, 0, 0)
+    recv = recv.reshape(tp, el, C, D)
     # recv[src] = src's buckets for my local experts; fold sources into
     # the capacity dim.
     xs = jnp.swapaxes(recv, 0, 1).reshape(el, tp * C, D)
     out_loc = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"], xs)
     out_loc = jnp.swapaxes(out_loc.reshape(el, tp, C, D), 0, 1)  # (tp, el, C, D)
-    back = lax.all_to_all(out_loc, rt.tp_axis, split_axis=0, concat_axis=0,
-                          tiled=False)
+    back = collectives.hier_all_to_all(                   # combine a2a
+        out_loc.reshape(E, C, D), a2a_cfg, 0, 0)
     out_buf = back.reshape(E, C, D)
     out = _combine(out_buf, route, T_loc, k, x.dtype)     # (T_loc, D)
     out = lax.all_gather(out, rt.tp_axis, axis=0, tiled=True)  # (T_pad, D)

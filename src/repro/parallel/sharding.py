@@ -49,6 +49,14 @@ class Runtime:
     use_pallas: bool = False        # Pallas kernels (interpret=True on CPU)
     pallas_interpret: bool = True
     moe_capacity_factor: float = 1.25
+    # MoE expert-parallel dispatch/combine (models/moe.py ep path):
+    # the planner-selected All2All schedule mode, the cluster axis of
+    # the ep group (None on the standard mesh — experts shard over the
+    # model axis only, so the a2a never crosses pods), and the skew
+    # per-cluster weights steering expert capacity (DESIGN.md §12)
+    moe_a2a_mode: str = "flat"
+    moe_a2a_pod_axis: str | None = None
+    moe_cluster_weights: tuple[float, ...] | None = None
 
     @property
     def dp_axes(self) -> tuple[str, ...]:

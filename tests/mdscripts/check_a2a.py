@@ -1,0 +1,138 @@
+"""All2All conformance matrix (the acceptance gate for the a2a schedule
+family, DESIGN.md §12): ``hier_a2a`` and ``flat_a2a`` must land every
+token exactly where the single-device gather/scatter reference puts it.
+
+Topology rows (the a2a group is pod-major rank order p*D + d):
+
+    flat     mesh (8,)   ("data",)        pod_axis=None (1 cluster)
+    2pod     mesh (2,4)  ("pod","data")
+    3vendor  mesh (3,2)  ("pod","data")   over jax.devices()[:6]
+
+matrix per row: mode ∈ {hier_a2a, flat_a2a} × n_chunks ∈ {1,2} ×
+payload dtype ∈ {fp32, bf16} at split=concat=0 (the MoE dispatch
+shape), plus a split!=concat row per mode, plus bf16 *wire codec* rows
+for hier_a2a (the payload crosses the border as bf16 — lossy, codec
+tolerance), plus uneven-token rows: per-(src,dst) token counts below
+capacity with zero padding, round-tripped dispatch→combine (an a2a
+with split==concat is an involution, so two applications must return
+the buffer bit-exactly — token conservation at the wire level).
+
+An All2All never combines values, so every lossless row must match the
+reference EXACTLY (assert_array_equal, not allclose)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core.collectives import CommConfig, hier_all_to_all  # noqa: E402
+from repro.parallel.sharding import shard_map  # noqa: E402
+
+
+def ref_a2a(blocks, W, sd, cd):
+    """Single-device gather/scatter reference: rank r's output block is
+    the concat over sources of the r-th split piece of each source."""
+    return [np.concatenate([np.split(blocks[src], W, axis=sd)[r]
+                            for src in range(W)], axis=cd)
+            for r in range(W)]
+
+
+MESHES = {
+    "flat": (jax.make_mesh((8,), ("data",)), None, 8),
+    "2pod": (jax.make_mesh((2, 4), ("pod", "data")), "pod", 8),
+    "3vendor": (jax.make_mesh((3, 2), ("pod", "data"),
+                              devices=jax.devices()[:6]), "pod", 6),
+}
+
+
+def run_cell(mesh_name, mode, k, comp, x_global, sd, cd):
+    mesh, pod_axis, W = MESHES[mesh_name]
+    cfg = CommConfig(mode=mode, pod_axis=pod_axis, intra_axis="data",
+                     n_chunks=k, compression=comp)
+    shard = P(*((mesh.axis_names,) + (None,) * (x_global.ndim - 1)))
+    fn = jax.jit(shard_map(lambda v: hier_all_to_all(v, cfg, sd, cd),
+                           mesh=mesh, in_specs=shard, out_specs=shard,
+                           check_vma=False))
+    got = np.asarray(fn(jnp.asarray(x_global)))
+    blocks = np.split(np.asarray(x_global), W, axis=0)
+    want = np.concatenate(ref_a2a(blocks, W, sd, cd), axis=0)
+    assert got.shape == want.shape, (mesh_name, mode, got.shape, want.shape)
+    if comp is None:
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"{mesh_name} {mode} k={k} sd{sd}cd{cd}")
+        err = 0.0
+    else:
+        err = float(np.max(np.abs(got.astype(np.float32)
+                                  - want.astype(np.float32))))
+        np.testing.assert_allclose(
+            got, want, rtol=0.02, atol=0.02,
+            err_msg=f"{mesh_name} {mode} k={k} codec={comp}")
+    tag = f"codec={comp}" if comp else f"{str(x_global.dtype):8s}"
+    print(f"OK-A2A {mesh_name:7s} {mode:9s} k={k} {tag} "
+          f"sd{sd}cd{cd} maxerr={err:.2e}")
+
+
+rng = np.random.default_rng(13)
+for mesh_name, (_, _, W) in MESHES.items():
+    # split=concat=0, the MoE dispatch/combine shape (local rows a
+    # multiple of the a2a world, the lax.all_to_all divisibility rule)
+    x00 = rng.normal(size=(W * W * 3, 5)).astype(np.float32)
+    for mode in ("hier_a2a", "flat_a2a"):
+        for k in (1, 2):
+            run_cell(mesh_name, mode, k, None, x00, 0, 0)
+            run_cell(mesh_name, mode, k, None,
+                     x00.astype(jnp.bfloat16), 0, 0)
+        # split != concat: output blocks concatenate onto a new dim
+        x01 = rng.normal(size=(W * W * 2, 6)).astype(np.float32)
+        run_cell(mesh_name, mode, 1, None, x01, 0, 1)
+
+# bf16 WIRE codec: only the border leg is cast (intra stays fp32) —
+# lossy, so these live outside the exact matrix (multi-pod rows only;
+# a 1-cluster config has no border to compress)
+for mesh_name in ("2pod", "3vendor"):
+    _, _, W = MESHES[mesh_name]
+    xw = rng.normal(size=(W * W * 3, 5)).astype(np.float32)
+    for k in (1, 2):
+        run_cell(mesh_name, "hier_a2a", k, "bf16", xw, 0, 0)
+
+# --- uneven-token (padded-capacity) rows -----------------------------------
+# MoE dispatch buffers are (dests, capacity, d_model) with only
+# counts[src][dst] valid rows and zero padding above — exactly what the
+# skew-aware per-cluster capacity produces.  One a2a must match the
+# reference (padding travels as data), and a second a2a must return the
+# original buffer bit-exactly (split==concat => involution): the
+# dispatch→combine round trip conserves every token.
+for mesh_name in ("2pod", "3vendor"):
+    mesh, pod_axis, W = MESHES[mesh_name]
+    C, Dm = 4, 3
+    buf = np.zeros((W * W, C, Dm), np.float32)
+    counts = rng.integers(0, C + 1, size=(W, W))
+    for src in range(W):
+        for dst in range(W):
+            t = int(counts[src, dst])
+            buf[src * W + dst, :t] = rng.normal(size=(t, Dm))
+    for mode in ("hier_a2a", "flat_a2a"):
+        cfg = CommConfig(mode=mode, pod_axis=pod_axis, intra_axis="data",
+                         n_chunks=1, compression=None)
+        shard = P(mesh.axis_names, None, None)
+        once = jax.jit(shard_map(
+            lambda v: hier_all_to_all(v, cfg, 0, 0), mesh=mesh,
+            in_specs=shard, out_specs=shard, check_vma=False))
+        twice = jax.jit(shard_map(
+            lambda v: hier_all_to_all(hier_all_to_all(v, cfg, 0, 0),
+                                      cfg, 0, 0),
+            mesh=mesh, in_specs=shard, out_specs=shard, check_vma=False))
+        blocks = np.split(buf, W, axis=0)
+        want = np.concatenate(ref_a2a(blocks, W, 0, 0), axis=0)
+        np.testing.assert_array_equal(np.asarray(once(jnp.asarray(buf))),
+                                      want, err_msg=f"uneven {mode}")
+        np.testing.assert_array_equal(np.asarray(twice(jnp.asarray(buf))),
+                                      buf, err_msg=f"roundtrip {mode}")
+        print(f"OK-UNEVEN {mesh_name:7s} {mode:9s} "
+              f"tokens={int(counts.sum())}/{W * W * C} roundtrip exact")
+
+print("ALL-OK")

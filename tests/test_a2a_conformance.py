@@ -1,0 +1,26 @@
+"""All2All conformance matrix (the acceptance gate for the a2a schedule
+family, DESIGN.md §12): hier_a2a / flat_a2a vs the single-device
+gather/scatter reference across topologies × chunks × dtypes, plus
+uneven-token padded-capacity round trips.  Runs in a subprocess with 8
+virtual devices like the other multi-device checks (tests/_mdrun.py)."""
+
+from _mdrun import run_mdscript
+
+
+def test_a2a_conformance_matrix_8dev():
+    """{flat 1-cluster, 2-pod, three-vendor-shaped} × {hier_a2a,
+    flat_a2a} × n_chunks {1,2} × payload dtype {fp32, bf16}: exact
+    equality with the gather/scatter reference (an All2All never
+    combines values); split!=concat rows; bf16 wire-codec rows within
+    codec tolerance; uneven-token buffers round-trip bit-exactly
+    through dispatch→combine (involution => token conservation)."""
+    out = run_mdscript("check_a2a.py")
+    for mesh in ("flat", "2pod", "3vendor"):
+        for mode in ("hier_a2a", "flat_a2a"):
+            # 4 exact sd0cd0 cells + 1 split!=concat cell per pair
+            assert out.count(f"OK-A2A {mesh:7s} {mode:9s}") >= 5, (mesh, mode)
+    # lossy wire-codec rows only exist where there is a border to cross
+    assert out.count("codec=bf16") >= 4
+    # padded-capacity rows: both modes on both multi-pod topologies
+    assert out.count("OK-UNEVEN") >= 4
+    assert out.count("roundtrip exact") >= 4

@@ -1,0 +1,16 @@
+"""Fast-tier MoE expert-parallel smoke: a qwen1.5-4B-shaped MoE toy on
+8 virtual devices — every a2a mode reproduces the single-device
+trajectory, the skew-aware expert capacity degenerates exactly for
+even weights, and the ep tp-divides-experts guard raises the clear
+ValueError (tests/mdscripts/check_moe.py)."""
+
+from _mdrun import run_mdscript
+
+
+def test_moe_ep_smoke_8dev():
+    out = run_mdscript("check_moe.py")
+    for mode in ("flat", "flat_a2a", "hier_a2a"):
+        assert f"OK moe-ep a2a_mode={mode:9s}" in out, mode
+    assert "weights=(1,1) == unweighted (exact)" in out
+    assert "weights=(1.5,0.5) finite" in out
+    assert "n_experts=7 % tp=2 raises" in out

@@ -207,8 +207,9 @@ def test_dryrun_auto_plan_helper():
     else:
         os.environ["XLA_FLAGS"] = old_flags
 
-    plan, chosen = auto_plan("qwen2.5-3b", multi_pod=True)
+    plan, chosen, a2a_plan = auto_plan("qwen2.5-3b", multi_pod=True)
     assert plan.buckets[0].candidate == chosen
     assert chosen.mode in ("flat", "hier", "hier_pipelined",
                            "hier_border_rs")
     assert plan.predicted_step_s > 0
+    assert a2a_plan is None            # dense model: no MoE a2a plan

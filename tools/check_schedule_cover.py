@@ -46,6 +46,29 @@ def _load_module(name: str, fname: str):
 schedule = _load_module("hetccl_schedule", "schedule.py")
 packing = _load_module("hetccl_packing", "packing.py")
 
+
+def _load_core_package():
+    """Load the jax-free interpreter modules (topology, cost_model,
+    transport_sim) under a synthetic package so their relative imports
+    resolve — the a2a matrix prices AND simulates every schedule, which
+    the flat `_load_module` loader cannot reach.  All four modules are
+    pure stdlib, so the gate still runs without JAX."""
+    import types
+
+    pkg = types.ModuleType("hetccl_core")
+    pkg.__path__ = [str(ROOT / "src" / "repro" / "core")]
+    sys.modules["hetccl_core"] = pkg
+    mods = {}
+    for name in ("schedule", "topology", "cost_model", "transport_sim"):
+        spec = importlib.util.spec_from_file_location(
+            f"hetccl_core.{name}",
+            ROOT / "src" / "repro" / "core" / f"{name}.py")
+        mod = importlib.util.module_from_spec(spec)
+        sys.modules[spec.name] = mod
+        spec.loader.exec_module(mod)          # dependency order
+        mods[name] = mod
+    return mods
+
 # A quoted token that looks like a comm mode: "flat" or "hier" with
 # optional _word suffixes.  Prose words like "hierarchical" don't match
 # (no closing quote right after the stem), and unquoted mentions in
@@ -162,6 +185,86 @@ def check_packed_matrix() -> list[str]:
     return errs
 
 
+def check_a2a_matrix() -> list[str]:
+    """The All2All schedule family (DESIGN.md §12) must be priced AND
+    simulated for every topology variant: both a2a builders registered,
+    every mode × chunking × wire codec builds, composes with the packed
+    and cluster-scaled wrappers, and produces positive times from both
+    interpreters on every preset — with hier_a2a's cross-cluster phase
+    strictly below flat_a2a's (the §5 optimality the schedule exists
+    for).  The lossy int8 codec must be refused: token activations have
+    no error-feedback step to absorb the bias."""
+    errs: list[str] = []
+    core = _load_core_package()
+    sch, topo_mod = core["schedule"], core["topology"]
+    cm, ts = core["cost_model"], core["transport_sim"]
+    for mode in ("hier_a2a", "flat_a2a"):
+        if mode not in sch.registered_modes():
+            errs.append(f"a2a: builder {mode!r} is not registered")
+    if errs:
+        return errs
+    topos = {
+        "paper_testbed": topo_mod.paper_testbed(),
+        "three_vendor": topo_mod.three_vendor_testbed(2.0),
+        "tpu_multipod": topo_mod.tpu_multipod(2, 256),
+        "tpu_multipod_scarce": topo_mod.tpu_multipod_scarce(2, 256),
+    }
+    nbytes = 16 << 20
+    n = 0
+    for tname, topo in topos.items():
+        for mode in ("hier_a2a", "flat_a2a"):
+            for k in (1, 2, 4):
+                for comp in (None, "bf16"):
+                    tag = f"a2a/{tname}/{mode}/chunks={k}/codec={comp}"
+                    try:
+                        s = sch.build_schedule("all_to_all", mode, k, comp)
+                        pk = sch.with_packing(s)
+                        w = sch.with_cluster_scale(s)
+                    except Exception as e:  # noqa: BLE001
+                        errs.append(f"{tag}: {type(e).__name__}: {e}")
+                        continue
+                    if not any(isinstance(st, sch.BorderExchange)
+                               for st in s.unrolled()[0]):
+                        errs.append(f"{tag}: no BorderExchange step")
+                    for variant, vs in (("plain", s), ("packed", pk),
+                                        ("weighted", w)):
+                        try:
+                            est = cm.estimate_schedule(topo, vs, nbytes)
+                            sim = ts.simulate_schedule(vs, topo, nbytes)
+                        except Exception as e:  # noqa: BLE001
+                            errs.append(
+                                f"{tag}/{variant}: {type(e).__name__}: {e}")
+                            continue
+                        if not (est.sequential_s > 0 and sim > 0):
+                            errs.append(f"{tag}/{variant}: non-positive "
+                                        f"time est={est.sequential_s} "
+                                        f"sim={sim}")
+                        n += 1
+        # strict cross-cluster ordering per topology, both interpreters
+        h = sch.build_schedule("all_to_all", "hier_a2a")
+        f = sch.build_schedule("all_to_all", "flat_a2a")
+        if not (cm.estimate_schedule(topo, h, nbytes).c2c_s
+                < cm.estimate_schedule(topo, f, nbytes).c2c_s):
+            errs.append(f"a2a/{tname}: hier_a2a c2c phase not strictly "
+                        "below flat_a2a (closed form)")
+        h_border = sch.Schedule(
+            "all_to_all", "hier_a2a", 1, None,
+            tuple(st for st in h.steps
+                  if isinstance(st, sch.BorderExchange)))
+        if not (ts.simulate_schedule(h_border, topo, nbytes)
+                < ts.simulate_schedule(f, topo, nbytes)):
+            errs.append(f"a2a/{tname}: hier_a2a border leg not strictly "
+                        "below flat_a2a (event sim)")
+        n += 1
+    try:
+        sch.build_schedule("all_to_all", "hier_a2a", 1, "int8")
+        errs.append("a2a: hier_a2a accepted the lossy int8 codec")
+    except ValueError:
+        n += 1
+    print(f"a2a schedule matrix          : {n} variants priced + simulated")
+    return errs
+
+
 def main() -> int:
     registered = set(schedule.registered_modes())
     structural = schedule.STRUCTURAL_MODES
@@ -179,6 +282,7 @@ def main() -> int:
     print(f"mode strings found in source : {sorted(found)}")
     skew_errs = check_skew_matrix()
     packed_errs = check_packed_matrix()
+    a2a_errs = check_a2a_matrix()
     if missing:
         print("\nFAIL: mode strings without a registered schedule builder "
               "(register one in src/repro/core/schedule.py or add a "
@@ -199,9 +303,16 @@ def main() -> int:
         for e in packed_errs[:20]:
             print(f"  {e}")
         return 1
+    if a2a_errs:
+        print("\nFAIL: All2All schedule family not priced/simulated for "
+              "every topology variant (DESIGN.md §12):")
+        for e in a2a_errs[:20]:
+            print(f"  {e}")
+        return 1
     print("OK: every mode string has a schedule builder, every skew/mode "
-          "combination resolves, and every schedule round-trips the "
-          "packed data path")
+          "combination resolves, every schedule round-trips the packed "
+          "data path, and the a2a family prices + simulates on every "
+          "topology")
     return 0
 
 
