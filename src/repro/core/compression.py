@@ -71,12 +71,16 @@ def _block_amax(xf: jax.Array) -> jax.Array:
 
 def _encode_scaled(xf: jax.Array, scale: jax.Array) -> jax.Array:
     """Quantize flat f32 ``xf`` with per-block ``scale`` -> (nb, BLOCK)
-    int8 (one fused scale+round+clip+cast pass)."""
+    int8 (one fused scale+round+clip+cast pass).  A zero scale (an
+    all-zero block from a caller that skipped ``_shared_scale``'s
+    clamp) divides as 1.0 — the block is all zeros anyway, so the guard
+    only keeps NaN/inf off the wire."""
     if use_pallas():
         return _qk.quant_scaled_call(xf, scale,
                                      interpret=jax.default_backend() != "tpu")
     blocks = xf.reshape(-1, BLOCK)
-    return jnp.clip(jnp.round(blocks / scale[:, None]),
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return jnp.clip(jnp.round(blocks / safe[:, None]),
                     -127, 127).astype(jnp.int8)
 
 
@@ -145,14 +149,17 @@ def compressed_psum(x: jax.Array, axis: str, codec: str,
     raise ValueError(f"unknown codec {codec!r}")
 
 
-def _int8_psum(x: jax.Array, axis: str,
-               weight: jax.Array | None = None) -> jax.Array:
-    """All-reduce with int8 WIRE bytes: the payload crosses the (DCN)
-    axis as int8 via a reduce ring of ppermutes, accumulating locally in
-    int32, with one shared f32 scale per block (pmax'd so the integer
-    sums are exact).  A plain psum of int32 would quadruple the wire."""
-    orig = x.dtype
-    xf, pad = _flat_blocks(x)
+def int8_encode(x: jax.Array, axis: str | None,
+                weight: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Compress stage of the shared-scale collective codec: per-block
+    amax → cluster-weight fold → cross-``axis`` pmax → quantize.
+    Returns ``(q, scale)`` — the int8 wire payload and the shared
+    per-block f32 scale the decode side needs.  Split out of
+    ``_int8_psum`` so the pipelined chunk loop can carry the
+    pre-quantized next chunk and overlap this stage with the previous
+    chunk's ring transfer (``core/pipelined.py``)."""
+    xf, _ = _flat_blocks(x)
     amax = _block_amax(xf)
     if weight is not None:
         # amax(w·x) == w·amax(x) for w > 0: the weighted payload's
@@ -161,12 +168,25 @@ def _int8_psum(x: jax.Array, axis: str,
         amax = amax * weight
     scale = _shared_scale(amax, axis)
     enc_scale = scale if weight is None else scale / weight
-    q = _encode_scaled(xf, enc_scale)
-    summed = _ring_int8_sum(q, axis)
-    out = _decode(summed, scale)
-    if pad:
-        out = out[:-pad]
-    return out.reshape(x.shape).astype(orig)
+    return _encode_scaled(xf, enc_scale), scale
+
+
+def int8_transfer(q: jax.Array, scale: jax.Array, axis: str, size: int,
+                  dtype=jnp.float32) -> jax.Array:
+    """Transfer stage: int8 reduce ring over ``axis`` + fused decode,
+    sliced back to the caller's flat ``size``."""
+    out = _decode(_ring_int8_sum(q, axis), scale)
+    return out[:size].astype(dtype)
+
+
+def _int8_psum(x: jax.Array, axis: str,
+               weight: jax.Array | None = None) -> jax.Array:
+    """All-reduce with int8 WIRE bytes: the payload crosses the (DCN)
+    axis as int8 via a reduce ring of ppermutes, accumulating locally in
+    int32, with one shared f32 scale per block (pmax'd so the integer
+    sums are exact).  A plain psum of int32 would quadruple the wire."""
+    q, scale = int8_encode(x, axis, weight=weight)
+    return int8_transfer(q, scale, axis, x.size, x.dtype).reshape(x.shape)
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

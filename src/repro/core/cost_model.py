@@ -127,28 +127,32 @@ class CollectiveEstimate:
 
     ``start_s`` / ``c2c_s`` / ``end_s`` are the full-payload times
     (seconds) of the intra start phase, the synchronous cross-cluster
-    exchange, and the intra end phase; ``n_chunks`` is the chunk count
-    the phases would be split into when pipelined.
+    exchange, and the intra end phase; ``codec_s`` is the wire-codec
+    encode+decode time (the Compress/Decompress HBM passes on the
+    post-RS shard); ``n_chunks`` is the chunk count the phases would be
+    split into when pipelined.
     """
 
     start_s: float
     c2c_s: float
     end_s: float
     n_chunks: int
+    codec_s: float = 0.0
 
     @property
     def sequential_s(self) -> float:
-        """Phases executed back to back (seconds): start + c2c + end."""
-        return self.start_s + self.c2c_s + self.end_s
+        """Phases executed back to back (seconds):
+        start + codec + c2c + end."""
+        return self.start_s + self.codec_s + self.c2c_s + self.end_s
 
     @property
     def pipelined_s(self) -> float:
-        """Perfect chunked overlap of the three phases (Fig. 9).
+        """Perfect chunked overlap of the pipeline stages (Fig. 9).
 
         With the payload in ``k`` chunks, the steady state drains at the
         bottleneck stage while the other stages hide behind it, and the
         pipeline additionally pays fill/flush: one chunk traversing all
-        three stages minus the bottleneck's share already counted.
+        stages minus the bottleneck's share already counted.
 
             pipelined = bott + max(0, sum(stages)/k - bott/k)
 
@@ -159,11 +163,17 @@ class CollectiveEstimate:
         7.5 ms total vs 12 ms sequential — a 1.6× win.  As k→∞ the
         time approaches the bottleneck stage alone; small k leaves the
         fill term, and k=1 degenerates to ``sequential_s``.
+
+        ``codec_s`` rides as a fourth stage: the chunk loop's
+        double-buffered carry (``core/pipelined.py``) traces
+        compress(i) with no data dependency on C2C(i-1), so the codec
+        passes hide behind the bottleneck exactly like the intra
+        phases do — the "hidden compress" this estimate prices.
         """
         k = max(1, self.n_chunks)
-        stages = (self.start_s, self.c2c_s, self.end_s)
+        stages = (self.start_s, self.codec_s, self.c2c_s, self.end_s)
         bott = max(stages)
-        fill = sum(stages) / k  # one chunk through the two non-bottleneck stages
+        fill = sum(stages) / k  # one chunk through the non-bottleneck stages
         return bott + max(0.0, fill - bott / k)
 
     def bandwidth(self, nbytes: float, pipelined: bool = True) -> float:
@@ -216,10 +226,28 @@ def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
         # §11): one launch α plus one pass of the payload through the
         # on-device copy engine (d2d_Bps ≈ HBM-bound memcpy) — the cost
         # the packed layout pays once per sync instead of once per
-        # bucket/chunk/codec re-pad
+        # bucket/chunk/codec re-pad.  A Pack carrying the fused
+        # pack+quantize (wire_ratio < 1, schedule.with_packing) reads
+        # the full leaves but writes only wire-sized blocks, so the
+        # pass shrinks to (1 + wire_ratio) / 2 of the payload.  A Pack
+        # additionally zero-initialises the segment buffer before the
+        # leaf scatter-writes land (the alignment gaps must read as
+        # zeros on the wire) — one more payload-sized pass on the same
+        # engine; an Unpack is slice-reads only and skips it.
+        vol = schedule_ir.eval_volume(step.vol, n, topo, c)
+        passes = (1.0 + getattr(step, "wire_ratio", 1.0)) / 2.0
+        if isinstance(step, schedule_ir.Pack):
+            passes += 1.0
+        return c.alpha_native_s + vol * passes / c.d2d_Bps
+    if isinstance(step, (schedule_ir.Compress, schedule_ir.Decompress)):
+        # wire-codec encode/decode: one launch α plus one HBM pass of
+        # the post-RS shard (amax+quant read+write for int8, the cast
+        # for bf16).  Charged into ``codec_s`` by estimate_schedule so
+        # the pipelined estimate can hide it behind the bottleneck
+        # stage (the double-buffered chunk loop provides that overlap).
         vol = schedule_ir.eval_volume(step.vol, n, topo, c)
         return c.alpha_native_s + vol / c.d2d_Bps
-    return 0.0  # Scale/Compress/Decompress: free in the α–β model
+    return 0.0  # Scale: a local pointwise multiply, free in α–β
 
 
 def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
@@ -236,14 +264,23 @@ def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
              else max(c.alpha_hetccl_s for c in topo.clusters))
     n = nbytes_per_rank
     steps, k = sched.unrolled()
-    start = end = 0.0
+    start = end = codec = 0.0
     for ci in range(topo.n_clusters):
         s = sum(_intra_step_time(st, topo, ci, n)
                 for st in steps if st.phase == "start")
         e = sum(_intra_step_time(st, topo, ci, n)
                 for st in steps if st.phase == "end")
+        # Compress/Decompress carry phase "c2c" but are local HBM
+        # passes, not wire traffic: they form their own pipeline stage
+        # (codec_s) that the double-buffered chunk loop overlaps with
+        # the C2C transfer
+        cd = sum(_intra_step_time(st, topo, ci, n)
+                 for st in steps
+                 if isinstance(st, (schedule_ir.Compress,
+                                    schedule_ir.Decompress)))
         start = max(start, s)
         end = max(end, e)
+        codec = max(codec, cd)
     c2c = 0.0
     for st in steps:
         if isinstance(st, schedule_ir.Flat):
@@ -260,7 +297,7 @@ def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
             vol = max(send, recv) * st.vol_ratio
             t = max(t, alpha * k + vol / c.cross_Bps)
         c2c += t
-    return CollectiveEstimate(start, c2c, end, k)
+    return CollectiveEstimate(start, c2c, end, k, codec)
 
 
 def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
@@ -279,11 +316,24 @@ def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
 
 
 def pack_pass_time(topo: HetTopology, nbytes: float) -> float:
-    """Seconds for one Pack or Unpack pass of ``nbytes`` on the slowest
-    cluster (the synchronous data path waits for it) — what the packed
-    flat baseline adds per sync, mirroring the per-step Pack/Unpack
-    charge of ``_intra_step_time``."""
+    """Seconds for ONE payload pass (plus launch α) of ``nbytes`` on the
+    slowest cluster — the unit the packed-path charges are built from.
+    The Unpack charge is exactly one pass (slice reads); Pack is two
+    (slot writes + the zero-init of the segment buffer) — use
+    ``packed_overhead_time`` for the full per-sync Pack+Unpack total."""
     return max(c.alpha_native_s + nbytes / c.d2d_Bps for c in topo.clusters)
+
+
+def packed_overhead_time(topo: HetTopology, nbytes: float) -> float:
+    """Pack + Unpack total for one sync of ``nbytes``: 2α + 3 payload
+    passes on the slowest cluster (pack slot writes + segment zero-init
+    + unpack slice reads).  The same charge the IR pricing folds into
+    the start/end phases (``_intra_step_time``) and the planner's
+    differential per-leaf fallback weighs against the α saving — kept
+    in one place so flat candidates, packed IR schedules, and the
+    fallback all price packing identically."""
+    return max(2.0 * c.alpha_native_s + 3.0 * nbytes / c.d2d_Bps
+               for c in topo.clusters)
 
 
 def flat_host_forwarding_time(topo: HetTopology, coll: str, nbytes_per_rank: int) -> float:

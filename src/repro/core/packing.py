@@ -8,10 +8,11 @@ re-packing: every gradient sync rebuilt its flat buffer with fresh
 for the chunk pipeline, and re-padded a third time for the int8 block
 codec.  This module computes **one persistent layout at trace time**
 and bakes every downstream alignment into it, so the traced step
-contains exactly one pack (a single fused concatenate writing all
-leaves into one buffer per wire dtype) and one unpack (static slices),
-and no collective ever re-pads or re-concatenates
-(``tests/mdscripts/check_packed.py`` asserts the jaxpr).
+contains exactly one pack (a scatter of static-offset in-place leaf
+writes into one buffer per wire dtype — ZERO concatenates) and one
+unpack (static slices), and no collective ever re-pads or
+re-concatenates (``tests/mdscripts/check_packed.py`` asserts the
+jaxpr).
 
 Layout rules:
 
@@ -274,43 +275,39 @@ def tree_metas(leaves) -> list[tuple[str, tuple, int]]:
 
 
 def pack(layout: PackedLayout, leaves) -> dict[str, Any]:
-    """Write ``leaves`` (in layout slot order) into one buffer per
-    segment — exactly ONE fused ``jnp.concatenate`` per segment, zero
-    pad included (this is the single "pack" the jaxpr test counts).
-    The output buffers feed donated comm steps, so XLA aliases them
-    into the persistent comm allocation across steps."""
+    """Scatter-write ``leaves`` (in layout slot order) into one
+    zero-initialised buffer per segment — one static-offset
+    ``dynamic_update_slice`` per leaf via the slot map and NO
+    concatenate (the jaxpr test counts zero; the old pack rebuilt each
+    segment with a fused concatenate every step).  Each update consumes
+    the previous buffer value, so XLA performs them in place; the
+    output buffers feed donated comm steps, so the leaf writes land
+    straight in the persistent comm allocation across steps.  The
+    zero init keeps the tail pad summing away harmlessly downstream.
+    (``kernels.quant.pack_slots_call`` is the explicit Pallas aliased
+    twin of this scatter, and ``fused_pack_quant_call`` extends it
+    with the one-pass int8 encode.)"""
     import jax.numpy as jnp
-    parts: dict[str, list] = {s.dtype: [] for s in layout.segments}
+    from jax import lax
+    out = {seg.dtype: jnp.zeros((seg.padded,), seg.dtype)
+           for seg in layout.segments}
     for sl, lf in zip(layout.slots, leaves):
-        parts[sl.segment].append(lf.reshape(-1))
-    out = {}
-    for seg in layout.segments:
-        ps = parts[seg.dtype]
-        pad = seg.padded - seg.used
-        if pad:
-            ps = ps + [jnp.zeros((pad,), ps[0].dtype if ps else seg.dtype)]
-        out[seg.dtype] = (ps[0] if len(ps) == 1
-                          else jnp.concatenate(ps))
+        out[sl.segment] = lax.dynamic_update_slice(
+            out[sl.segment], lf.reshape(-1), (sl.offset,))
     return out
 
 
 def pack_bucketed(layout: PackedLayout, pieces) -> Any:
-    """Overlap variant of :func:`pack`: all pieces cast to f32 into the
-    single bucket-sliced buffer, inter-bucket padding interleaved —
-    still exactly one ``jnp.concatenate``."""
+    """Overlap variant of :func:`pack`: all pieces scatter-written (as
+    f32) into the single bucket-sliced buffer — inter-bucket padding is
+    just the untouched zero init, and again no concatenate."""
     import jax.numpy as jnp
-    parts = []
-    off = 0
-    it = iter(zip(layout.slots, pieces))
-    for sl, piece in it:
-        if sl.offset > off:          # bucket-boundary pad
-            parts.append(jnp.zeros((sl.offset - off,), jnp.float32))
-        parts.append(piece.reshape(-1).astype(jnp.float32))
-        off = sl.offset + sl.size
-    total = layout.segments[0].padded
-    if total > off:
-        parts.append(jnp.zeros((total - off,), jnp.float32))
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    from jax import lax
+    buf = jnp.zeros((layout.segments[0].padded,), jnp.float32)
+    for sl, piece in zip(layout.slots, pieces):
+        buf = lax.dynamic_update_slice(
+            buf, piece.reshape(-1).astype(jnp.float32), (sl.offset,))
+    return buf
 
 
 def unpack(layout: PackedLayout, buffers: dict[str, Any]) -> list:

@@ -1,18 +1,38 @@
 """Pipelined collective execution (paper §4.3.2, Fig. 9).
 
 Sequentially executing Algorithm 1's phases leaves the DCN idle while
-the ICI phases run (and vice versa).  Here the payload is split into
-``n_chunks`` and the three phases are software-pipelined with a 1-stage
-skew inside one ``lax.scan``:
+the ICI phases run (and vice versa).  The schedule IR's ``ChunkLoop``
+models the full 3-phase software pipeline with a 1-stage skew —
 
     iter i:  RS_ici(chunk i)   |   AR_dcn(chunk i-1)   |   AG_ici(chunk i-2)
 
-Within an iteration the three collectives have no data dependency, so
-XLA's async collective scheduler can overlap the DCN all-reduce with
-both ICI phases; the iteration structure guarantees the overlap is
-*available* regardless of scheduler heuristics (the HLO shows the DCN
-all-reduce of chunk i-1 between the ICI collectives of chunks i and
-i-2 with no dependency edge).
+— and ``core/cost_model.py`` / ``core/transport_sim.py`` price and
+simulate all of its stages against the real fabric's α–β constants.
+
+The *executable* emulation below pipelines only where the emulated
+backend can actually benefit: the slow C2C hop plus the wire codec.
+The ICI ReduceScatter/AllGather run un-chunked on the whole payload —
+XLA's CPU runtime executes the per-device program in order, so a
+k-way split of an ICI collective buys no overlap and measurably costs
+~2x the unsplit collective at identical total bytes (one extra
+payload-sized materialisation per split).  The pod hop, by contrast,
+is chunked into ``n_chunks`` pieces of the post-RS shard and
+double-buffered.
+
+The pipeline fill and drain are *peeled* out of the ``lax.scan``: the
+loop body only runs steady-state iterations, so no collective ever
+fires on a zero-filled carry — exactly k pod reductions are executed
+for k chunks (the old in-loop fill cost k+2, two of them on zeros,
+plus the codec work when compression was on).
+
+When a wire codec rides the C2C hop, the pod reduction is split into an
+``encode`` stage (amax → shared scale → quantize; cheap nb-sized pmax)
+and a ``transfer`` stage (the int8 ring + decode).  The scan carry
+holds the *pre-quantized* next chunk, so iteration i traces
+compress(i) next to C2C(i-1) with no data dependency between them —
+the double-buffering that lets XLA hide the codec passes behind the
+DCN transfer (priced as the ``codec_s`` pipeline stage by
+``core/cost_model.py``).
 
 The mechanism-faithful ring variant (``use_ring=True``) replaces the
 pod-axis all-reduce with the explicit c2cRed P2P ring of
@@ -52,6 +72,64 @@ def execute_chunk_loop(step: "schedule_ir.ChunkLoop", flat: jax.Array,
     return pipelined_hier_psum(flat, cfg, weight=weight)
 
 
+def _codec_stages(cfg, flat, shard_n: int, use_ring: bool,
+                  weight: jax.Array | None):
+    """(encode, transfer) pair with transfer(encode(s)) equal to the
+    sequential pod reduction of shard ``s``.  The split is what the
+    double-buffered scan carries across iterations: ``encode`` is the
+    local compress stage (plus the nb-sized shared-scale pmax for int8),
+    ``transfer`` moves the encoded payload over the DCN and decodes."""
+    pod = cfg.pod_axis
+    if use_ring:
+        def encode(shard):
+            if weight is not None:
+                return shard * weight.astype(shard.dtype)
+            return shard
+
+        def transfer(enc):
+            return primitives.c2c_red_ring(enc, pod)
+        return encode, transfer
+    if cfg.compression == "int8":
+        from . import compression
+
+        def encode(shard):
+            return compression.int8_encode(shard, pod, weight=weight)
+
+        def transfer(enc):
+            q, scale = enc
+            return compression.int8_transfer(q, scale, pod, shard_n,
+                                             flat.dtype)
+        return encode, transfer
+    if cfg.compression == "bf16":
+        def encode(shard):
+            if weight is not None:
+                shard = shard * weight.astype(shard.dtype)
+            return shard.astype(jnp.bfloat16)
+
+        def transfer(enc):
+            return lax.psum(enc, pod).astype(flat.dtype)
+        return encode, transfer
+    if cfg.compression is not None:
+        from . import compression
+
+        def encode(shard):
+            return shard
+
+        def transfer(enc):
+            return compression.compressed_psum(enc, pod, cfg.compression,
+                                               weight=weight)
+        return encode, transfer
+
+    def encode(shard):
+        if weight is not None:
+            return shard * weight.astype(shard.dtype)
+        return shard
+
+    def transfer(enc):
+        return primitives.c2c_red(enc, pod)
+    return encode, transfer
+
+
 def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False,
                         weight: jax.Array | None = None) -> jax.Array:
     """AllReduceH on a 1-D array, chunked + phase-pipelined.
@@ -75,55 +153,54 @@ def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False,
     isize = primitives.axis_size(intra)
     k = max(1, int(cfg.n_chunks))
     n = flat.size
-    chunk = -(-n // k)                     # ceil
-    chunk += (-chunk) % isize              # keep shards aligned
-    pad = chunk * k - n
+    # the SHARD (post-ReduceScatter, 1/intra of the payload) is what the
+    # chunk loop iterates over, so the flat buffer must split into
+    # k·isize equal tiles; packed buffers are pre-aligned to this
+    pad = (-n) % (k * isize)
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    chunks = flat.reshape(k, chunk)
+    shard_n = flat.size // isize
+    chunk = shard_n // k
+    encode, transfer = _codec_stages(cfg, flat, chunk, use_ring, weight)
+    # One intra ReduceScatter / AllGather on the whole payload: on the
+    # emulated backend splitting the ICI phases k-ways buys no overlap
+    # (XLA executes the per-device program in order) and pays an extra
+    # payload-sized materialisation per split — the measured cost of a
+    # k-chunked RS/AG is ~2x the unsplit one at identical bytes.  The
+    # chunk pipeline therefore lives where it pays: on the C2C hop and
+    # the codec (below).  The real-fabric 3-phase overlap is still
+    # modeled by the ChunkLoop schedule IR (core/cost_model.py prices
+    # all four stages; core/transport_sim.py simulates them).
+    rs = primitives.hom_reduce_scatter(flat, intra)
+    if k == 1:
+        out = primitives.hom_all_gather(transfer(encode(rs)), intra)
+        return out[:n]
+    chunks = rs.reshape(k, chunk)
 
-    def pod_reduce(shard):
-        if pod is None:
-            return shard
-        if use_ring:
-            if weight is not None:
-                shard = shard * weight.astype(shard.dtype)
-            return primitives.c2c_red_ring(shard, pod)
-        if cfg.compression is not None:
-            from . import compression
-            return compression.compressed_psum(shard, pod, cfg.compression,
-                                               weight=weight)
-        if weight is not None:
-            shard = shard * weight.astype(shard.dtype)
-        return primitives.c2c_red(shard, pod)
+    def write(out, ar, i):
+        # chunk i's reduced result lands at its shard offset via an
+        # in-place dynamic_update_slice on the carried buffer (XLA
+        # aliases it across iterations) — no concatenate.
+        return lax.dynamic_update_slice(out, ar, (i * chunk,))
 
-    zshard = jnp.zeros((chunk // isize,), flat.dtype)
-
-    def write(out, ag, i):
-        # chunk i-2's gathered result lands at its final offset via an
-        # in-place dynamic_update_slice on the carried output buffer
-        # (XLA aliases it across iterations) — iterations 0/1 write
-        # pipeline-fill zeros at a clamped offset 0, overwritten by the
-        # real chunk 0 at i=2.  No concatenate, and no extra zero-chunk
-        # collectives (the flush stays outside the loop).
-        return lax.dynamic_update_slice(out, ag, ((i - 2) * chunk,))
+    # --- double-buffered C2C loop: compress(i) overlaps transfer(i-1).
+    # The peel keeps every collective off zero carries: exactly k pod
+    # reductions run for k chunks (the old in-loop fill cost k+2, two
+    # of them on zeros, plus the codec work when compression was on).
+    enc0 = encode(chunks[0])
 
     def step(carry, i):
-        rs_prev, ar_prev, out = carry
+        enc_prev, out = carry
         xi = lax.dynamic_index_in_dim(chunks, i, 0, keepdims=False)
-        # three independent collectives; XLA may run them concurrently
-        rs_i = primitives.hom_reduce_scatter(xi, intra)      # ICI
-        ar_i = pod_reduce(rs_prev)                            # DCN
-        ag_i = primitives.hom_all_gather(ar_prev, intra)      # ICI
-        return (rs_i, ar_i, write(out, ag_i, i)), None
+        # independent stages; XLA may run them concurrently
+        enc_i = encode(xi)                                  # compress(i)
+        ar_i = transfer(enc_prev)                           # DCN C2C(i-1)
+        return (enc_i, write(out, ar_i, i - 1)), None
 
-    out0 = jnp.zeros((k * chunk,), flat.dtype)
-    (rs_last, ar_last, out), _ = lax.scan(step, (zshard, zshard, out0),
-                                          jnp.arange(k))
-    # flush the two in-flight chunks (k-2 and k-1)
-    ar_tail = pod_reduce(rs_last)
-    out = write(out, primitives.hom_all_gather(ar_last, intra), k)
-    out = write(out, primitives.hom_all_gather(ar_tail, intra), k + 1)
+    out0 = jnp.zeros((shard_n,), flat.dtype)
+    (enc_last, red), _ = lax.scan(step, (enc0, out0), jnp.arange(1, k))
+    red = write(red, transfer(enc_last), k - 1)   # drain: C2C of chunk k-1
+    out = primitives.hom_all_gather(red, intra)
     return out[:n]
 
 

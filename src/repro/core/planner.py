@@ -201,6 +201,12 @@ class CommPlan:
     skew: Any = None               # core.skew.SkewSplit (duck-typed)
     compute_s: tuple[float, ...] = ()
     cluster_weights: tuple[float, ...] | None = None
+    # Data-path decision (plan(packed=True, n_leaves=...)): "packed"
+    # unless the modeled pack+unpack overhead exceeds what packing saves
+    # over syncing the n_leaves tree leaves individually — then
+    # "per_leaf" and the launcher must run the unpacked tree sync.
+    data_path: str = "packed"
+    per_leaf_s: float | None = None   # predicted per-leaf alternative, s
 
     @property
     def dp_axes(self) -> tuple[str, ...]:
@@ -276,6 +282,8 @@ class CommPlan:
             "predicted_step_s": self.predicted_step_s,
             "exposed_comm_s": self.exposed_comm_s,
             "recommended_mode": self.recommended_mode(),
+            "data_path": self.data_path,
+            "per_leaf_s": self.per_leaf_s,
             "bucket_order": list(self.bucket_order),
             "overlap": (self.overlap.summary()
                         if self.overlap is not None else None),
@@ -339,6 +347,17 @@ class CommPlan:
             lines.append(
                 f"skew: microbatches {mbs}, compute {comp} ms/cluster, "
                 f"straggler step {self.predicted_straggler_s * 1e3:.2f} ms")
+        if self.per_leaf_s is not None:
+            if self.data_path == "per_leaf":
+                lines.append(
+                    f"data path: PER-LEAF fallback — modeled pack overhead "
+                    f"exceeds the per-message alpha saving "
+                    f"(serial per-leaf bound {self.per_leaf_s * 1e3:.2f} "
+                    f"ms/sync, packed {self.predicted_step_s * 1e3:.2f} ms)")
+            else:
+                lines.append(
+                    f"data path: packed (serial per-leaf bound "
+                    f"{self.per_leaf_s * 1e3:.2f} ms/sync)")
         return "\n".join(lines)
 
 
@@ -369,7 +388,7 @@ def _price_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
     if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
         t, c2c = _price_flat(topo, sched.coll, nbytes, flat_mechanism)
         if packed:
-            t += 2.0 * cost_model.pack_pass_time(topo, nbytes)
+            t += cost_model.packed_overhead_time(topo, nbytes)
         return t, c2c
     if packed:
         sched = schedule_ir.with_packing(sched)
@@ -610,6 +629,41 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
                             chunk_bytes, _sim_cache)
 
 
+# The margin the modeled per-message α saving must clear over the
+# modeled pack overhead before plan() switches the data path to packed
+# (see the fallback block at the end of plan()).  α–β constants carry
+# real error against any concrete fabric, so a sub-20% differential is
+# a coin flip — and losing the flip costs more on the packed side
+# (pack/unpack passes, pinned comm buffer, layout coupling) than on
+# the per-leaf side.  Fabrics where packing actually matters
+# (per-message α × hundreds of leaves) clear this bar by 10-100x, so
+# the margin only changes the call where the paths genuinely tie.
+PACKED_WIN_MARGIN = 1.2
+
+
+def _per_leaf_time(topo: HetTopology, coll: str, sizes: Sequence[int],
+                   n_leaves: int, kw: dict,
+                   sim_cache: dict | None) -> float:
+    """Predicted total sync time of the *unpacked* alternative: each
+    bucket's payload synced as its share of the tree's ``n_leaves``
+    leaves, one collective per leaf (α per leaf, no Pack/Unpack).  Each
+    leaf is priced at the bucket's mean leaf size through the same
+    candidate search the packed plan used, so the comparison is
+    schedule-for-schedule: packed pays 2 pack passes + pack α once, the
+    per-leaf path pays the per-collective α ``n_leaves`` times on
+    α-dominated payload slivers."""
+    total = max(1, sum(int(s) for s in sizes))
+    kw = dict(kw)
+    kw["packed"] = False
+    t = 0.0
+    for n in sizes:
+        leaves = max(1, round(n_leaves * int(n) / total))
+        leaf = max(1, int(n) // leaves)
+        bp = plan_bucket(topo, coll, leaf, _sim_cache=sim_cache, **kw)
+        t += bp.predicted_s * leaves
+    return t
+
+
 def plan(topo: HetTopology, bucket_sizes, *,
          coll: str = "all_reduce",
          pod_axis: str | None = "pod", intra_axis: str = "data",
@@ -623,6 +677,7 @@ def plan(topo: HetTopology, bucket_sizes, *,
          skew: Any = None,
          skew_compute_s: Sequence[float] | None = None,
          packed: bool = False,
+         n_leaves: int | None = None,
          _sim_cache: dict | None = None) -> CommPlan:
     """Plan the communication schedule for a list of gradient buckets.
 
@@ -664,6 +719,16 @@ def plan(topo: HetTopology, bucket_sizes, *,
         monolithic decision sees the per-bucket pack α it must amortize
         (DESIGN.md §11); analytical callers comparing against raw
         ``estimate_schedule`` output keep the default.
+      n_leaves: leaf count of the gradient tree the buckets come from.
+        With ``packed=True`` it arms the per-leaf fallback: the planner
+        prices the unpacked alternative (one collective per leaf, no
+        Pack/Unpack; reported as ``per_leaf_s``) and decides
+        ``CommPlan.data_path`` by the differential rule — packed only
+        when the per-message launch-α saving of (n_leaves - 1) syncs
+        clears the modeled pack overhead by ``PACKED_WIN_MARGIN`` — so
+        no reachable configuration regresses by packing.  Launchers
+        read ``data_path`` and override ``TrainConfig.packed``
+        accordingly.
       skew / skew_compute_s: the uneven batch split the plan executes
         under (``core.skew.SkewSplit``) and its per-cluster compute
         times (``skew.compute_times``).  Candidates are then scored by
@@ -746,7 +811,7 @@ def plan(topo: HetTopology, bucket_sizes, *,
                                **kw)
             # the chain's one pack + one unpack: charged conservatively
             # as fully exposed (the unpack runs after the last bucket)
-            chain_pack = (2.0 * cost_model.pack_pass_time(t, sum(sizes))
+            chain_pack = (cost_model.packed_overhead_time(t, sum(sizes))
                           if packed else 0.0)
             report = OverlapReport(
                 backward_compute_s,
@@ -764,6 +829,31 @@ def plan(topo: HetTopology, bucket_sizes, *,
         if best_score is None or score > best_score:
             best, best_score = cand, score
     assert best is not None
+    if packed and n_leaves is not None and n_leaves > 0:
+        alt = _per_leaf_time(best.topology, coll, sizes, n_leaves, kw,
+                             sim_cache)
+        # The decision is DIFFERENTIAL, not plan-total vs plan-total:
+        # both paths move identical payload bytes through identical
+        # collective phases, so those β terms cancel exactly and
+        # comparing full plans would decide on the *noise* of two large
+        # nearly-equal totals.  What packing buys is the per-message
+        # launch α of the (n_leaves - 1) extra syncs (times the phases
+        # each sync runs); what it costs is the pack passes (zero-init
+        # + scatter-write) plus the slice unpack on the copy engine.
+        # Packed wins only when the α saving clears that overhead by
+        # PACKED_WIN_MARGIN — on per-message-α fabrics (real DCN,
+        # hundreds of leaves) by 10-100x, while on β-bound fabrics
+        # (or a 1-leaf tree) the pack pass can never pay for itself.
+        c = max(best.topology.clusters, key=lambda cl: cl.alpha_native_s)
+        n_phases = 3 if pod_axis is not None else 1   # RS / C2C / AG
+        alpha_saving = (n_leaves - 1) * n_phases * c.alpha_native_s
+        pack_overhead = cost_model.packed_overhead_time(
+            best.topology, float(sum(sizes)))
+        best = dataclasses.replace(
+            best, per_leaf_s=alt,
+            data_path=("packed"
+                       if alpha_saving >= pack_overhead * PACKED_WIN_MARGIN
+                       else "per_leaf"))
     return best
 
 

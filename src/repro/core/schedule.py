@@ -177,16 +177,23 @@ class C2CCpy(Step):
 @dataclasses.dataclass(frozen=True)
 class Compress(Step):
     """Encode the payload into the wire codec before the C2C steps that
-    follow (until the matching Decompress).  Free in the α–β model (the
-    codec cost rides the C2C steps' ``wire_ratio``); the executor fuses
-    it into the combining exchange (`compression.compressed_psum` or a
-    bf16 wire cast)."""
+    follow (until the matching Decompress).  The executor fuses it into
+    the combining exchange (`compression.compressed_psum`, or the
+    encode half of the double-buffered chunk loop); the pricer and the
+    simulator charge one launch α plus an HBM pass of ``vol`` bytes
+    (the post-ReduceScatter shard) through the on-device copy
+    bandwidth.  In a pipelined schedule the charge lands in the
+    ``codec_s`` pipeline stage, which the chunk loop's double-buffered
+    carry hides behind the bottleneck stage
+    (``cost_model.CollectiveEstimate.pipelined_s``)."""
     codec: str = "bf16"
+    vol: str = INTRA_SHARD
 
 
 @dataclasses.dataclass(frozen=True)
 class Decompress(Step):
     codec: str = "bf16"
+    vol: str = INTRA_SHARD
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,14 +211,23 @@ class Scale(Step):
 @dataclasses.dataclass(frozen=True)
 class Pack(Step):
     """Local data-path step writing every gradient leaf into the
-    persistent dtype-bucketed comm buffer (``core/packing.py``): one
-    fused concatenate at the pytree boundary.  The executor's pytree
-    entry points perform it (the array-level interpreter sees an
-    already-packed buffer and treats the step as identity); the pricer
-    and the simulator charge one launch α plus one HBM pass of ``vol``
-    bytes through the cluster's on-device copy bandwidth — the cost the
-    planner amortizes when choosing bucket granularity (DESIGN.md §11)."""
+    persistent dtype-bucketed comm buffer (``core/packing.py``): a
+    scatter of static-offset in-place leaf writes at the pytree
+    boundary (zero concatenates).  The executor's pytree entry points
+    perform it (the array-level interpreter sees an already-packed
+    buffer and treats the step as identity); the pricer and the
+    simulator charge one launch α plus one HBM pass of ``vol`` bytes
+    through the cluster's on-device copy bandwidth — the cost the
+    planner amortizes when choosing bucket granularity (DESIGN.md §11).
+
+    ``wire_ratio`` is the Pack/Compress fusion factor set by
+    :func:`with_packing` on codec schedules: the fused pack+quantize
+    kernel (``kernels.quant.fused_pack_quant_call``) writes wire-dtype
+    blocks straight into the comm buffer, so the pack pass reads the
+    full leaves but writes only ``wire_ratio`` of the bytes — priced as
+    ``vol · (1 + wire_ratio) / 2`` through the copy bandwidth."""
     vol: str = FULL
+    wire_ratio: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,11 +298,22 @@ def with_packing(sched: Schedule) -> Schedule:
     registered mode gains a packed variant with no new builder
     (``tools/check_schedule_cover.py`` asserts exactly that).
     Idempotent; the Pack sits first so its cost lands in the start
-    phase, the Unpack last (end phase)."""
+    phase, the Unpack last (end phase).
+
+    Pack/Compress fusion: when the schedule carries a wire codec
+    (a :class:`Compress` step, possibly inside a ChunkLoop body), the
+    Pack gets the codec's wire ratio — the fused pack+quantize kernel
+    writes wire-dtype blocks straight into the comm buffer instead of
+    staging a full-precision copy (see :class:`Pack`)."""
     if any(isinstance(s, (Pack, Unpack)) for s in sched.steps):
         return sched
+    unrolled, _ = sched.unrolled()
+    fused_ratio = (CODEC_WIRE_RATIO[sched.compression]
+                   if any(isinstance(s, Compress) for s in unrolled)
+                   else 1.0)
     return dataclasses.replace(
-        sched, steps=(Pack("start"),) + sched.steps + (Unpack("end"),))
+        sched, steps=(Pack("start", wire_ratio=fused_ratio),) + sched.steps
+        + (Unpack("end"),))
 
 
 def with_cluster_scale(sched: Schedule) -> Schedule:

@@ -144,7 +144,8 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
     if isinstance(step, (schedule_ir.IntraReduceScatter,
                          schedule_ir.IntraAllGather, schedule_ir.IntraBcast,
                          schedule_ir.IntraAll2All, schedule_ir.BorderGather,
-                         schedule_ir.Pack, schedule_ir.Unpack)):
+                         schedule_ir.Pack, schedule_ir.Unpack,
+                         schedule_ir.Compress, schedule_ir.Decompress)):
         return max(cost_model._intra_step_time(step, topo, ci, nbytes)
                    for ci in range(topo.n_clusters))
     if isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
@@ -163,7 +164,7 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
             nxt = topo.clusters[(ci + 1) % C]
             t = max(t, simulate_c2c_cpy(c, nxt, vol, mech, chunk_bytes))
         return t
-    return 0.0  # Scale / Compress / Decompress
+    return 0.0  # Scale: nb-sized multiply folded into the codec, free
 
 
 def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
@@ -242,7 +243,9 @@ def simulate_step(topo: HetTopology, sched: schedule_ir.Schedule,
                                    schedule_ir.IntraAllGather,
                                    schedule_ir.IntraBcast,
                                    schedule_ir.IntraAll2All,
-                                   schedule_ir.BorderGather)):
+                                   schedule_ir.BorderGather,
+                                   schedule_ir.Compress,
+                                   schedule_ir.Decompress)):
                 for ci in range(C):
                     dur = cost_model._intra_step_time(step, topo, ci, n_c)
                     t[ci] = max(t[ci], stage_free[si][ci]) + dur
@@ -254,7 +257,7 @@ def simulate_step(topo: HetTopology, sched: schedule_ir.Schedule,
                 end = max(max(t), max(stage_free[si])) + dur
                 t = [end] * C
                 stage_free[si] = [end] * C
-            # Scale / Compress / Decompress: free
+            # Scale: free (folded into the codec's nb-sized vector)
         done = max(done, max(t))
     return done
 

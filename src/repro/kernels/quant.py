@@ -21,6 +21,12 @@ Three kernel families (``core/compression.py`` is the consumer):
   * ``dequant_int8_call`` — decode; an optional ``gain`` folds any
     post-sum scalar (cluster scale epilogue, 1/n mean) into the same
     nb-sized scale multiply instead of a payload-sized pass.
+  * ``pack_slots_call`` / ``fused_pack_quant_call`` — the fused packed
+    data path: leaf slices are written straight into the persistent
+    comm buffer via the ``PackedLayout`` slot map (aliased in-place
+    writes, no per-step concatenate), and the quantize runs one
+    amax+scale+round+clip pass over the packed blocks — bit-identical
+    to the pack → amax → scaled-quant composition.
 """
 
 from __future__ import annotations
@@ -53,7 +59,13 @@ def _amax_kernel(x_ref, a_ref):
 
 def _quant_scaled_kernel(x_ref, s_ref, q_ref):
     x = x_ref[0].astype(jnp.float32)
-    q = jnp.clip(jnp.round(x / s_ref[0, 0]), -127, 127)
+    # an all-zero block can reach this kernel with scale 0 from callers
+    # that skip the shared-scale clamp; dividing by it would put
+    # NaN/inf on the wire, so guard exactly like _quant_kernel does
+    # (the block is all zeros, so any positive scale encodes it as 0)
+    s = s_ref[0, 0]
+    scale = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
     q_ref[0] = q.astype(jnp.int8)
 
 
@@ -110,6 +122,51 @@ def quant_scaled_call(x: jax.Array, scale: jax.Array, *,
         interpret=interpret,
     )(x.reshape(nb, BLOCK), scale.reshape(nb, 1))
     return q
+
+
+def _pack_leaf_kernel(off, n, buf_ref, leaf_ref, o_ref):
+    # o_ref aliases buf_ref (input_output_aliases): only the leaf's
+    # [off, off+n) span is written; the rest of the persistent comm
+    # buffer — other leaves, the zero tail pad — is never touched, so
+    # packing costs exactly one write of the leaf bytes, no
+    # concatenate, no read-modify-write of the buffer.
+    del buf_ref
+    o_ref[pl.ds(off, n)] = leaf_ref[...].astype(o_ref.dtype)
+
+
+def pack_slots_call(pieces, padded: int, dtype=jnp.float32, *,
+                    buf: jax.Array | None = None, interpret: bool = True):
+    """Scatter-pack ``pieces = [(offset, leaf), ...]`` (offsets static,
+    from the ``PackedLayout`` slot map) into one padded 1-D buffer with
+    Pallas in-place writes.  ``buf`` is the persistent comm buffer to
+    write into (zero-initialised when omitted — the tail pad must stay
+    zero so downstream collectives sum it away harmlessly)."""
+    if buf is None:
+        buf = jnp.zeros((padded,), dtype)
+    assert buf.shape == (padded,), buf.shape
+    for off, leaf in pieces:
+        flat = leaf.reshape(-1)
+        buf = pl.pallas_call(
+            functools.partial(_pack_leaf_kernel, int(off), flat.size),
+            out_shape=jax.ShapeDtypeStruct((padded,), dtype),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(buf, flat)
+    return buf
+
+
+def fused_pack_quant_call(pieces, padded: int, *, interpret: bool = True):
+    """Fused pack+quantize for a BLOCK-aligned segment: leaf slices are
+    scattered straight into the comm buffer via the slot map (aliased
+    in-place writes, no concatenate), then ONE amax+scale+round+clip
+    pass per block writes the int8 wire payload.  Versus the two-pass
+    composition (concatenate-pack → amax pass → scaled-quant pass) this
+    saves a full payload read and the pack buffer churn; the quantized
+    blocks and per-block scales are bit-identical to the composition
+    (conformance rows assert so)."""
+    assert padded % BLOCK == 0, padded
+    buf = pack_slots_call(pieces, padded, jnp.float32, interpret=interpret)
+    return quant_int8_call(buf, interpret=interpret)
 
 
 def dequant_int8_call(q: jax.Array, s: jax.Array, *, dtype=jnp.float32,

@@ -138,8 +138,12 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
         # candidates are priced for the data path that will execute:
         # Pack/Unpack steps when packed (DESIGN.md §11), legacy re-pads
         # free when --no-packed — so the A/B axis compares the same
-        # plan under both executors
-        packed=packed)
+        # plan under both executors.  The leaf-count estimate (embed +
+        # final norm + lm_head + ~12 tensors per layer: qkvo, mlp,
+        # norms) arms the planner's per-leaf fallback; lower_cell reads
+        # plan.data_path and drops Pack/Unpack when packing loses.
+        packed=packed,
+        n_leaves=4 + 12 * max(1, cfg.n_layers))
     # structural modes (fsdp / hier_zero1) execute a monolithic sync, so
     # their plan must be priced at that granularity
     sizes, backward_s, train_shape = [grad_bytes], None, None
@@ -411,13 +415,21 @@ def main():
             # the human-readable table replaces reading the raw summary
             # dict out of the result JSON
             print(plan.describe(), flush=True)
+        use_packed = not args.no_packed
+        if plan is not None and plan.data_path == "per_leaf":
+            # planner's per-leaf fallback (plan(packed=True, n_leaves=)):
+            # the modeled pack overhead loses to syncing the leaves
+            # individually, so lower the unpacked executor
+            print("[plan] per-leaf data path (pack overhead loses; "
+                  "lowering without Pack/Unpack)", flush=True)
+            use_packed = False
         res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
                          comm_mode=mode, sp=args.sp,
                          use_pallas=args.pallas, n_chunks=chunks,
                          compression=comp,
                          capacity_factor=args.capacity_factor,
                          remat_policy=args.remat_policy, plan=plan,
-                         packed=not args.no_packed,
+                         packed=use_packed,
                          moe_a2a_mode=moe_a2a_mode)
     except Exception as e:  # noqa: BLE001
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,

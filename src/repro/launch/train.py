@@ -120,8 +120,14 @@ def main(argv=None):
             # pods) — executable plans price the mesh as it runs
             try_balanced=False,
             # the step executes the packed data path, so candidates are
-            # priced with the Pack/Unpack steps (DESIGN.md §11)
-            packed=not args.no_packed)
+            # priced with the Pack/Unpack steps (DESIGN.md §11); the
+            # leaf count arms the per-leaf fallback — if the modeled
+            # pack overhead loses to syncing the leaves individually,
+            # plan.data_path comes back "per_leaf" and packed is
+            # overridden below
+            packed=not args.no_packed,
+            n_leaves=len(jax.tree.leaves(
+                jax.eval_shape(model.init, jax.random.key(0)))))
         # overlap axis: price the readiness-ordered layer buckets against
         # the backward-compute timeline so the plan optimizes exposed
         # rather than total comm time (core/overlap.py).  Structural
@@ -249,10 +255,17 @@ def main(argv=None):
     if plan is not None and mode not in ("fsdp", "hier_zero1"):
         mode = ("hier_overlap"
                 if plan.recommended_mode() == "hier_overlap" else "hier")
+    use_packed = not args.no_packed
+    if plan is not None and plan.data_path == "per_leaf":
+        # planner's per-leaf fallback: pack overhead exceeds the wire
+        # saving for this tree, so execute the unpacked tree sync
+        print("[plan] per-leaf data path (pack overhead loses; "
+              "packed disabled for this run)", flush=True)
+        use_packed = False
     tcfg = TrainConfig(comm_mode=mode,
                        dcn_compression=args.compression, plan=plan,
                        cluster_weights=cluster_weights,
-                       packed=not args.no_packed,
+                       packed=use_packed,
                        opt=OptConfig(lr=args.lr, warmup_steps=20))
     builder_or_step, init = make_train_step(model, tcfg, mesh=mesh)
     params, opt = init(jax.random.key(0))

@@ -204,6 +204,72 @@ for mode, n_chunks, compression in (("hier", 1, None),
                                     ("hier_overlap", 2, "bf16")):
     check_legacy(mode, n_chunks, compression)
 
+# --- regression: all-zero gradient bucket through every int8 mode ----------
+# A bucket that is entirely zero (frozen embeddings, a just-initialised
+# adapter) must sync NaN-free to exact zeros: the shared-scale codec
+# clamps a zero amax to scale 1.0 (satellite of the fused-pack PR) —
+# an unguarded scale would put 0/0 = NaN on the wire.  Both codec
+# backends (fused jnp mirror and interpret-mode Pallas) are pinned.
+ZTREE = jax.tree.map(jnp.zeros_like, TREE)
+
+
+def check_zero(mode, n_chunks, pallas_env):
+    os.environ["REPRO_PALLAS_QUANT"] = pallas_env
+    try:
+        got = jax.tree.map(np.asarray,
+                           sync_fn(mode, n_chunks, "int8")(ZTREE))
+        for g in jax.tree.leaves(got):
+            assert np.all(np.isfinite(g)), (
+                f"all-zero bucket NaN/inf: {mode} k={n_chunks} "
+                f"pallas={pallas_env}")
+            assert np.all(g == 0.0), (
+                f"all-zero bucket synced non-zero: {mode} k={n_chunks} "
+                f"pallas={pallas_env}")
+    finally:
+        del os.environ["REPRO_PALLAS_QUANT"]
+    print(f"OK-0 {mode:15s} n_chunks={n_chunks} int8 "
+          f"pallas={pallas_env} (all-zero bucket -> exact zeros)")
+
+
+for pallas_env in ("0", "1"):
+    for mode in ("hier", "hier_pipelined", "hier_overlap"):
+        for n_chunks in (1, 4):
+            check_zero(mode, n_chunks, pallas_env)
+
+# --- fused pack+quantize == pack -> amax -> scaled-quant --------------------
+# The fused kernel (kernels/quant.py: scatter slot writes + one
+# amax+scale+round+clip pass) must match the two-pass composition
+# through core/packing.pack + the standalone quantizer, on both
+# backends: the int8 wire blocks BIT-identical, the f32 scales to 1
+# ulp (separately compiled programs may fold the /127 differently).
+from repro.core import compression, packing  # noqa: E402
+from repro.kernels import quant as quant_k  # noqa: E402
+
+leaves = [np.asarray(v).reshape(-1)
+          for v in jax.tree.leaves(TREE)] + [np.zeros((257,), np.float32)]
+metas = [(str(v.dtype), v.shape, v.size) for v in leaves]
+layout = packing.plan_layout(metas, world=1, block=quant_k.BLOCK)
+seg = layout.segments[0]
+pieces = [(sl.offset, jnp.asarray(lf))
+          for sl, lf in zip(layout.slots, leaves)]
+fq, fs = quant_k.fused_pack_quant_call(pieces, seg.padded)
+for pallas_env in ("0", "1"):
+    os.environ["REPRO_PALLAS_QUANT"] = pallas_env
+    try:
+        buf = packing.pack(layout, [jnp.asarray(lf) for lf in leaves])[
+            seg.dtype]
+        cq, cs = compression.quantize_int8(buf)
+    finally:
+        del os.environ["REPRO_PALLAS_QUANT"]
+    np.testing.assert_array_equal(
+        np.asarray(fq), np.asarray(cq),
+        err_msg=f"fused pack+quant blocks diverge (pallas={pallas_env})")
+    np.testing.assert_allclose(
+        np.asarray(fs), np.asarray(cs), rtol=1e-7,
+        err_msg=f"fused pack+quant scales diverge (pallas={pallas_env})")
+    print(f"OK-F fused pack+quantize bit-identical to pack->quant "
+          f"composition (pallas={pallas_env})")
+
 # --- regression: pod_axis=None + hier_pipelined degenerates cleanly ----
 mesh1d = jax.make_mesh((8,), ("data",))
 cfg1 = CommConfig(mode="hier_pipelined", pod_axis=None, intra_axis="data",

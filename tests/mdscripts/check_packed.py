@@ -2,13 +2,19 @@
 the ZeRO-1 per-dtype wire checks (DESIGN.md §11).
 
 The acceptance bar of the packed path is *structural*, not just
-numeric: the traced gradient sync must contain exactly ONE pack
-concatenate (all leaves + padding fused into one op) and a slice-only
-unpack — no per-bucket, per-chunk, or per-codec ``jnp.concatenate``
-anywhere in the step, for every comm mode including the chunk-
-pipelined int8 worst case that used to re-pad three times.  The legacy
-(unpacked) path must trace strictly more concatenates on the same
-tree, or the assertion is vacuous.
+numeric: the traced gradient sync must contain ZERO concatenates —
+the scatter-pack writes each leaf at its static slot offset
+(``dynamic_update_slice``) into a zeros-initialised segment buffer and
+the unpack is slice-only, so no per-bucket, per-chunk, or per-codec
+``jnp.concatenate`` appears anywhere in the step, for every comm mode
+including the chunk-pipelined int8 worst case that used to re-pad
+three times.  The legacy (unpacked) path must trace strictly more
+concatenates on the same tree, or the assertion is vacuous.
+
+The pipelined chunk loop is additionally pinned by *collective count*:
+the peeled fill/drain plus the scan body must run exactly ``k`` pod
+reductions for ``k`` chunks — the old pipeline fill ran ``k + 2``,
+burning two real C2C rounds (plus codec work) on all-zero carries.
 
 Also covered here (needs the 8-device mesh):
   * ZeRO-1 packed master: scatter + unscatter round-trips a mixed
@@ -62,6 +68,45 @@ def _count(jaxpr, name: str) -> int:
     return total
 
 
+def _dyn_count(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` weighted by how many times
+    they *execute*: a scan body's count is multiplied by the trip count
+    (``params['length']``), so a collective inside the chunk loop
+    counts once per chunk."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        if eqn.primitive.name == "scan":
+            inner = eqn.params["jaxpr"]
+            inner = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            total += eqn.params["length"] * _dyn_count(inner, name)
+            continue
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    total += _dyn_count(v.jaxpr, name)
+                elif hasattr(v, "eqns"):
+                    total += _dyn_count(v, name)
+    return total
+
+
+def _scan_lengths(jaxpr) -> list:
+    out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            out.append(eqn.params["length"])
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    out.extend(_scan_lengths(v.jaxpr))
+                elif hasattr(v, "eqns"):
+                    out.extend(_scan_lengths(v))
+    return out
+
+
 def _gather_in_dtypes(jaxpr) -> list:
     out = []
     for eqn in jaxpr.eqns:
@@ -92,9 +137,9 @@ def sync_jaxpr(mode, n_chunks, compression, packed, weights=None):
     return jax.make_jaxpr(fn)(TREE)
 
 
-# --- exactly one pack, slice-only unpack, per mode --------------------------
-# (the all-f32 smoke tree has one wire-dtype segment, so "one pack" ==
-# one concatenate in the whole traced step)
+# --- zero concatenates on the packed path, per mode -------------------------
+# (scatter-pack: leaves land at static slot offsets via
+# dynamic_update_slice, the tail pad stays zero from the init)
 for mode, n_chunks, compression in (
         ("hier", 1, None),
         ("hier", 1, "int8"),
@@ -106,9 +151,9 @@ for mode, n_chunks, compression in (
                       "concatenate")
     legacy_c = _count(sync_jaxpr(mode, n_chunks, compression, False).jaxpr,
                       "concatenate")
-    assert packed_c == 1, (
+    assert packed_c == 0, (
         f"{mode}/k={n_chunks}/{compression}: packed path traced {packed_c} "
-        f"concatenates, want exactly 1 (the single pack)")
+        f"concatenates, want 0 (scatter-pack)")
     assert legacy_c > packed_c, (
         f"{mode}/k={n_chunks}/{compression}: legacy traced {legacy_c}, "
         f"not more than packed {packed_c} — assertion is vacuous")
@@ -118,12 +163,31 @@ for mode, n_chunks, compression in (
 # weighted sync must not add payload passes or concats (Scale defers
 # into the C2C stage / codec scale vector)
 wj = sync_jaxpr("hier_pipelined", 4, "int8", True, weights=(1.5, 0.5))
-assert _count(wj.jaxpr, "concatenate") == 1, "weighted sync added concats"
-print("OK-J weighted hier_pipelined int8: still exactly one pack")
+assert _count(wj.jaxpr, "concatenate") == 0, "weighted sync added concats"
+print("OK-J weighted hier_pipelined int8: still zero concatenates")
 
-# the overlap chain packs once and unpacks by slicing each bucket's
-# output directly; stacked leaves split across buckets each reassemble
-# with one concatenate — bounded by leaf count, never per step/bucket
+# --- pipelined chunk loop: exactly k pod reductions -------------------------
+# the peeled fill/drain must not burn C2C rounds on zero carries: for k
+# chunks the trace holds exactly k pod psums (1 drained + scan body x
+# (k-1)) and the chunk-loop scan trips k-1 times.  The old fill traced
+# k+2 — two real reductions (plus codec work) of all-zero shards.
+K = 4
+pj = sync_jaxpr("hier_pipelined", K, None, True).jaxpr
+n_psum = _dyn_count(pj, "psum_invariant") or _dyn_count(pj, "psum")
+lens = _scan_lengths(pj)
+assert n_psum == K, (
+    f"hier_pipelined k={K}: {n_psum} pod reductions executed, want "
+    f"exactly {K} (pipeline fill is syncing zero carries)")
+assert K - 1 in lens, (
+    f"hier_pipelined k={K}: no scan of length k-1={K - 1} (got {lens}) "
+    f"— the peeled fill/drain structure changed")
+print(f"OK-J hier_pipelined k={K}: exactly {n_psum} pod reductions, "
+      f"chunk scan length {K - 1}")
+
+# the overlap chain scatter-packs once (zero concats) and unpacks by
+# slicing each bucket's output directly; stacked leaves split across
+# buckets each reassemble with one concatenate — bounded by leaf
+# count, never per step/bucket
 CAP = 2 * (19 * 19 + 19) * 4
 cfg_o = CommConfig(mode="hier", pod_axis="pod", intra_axis="data",
                    n_chunks=1)
@@ -133,9 +197,9 @@ fn_o = shard_map(lambda t: overlap.tree_hier_psum_overlap(t, cfg_o,
                  check_vma=False)
 oc = _count(jax.make_jaxpr(fn_o)(TREE).jaxpr, "concatenate")
 n_stacked = 2        # wq + norm_scale can split across layer buckets
-assert oc <= 1 + n_stacked, f"overlap packed path traced {oc} concatenates"
-print(f"OK-J hier_overlap packed: {oc} concatenates (pack + "
-      f"<= {n_stacked} stacked-leaf reassemblies)")
+assert oc <= n_stacked, f"overlap packed path traced {oc} concatenates"
+print(f"OK-J hier_overlap packed: {oc} concatenates "
+      f"(<= {n_stacked} stacked-leaf reassemblies, zero from the pack)")
 
 # --- ZeRO-1 packed master: mixed-dtype roundtrip + bf16 wire ----------------
 MTREE = {

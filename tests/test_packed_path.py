@@ -1,7 +1,9 @@
-"""Packed gradient data path: jaxpr-level zero-copy acceptance (one
-pack concatenate, slice-only unpack, no per-bucket/per-chunk re-pads)
-plus the ZeRO-1 per-dtype wire checks.  Runs in a subprocess with 8
-virtual devices (shared runner: tests/_mdrun.py)."""
+"""Packed gradient data path: jaxpr-level zero-copy acceptance (zero
+concatenates — the scatter-pack lands each leaf at its static slot
+offset, slice-only unpack, no per-bucket/per-chunk re-pads; exactly k
+pod reductions in the chunk pipeline) plus the ZeRO-1 per-dtype wire
+checks.  Runs in a subprocess with 8 virtual devices (shared runner:
+tests/_mdrun.py)."""
 
 from _mdrun import run_mdscript
 
@@ -10,7 +12,8 @@ def test_packed_data_path_8dev():
     out = run_mdscript("check_packed.py")
     # every structural assertion actually ran
     assert out.count("OK-J") >= 7
-    assert "packed_concats=1" in out
+    assert "packed_concats=0" in out
+    assert "pod reductions" in out
     assert "OK-Z zero1 packed scatter/unscatter" in out
     assert "bf16 segment gathers in bf16" in out
     assert "ALL-OK" in out

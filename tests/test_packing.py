@@ -152,7 +152,8 @@ def test_bucket_layout_bounds_and_gaps():
         assert (e - s) % a == 0        # per-bucket schedule alignment
         prev_end = e
     assert lay.segments[0].padded == prev_end
-    # pack_bucketed fills inter-bucket gaps with zeros, one concatenate
+    # pack_bucketed zero-fills inter-bucket gaps (scatter writes into a
+    # zeros-initialised buffer — no concatenate is traced)
     pieces = [jnp.arange(10.0), jnp.arange(3.0), jnp.arange(7.0),
               jnp.arange(1.0)]
     buf = packing.pack_bucketed(lay, pieces)
@@ -230,6 +231,72 @@ def test_pallas_codec_matches_jnp(monkeypatch):
     monkeypatch.setenv("REPRO_PALLAS_QUANT", "1")
     yp32 = compression._decode(q32, scale)
     np.testing.assert_allclose(np.asarray(yp32), np.asarray(yj32), rtol=1e-6)
+
+
+def test_zero_amax_never_divides_by_zero(monkeypatch):
+    """Shared-scale codec zero-amax guard: an all-zero block must
+    encode/decode to finite exact zeros on BOTH backends, even when the
+    caller hands the raw (unclamped) zero scale to the scaled quantizer
+    — the kernel clamps to 1.0 exactly like ``_quant_kernel``."""
+    z = jnp.zeros((2 * quant_kernels.BLOCK,), jnp.float32)
+    zero_scale = jnp.zeros((2,), jnp.float32)
+    for env in ("0", "1"):
+        monkeypatch.setenv("REPRO_PALLAS_QUANT", env)
+        q = compression._encode_scaled(z, zero_scale)
+        assert np.all(np.asarray(q) == 0), env
+        qq, ss = compression.quantize_int8(z)
+        y = compression.dequantize_int8(qq, ss, z.size)
+        assert np.all(np.isfinite(np.asarray(y))) and np.all(
+            np.asarray(y) == 0.0), env
+    # the Pallas scaled kernel, addressed directly with scale 0
+    qk = quant_kernels.quant_scaled_call(z, zero_scale)
+    assert np.all(np.asarray(qk) == 0)
+
+
+def _random_leaf_set(rng, n_leaves):
+    leaves = []
+    for _ in range(n_leaves):
+        shape = tuple(int(s) for s in rng.integers(1, 40,
+                                                   size=rng.integers(1, 3)))
+        leaves.append(jnp.asarray(rng.normal(size=shape) * 2.0, jnp.float32))
+    return leaves
+
+
+@hypothesis.given(n_leaves=st.integers(1, 8), seed=st.integers(0, 10 ** 6))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_fused_pack_quant_matches_composition(n_leaves, seed):
+    """Tentpole conformance: the fused pack+quantize kernel
+    (``kernels/quant.py``: slot-map scatter writes + one
+    amax+scale+round+clip pass) matches the two-pass composition
+    scatter-pack -> standalone quantizer: the int8 wire blocks are
+    BIT-identical; the f32 scales agree to 1 ulp (separately compiled
+    programs may fold the /127 differently)."""
+    rng = np.random.default_rng(seed)
+    leaves = _random_leaf_set(rng, n_leaves)
+    lay = packing.plan_layout(packing.tree_metas(leaves), world=1,
+                              block=quant_kernels.BLOCK)
+    seg = lay.segments[0]
+    pieces = [(sl.offset, lf) for sl, lf in zip(lay.slots, leaves)]
+    fq, fs = quant_kernels.fused_pack_quant_call(pieces, seg.padded)
+    buf = packing.pack(lay, leaves)[seg.dtype]
+    cq, cs = compression.quantize_int8(buf)
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(cq))
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(cs), rtol=1e-7)
+
+
+def test_pack_slots_call_matches_scatter_pack():
+    """The Pallas in-place slot writer fills the persistent comm buffer
+    identically to the jnp scatter-pack (same offsets, zero tail)."""
+    rng = np.random.default_rng(11)
+    leaves = _random_leaf_set(rng, 5)
+    lay = packing.plan_layout(packing.tree_metas(leaves), world=1,
+                              block=quant_kernels.BLOCK)
+    seg = lay.segments[0]
+    pieces = [(sl.offset, lf) for sl, lf in zip(lay.slots, leaves)]
+    got = quant_kernels.pack_slots_call(pieces, seg.padded)
+    want = packing.pack(lay, leaves)[seg.dtype]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.all(np.asarray(got[seg.used:]) == 0.0)
 
 
 def test_comm_alignment_floor():

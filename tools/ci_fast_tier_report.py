@@ -54,9 +54,12 @@ def _delta(now: float, base: float, unit: str = "") -> str:
 
 
 def bench_section(bench_path: pathlib.Path) -> None:
-    """Perf-smoke table from the packed data-path benchmark.  Purely
-    informational (non-blocking): the numbers are an emulated-CPU
-    trajectory — relative deltas meaningful, absolute times not."""
+    """Perf-smoke table from the packed data-path benchmark.  The raw
+    timings are an emulated-CPU trajectory (relative deltas meaningful,
+    absolute times not); the *gating* happens in the perf-smoke job's
+    dedicated step, which asserts ``meta.acceptance.pass`` and
+    ``meta.planner_invariant.pass`` from the regenerated JSON — this
+    section only renders what that step decided on."""
     if not bench_path.is_file():
         return
     try:
@@ -67,7 +70,7 @@ def bench_section(bench_path: pathlib.Path) -> None:
     meta = bench.get("meta", {})
     acc = meta.get("acceptance", {})
     print()
-    print("### Perf smoke — packed gradient data path (non-blocking)")
+    print("### Perf smoke — packed gradient data path (gated)")
     print()
     print(f"{meta.get('devices', '?')} emulated devices, "
           f"{meta.get('tree', {}).get('grad_bytes', 0) / 2 ** 20:.1f} MiB "
@@ -89,6 +92,11 @@ def bench_section(bench_path: pathlib.Path) -> None:
         print(f"> {mark} acceptance: {acc.get('cell')} "
               f"{acc.get('metric')} = {acc.get('value')}x "
               f"(bar {acc.get('bar')}x)")
+    inv = meta.get("planner_invariant", {})
+    if inv:
+        mark = ":white_check_mark:" if inv.get("pass") else ":warning:"
+        print(f"> {mark} planner invariant: chosen data path >= per-leaf "
+              f"in every mode — {inv.get('values')}")
 
 
 def main() -> int:
