@@ -1,0 +1,191 @@
+"""Planner-at-scale benchmark (BENCH_plan.json; DESIGN.md §14).
+
+Measures ``core.planner.plan`` wall-clock on simulated TPU multipods at
+three scales — ~1k, ~10k and ~100k devices — for two configurations:
+
+  * ``scalar``     — the pre-§14 planner: per-candidate scalar pricing
+    (``vectorized=False``) cross-validated by the per-border-rank
+    device-level event sim (``sim_level='device'``).  This is the
+    differential-tested oracle; it is only run where it is feasible
+    (1k/10k — at 100k its device sim walks ~100k border pairs per
+    validated transfer).
+  * ``vectorized`` — the shipping default: batched numpy pricing of the
+    candidate grid with symmetry folding (``cost_model.
+    price_schedule_grid``), cross-validated by the cluster-aggregated
+    event sim that ``sim_level='auto'`` selects past 512 ranks.
+
+Both configurations run with ``cache=None`` so every measurement is a
+cold search; the ``PlanCache`` hit path is timed separately
+(``cache_hit_ms``).  All times are min-of-N wall seconds on the host
+CPU — the planner is pure Python/numpy, no devices involved.
+
+Correctness is asserted, not sampled: at every scale where the oracle
+runs, the vectorized plan's ``summary()`` must equal the oracle's
+**exactly** (bit-identical candidate choices and predicted times — the
+grid replicates the scalar IEEE operation order, DESIGN.md §14), and
+the cluster-sim plan may differ from the device-sim plan only in the
+``validated_via`` tag.  Every plan must report ``validated=True`` with
+``validated_via`` in {device_sim, cluster_sim} — large topologies
+downgrade the cross-validation, they never skip it.
+
+Acceptance gate (the perf-smoke CI job exits non-zero on failure):
+
+  * 1k-device plan (vectorized) under 0.5 s;
+  * >= 20x speedup scalar -> vectorized at 10k devices;
+  * 100k-device plan (vectorized) under 2 s;
+  * vectorized plans == scalar-oracle plans wherever the oracle ran;
+  * every plan validated (via device_sim or cluster_sim, never skipped).
+
+Run:  PYTHONPATH=src python benchmarks/bench_plan.py [--quick]
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.core import overlap, planner, topology
+from repro.core.plan_cache import PlanCache
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+SCALES = [
+    # (tag, n_pods, chips_per_pod, oracle_feasible)
+    ("1k", 4, 256, True),
+    ("10k", 40, 256, True),
+    ("100k", 392, 256, False),
+]
+
+PLAN_KW = dict(coll="all_reduce", flat_mechanism="native",
+               try_balanced=False, cache=None)
+
+
+def _time_min(fn, reps: int) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI perf smoke: fewer timing reps")
+    ap.add_argument("--volume-gib", type=float, default=4.0,
+                    help="gradient volume (GiB) split into layer buckets")
+    ap.add_argument("--layers", type=int, default=24)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_plan.json"))
+    args = ap.parse_args()
+
+    sizes = overlap.bucket_sizes_for_volume(
+        int(args.volume_gib * (1 << 30)), args.layers)
+    reps = 2 if args.quick else 5
+    scalar_reps = 1 if args.quick else 2
+
+    results = {}
+    for tag, pods, chips, oracle_ok in SCALES:
+        topo = topology.tpu_multipod(pods, chips)
+        row = {"n_pods": pods, "chips_per_pod": chips,
+               "n_devices": topo.n_ranks, "n_buckets": len(sizes)}
+
+        t_vec, p_vec = _time_min(
+            lambda t=topo: planner.plan(t, sizes, **PLAN_KW), reps)
+        row["vectorized_s"] = round(t_vec, 6)
+        row["validated"] = p_vec.validated
+        row["validated_via"] = p_vec.validated_via
+        row["predicted_step_ms"] = round(p_vec.predicted_step_s * 1e3, 3)
+
+        if oracle_ok:
+            t_scalar, p_scalar = _time_min(
+                lambda t=topo: planner.plan(t, sizes, vectorized=False,
+                                            sim_level="device", **PLAN_KW),
+                scalar_reps)
+            row["scalar_s"] = round(t_scalar, 6)
+            row["speedup"] = round(t_scalar / max(t_vec, 1e-12), 1)
+            # bit-identity at the SAME sim level: the vectorized grid
+            # must reproduce the oracle's plan exactly, float for float
+            p_vec_dev = planner.plan(topo, sizes, vectorized=True,
+                                     sim_level="device", **PLAN_KW)
+            row["identical_to_oracle"] = (p_vec_dev.summary()
+                                          == p_scalar.summary())
+            # the auto (cluster-sim) plan may differ from the device-sim
+            # plan only in its validated_via tag — the cluster sim is
+            # exact, not approximate
+            sv, sd = dict(p_vec.summary()), dict(p_vec_dev.summary())
+            sv.pop("validated_via"), sd.pop("validated_via")
+            row["cluster_sim_parity"] = sv == sd
+
+        # PlanCache hit path: one miss to fill, then timed hits
+        pc = PlanCache()
+        planner.plan(topo, sizes, **{**PLAN_KW, "cache": pc})
+        t_hit, _ = _time_min(
+            lambda t=topo: planner.plan(t, sizes,
+                                        **{**PLAN_KW, "cache": pc}), reps)
+        row["cache_hit_ms"] = round(t_hit * 1e3, 4)
+        row["cache_stats"] = pc.stats()
+
+        results[tag] = row
+        print(f"{tag:>5}: {row['n_devices']} devices  "
+              f"vectorized {t_vec * 1e3:8.1f} ms"
+              + (f"  scalar {row['scalar_s'] * 1e3:9.1f} ms"
+                 f"  speedup {row['speedup']:6.1f}x"
+                 f"  identical={row['identical_to_oracle']}"
+                 if oracle_ok else "  (scalar oracle infeasible)")
+              + f"  cache hit {row['cache_hit_ms']:.2f} ms"
+              f"  [{row['validated_via']}]", flush=True)
+
+    checks = {
+        "plan_1k_under_budget": {
+            "bar_s": 0.5, "value_s": results["1k"]["vectorized_s"],
+            "pass": results["1k"]["vectorized_s"] < 0.5},
+        "speedup_10k": {
+            "bar": 20.0, "value": results["10k"]["speedup"],
+            "pass": results["10k"]["speedup"] >= 20.0},
+        "plan_100k_under_2s": {
+            "bar_s": 2.0, "value_s": results["100k"]["vectorized_s"],
+            "pass": results["100k"]["vectorized_s"] < 2.0},
+        "plans_identical_to_oracle": {
+            "pass": all(r.get("identical_to_oracle", True)
+                        and r.get("cluster_sim_parity", True)
+                        for r in results.values())},
+        "always_validated": {
+            "rule": "validated=True and validated_via in "
+                    "{device_sim, cluster_sim} at every scale — "
+                    "cross-validation downgrades, never skips",
+            "pass": all(r["validated"] and r["validated_via"]
+                        in ("device_sim", "cluster_sim")
+                        for r in results.values())},
+    }
+    ok = all(c["pass"] for c in checks.values())
+    out = {
+        "meta": {
+            "measured": "core.planner.plan wall-clock (pure host CPU; "
+                        "cold cache=None searches; min of "
+                        f"{reps} rep(s))",
+            "buckets": {"volume_gib": args.volume_gib,
+                        "layers": args.layers, "n_buckets": len(sizes)},
+            "quick": bool(args.quick),
+            "acceptance": {**checks, "pass": bool(ok)},
+        },
+        "scales": results,
+    }
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"\nwrote {args.out}")
+    for name, c in checks.items():
+        print(f"  {name}: {'PASS' if c['pass'] else 'FAIL'} "
+              + json.dumps({k: v for k, v in c.items()
+                            if k not in ('pass', 'rule')}))
+    print(f"acceptance -> {'PASS' if ok else 'FAIL'}")
+    # the perf-smoke CI job gates on this exit code (plus the JSON's
+    # meta.acceptance.pass flag)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from . import schedule as schedule_ir
 from .topology import Cluster, HetTopology
 
@@ -77,6 +79,26 @@ def c2c_volume(coll: str, n: int, topo: HetTopology, cluster_idx: int,
     if coll == "send_recv":
         return n, n
     raise ValueError(f"unknown collective {coll!r}")
+
+
+# Collectives whose Table-7 volumes do not depend on a root cluster:
+# for these, c2c_volume is a function of the cluster's fingerprint alone
+# (its rank count vs the global total), so per-cluster maxes may be
+# folded to the distinct-fingerprint representatives without changing a
+# single float.  Root-ed collectives (broadcast/reduce/gather/scatter)
+# price the root differently from fingerprint-equal non-roots and are
+# never folded.
+_ROOT_FREE_COLLS = frozenset({"all_reduce", "all_gather", "reduce_scatter",
+                              "all_to_all", "send_recv"})
+
+
+def _fold_cluster_indices(topo: HetTopology, fold: bool):
+    """Cluster indices a max-aggregated walk must visit: all of them,
+    or — when folding is sound — one representative per distinct
+    cluster fingerprint (``HetTopology.fold_groups``)."""
+    if fold:
+        return [rep for rep, _ in topo.fold_groups()]
+    return range(topo.n_clusters)
 
 
 # ---------------------------------------------------------------------------
@@ -184,14 +206,17 @@ class CollectiveEstimate:
 
 
 def c2c_step_time(topo: HetTopology, coll: str, n: int, alpha: float,
-                  n_chunks: int = 1) -> float:
+                  n_chunks: int = 1, fold: bool = False) -> float:
     """Time (seconds) for the synchronous C2C exchange: each cluster
     drains its Table-7 volume (bytes) through its aggregate NIC
     bandwidth (bytes/s); the step completes when the slowest cluster
     finishes (paper §4.4).  ``alpha`` (seconds) is charged once per
-    chunk — pipelining trades α for overlap."""
+    chunk — pipelining trades α for overlap.  ``fold=True`` maxes over
+    the distinct-fingerprint representatives only (exact for root-free
+    collectives; see ``_fold_cluster_indices``)."""
     t = 0.0
-    for ci, c in enumerate(topo.clusters):
+    for ci in _fold_cluster_indices(topo, fold and coll in _ROOT_FREE_COLLS):
+        c = topo.clusters[ci]
         send, recv = c2c_volume(coll, n, topo, ci)
         vol = max(send, recv)
         t = max(t, alpha * n_chunks + vol / c.cross_Bps)
@@ -252,20 +277,33 @@ def _intra_step_time(step: schedule_ir.Step, topo: HetTopology, ci: int,
 
 def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
                       nbytes_per_rank: int,
-                      hetccl_alpha: float | None = None) -> CollectiveEstimate:
+                      hetccl_alpha: float | None = None,
+                      fold: bool = False) -> CollectiveEstimate:
     """Pricing interpreter of the schedule IR: walk ``sched``'s steps
     through the α–β closed form.  Intra steps accumulate per cluster and
     each phase completes when the slowest cluster does; every C2C step
     drains its (codec- and leg-scaled) Table-7 volume through each
     cluster's aggregate NIC bandwidth, paying one α per chunk (§4.4).
     Returns a ``CollectiveEstimate`` — ``pipelined_s`` reflects the
-    schedule's ChunkLoop depth."""
+    schedule's ChunkLoop depth.
+
+    ``fold=True`` walks only the distinct-fingerprint representatives
+    (``HetTopology.fold_groups``) instead of every cluster — exact for
+    the root-free collectives the planner prices (every aggregation here
+    is a ``max``, and fingerprint-equal clusters produce identical
+    floats); it falls back to the full walk when any step's collective
+    is root-dependent.  The default stays the full per-cluster walk: it
+    is the differential-tested scalar oracle for
+    :func:`price_schedule_grid`."""
     alpha = (hetccl_alpha if hetccl_alpha is not None
              else max(c.alpha_hetccl_s for c in topo.clusters))
     n = nbytes_per_rank
     steps, k = sched.unrolled()
+    cis = _fold_cluster_indices(topo, fold and all(
+        getattr(st, "coll", sched.coll) in _ROOT_FREE_COLLS
+        for st in steps))
     start = end = codec = 0.0
-    for ci in range(topo.n_clusters):
+    for ci in cis:
         s = sum(_intra_step_time(st, topo, ci, n)
                 for st in steps if st.phase == "start")
         e = sum(_intra_step_time(st, topo, ci, n)
@@ -292,7 +330,8 @@ def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
             continue
         wire = max(1, int(n * st.wire_ratio))
         t = 0.0
-        for ci, c in enumerate(topo.clusters):
+        for ci in cis:
+            c = topo.clusters[ci]
             send, recv = c2c_volume(st.coll, wire, topo, ci)
             vol = max(send, recv) * st.vol_ratio
             t = max(t, alpha * k + vol / c.cross_Bps)
@@ -300,19 +339,107 @@ def estimate_schedule(topo: HetTopology, sched: schedule_ir.Schedule,
     return CollectiveEstimate(start, c2c, end, k, codec)
 
 
+def price_schedule_grid(topo: HetTopology,
+                        scheds: list[schedule_ir.Schedule],
+                        nbytes_per_rank: int,
+                        hetccl_alpha: float | None = None
+                        ) -> list[tuple[float, float]]:
+    """Batched pricing of a candidate grid of *non-flat* schedules —
+    the planner's vectorized hot path (DESIGN.md §14).  Returns, per
+    schedule, the same ``(full seconds, C2C leg seconds)`` pair that
+    ``planner._price_schedule`` computes one candidate at a time
+    through :func:`estimate_schedule`.
+
+    Two structural facts make the batch cheap without changing a single
+    float:
+
+      * **Symmetry folding** — every per-cluster quantity is aggregated
+        with ``max``, so only the *distinct* cluster fingerprints
+        (``HetTopology.fold_groups``) are evaluated: a homogeneous
+        100k-device multipod prices one representative pod.  ``max``
+        over representatives equals ``max`` over all clusters exactly
+        (identical specs produce identical floats), so this is
+        bit-identical to the scalar walk, not an approximation.
+
+      * **Chunk-axis sharing** — the chunk-pipelined family of a (mode,
+        codec) shares one unrolled step tuple (``ChunkLoop`` bodies are
+        chunk-count-independent), so its intra/codec phase times are
+        computed once and only the per-chunk α term and the
+        fill/bottleneck combination vary — evaluated for the whole
+        chunk vector in one numpy expression that replicates
+        ``CollectiveEstimate``'s operation order exactly (same IEEE
+        double ops in the same association), keeping the grid
+        bit-identical to the scalar oracle.
+
+    Flat schedules are priced per mechanism by the planner and must not
+    appear here (same contract as :func:`estimate_schedule`).
+    """
+    alpha = (hetccl_alpha if hetccl_alpha is not None
+             else max(c.alpha_hetccl_s for c in topo.clusters))
+    n = nbytes_per_rank
+    reps = [rep for rep, _ in topo.fold_groups()]
+    # group the grid by unrolled step tuple; members carry (index, k,
+    # pipelined) — everything that still differs inside a group
+    groups: dict[tuple, list[tuple[int, int, bool]]] = {}
+    for si, sched in enumerate(scheds):
+        steps, k = sched.unrolled()
+        groups.setdefault(steps, []).append((si, k, sched.pipelined))
+    out: list[tuple[float, float] | None] = [None] * len(scheds)
+    for steps, members in groups.items():
+        start = end = codec = 0.0
+        for ci in reps:
+            s = sum(_intra_step_time(st, topo, ci, n)
+                    for st in steps if st.phase == "start")
+            e = sum(_intra_step_time(st, topo, ci, n)
+                    for st in steps if st.phase == "end")
+            cd = sum(_intra_step_time(st, topo, ci, n)
+                     for st in steps
+                     if isinstance(st, (schedule_ir.Compress,
+                                        schedule_ir.Decompress)))
+            start = max(start, s)
+            end = max(end, e)
+            codec = max(codec, cd)
+        ks = np.array([float(k) for _, k, _ in members])
+        c2c = np.zeros(len(members))
+        for st in steps:
+            if isinstance(st, schedule_ir.Flat):
+                raise ValueError(
+                    "flat schedules are priced per mechanism — use "
+                    "planner._price_flat")
+            if not isinstance(st, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
+                                   schedule_ir.BorderExchange)):
+                continue
+            wire = max(1, int(n * st.wire_ratio))
+            drain = np.array([
+                max(*c2c_volume(st.coll, wire, topo, ci)) * st.vol_ratio
+                / topo.clusters[ci].cross_Bps for ci in reps])
+            # scalar loop: t = max(0, max_c(alpha·k + vol_c/bw_c))
+            c2c = c2c + np.maximum(
+                0.0, np.max(alpha * ks[:, None] + drain[None, :], axis=1))
+        # CollectiveEstimate.sequential_s / .pipelined_s, same op order
+        seq = ((start + codec) + c2c) + end
+        bott = np.maximum(max(start, codec, end), c2c)
+        pip = bott + np.maximum(0.0, seq / ks - bott / ks)
+        for (si, _, pipelined), s_t, p_t, c_t in zip(members, seq, pip, c2c):
+            out[si] = (float(p_t) if pipelined else float(s_t), float(c_t))
+    return out  # type: ignore[return-value]
+
+
 def estimate_hier_collective(topo: HetTopology, coll: str, nbytes_per_rank: int,
                              n_chunks: int = 1,
-                             hetccl_alpha: float | None = None) -> CollectiveEstimate:
+                             hetccl_alpha: float | None = None,
+                             fold: bool = False) -> CollectiveEstimate:
     """Price Algorithm 1 for collective ``coll`` with per-rank payload
     ``nbytes_per_rank`` bytes.  Thin wrapper: builds the hier schedule
     (chunk-pipelined when ``n_chunks`` > 1) from ``core.schedule`` and
     prices it step by step — the decomposition lives in one place.
     Returns a ``CollectiveEstimate`` (all phase times in seconds);
     ``hetccl_alpha`` defaults to the slowest cluster's host-proxy
-    control latency."""
+    control latency; ``fold`` as in :func:`estimate_schedule`."""
     mode = "hier_pipelined" if n_chunks > 1 else "hier"
     sched = schedule_ir.build_schedule(coll, mode, n_chunks)
-    return estimate_schedule(topo, sched, nbytes_per_rank, hetccl_alpha)
+    return estimate_schedule(topo, sched, nbytes_per_rank, hetccl_alpha,
+                             fold=fold)
 
 
 def pack_pass_time(topo: HetTopology, nbytes: float) -> float:

@@ -51,12 +51,14 @@ rank**, bandwidths in **bytes/second**, times in **seconds**.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Sequence
 
 from . import cost_model, transport_sim
 from . import schedule as schedule_ir
 from .collectives import CommConfig
+from .plan_cache import PlanCache
 from .topology import HetTopology
 
 # Wire-byte ratio of each DCN codec relative to the f32 payload — the
@@ -207,6 +209,12 @@ class CommPlan:
     # "per_leaf" and the launcher must run the unpacked tree sync.
     data_path: str = "packed"
     per_leaf_s: float | None = None   # predicted per-leaf alternative, s
+    # The *reason* behind ``validated``: which event-sim level
+    # cross-validated this plan — "device_sim" (per-border-rank event
+    # queues) or "cluster_sim" (the cluster-aggregated queues large
+    # topologies downgrade to, DESIGN.md §14).  Never "skipped":
+    # plan() always cross-validates, downgrading instead of disabling.
+    validated_via: str = "device_sim"
 
     @property
     def dp_axes(self) -> tuple[str, ...]:
@@ -288,6 +296,7 @@ class CommPlan:
             "overlap": (self.overlap.summary()
                         if self.overlap is not None else None),
             "validated": self.validated,
+            "validated_via": self.validated_via,
             "n_clusters": self.topology.n_clusters,
             "skew": (None if not self.compute_s else {
                 "microbatches": (list(self.skew.microbatches)
@@ -318,6 +327,8 @@ class CommPlan:
                 f"cluster(s){' (balanced subgroups)' if self.balanced else ''}"
                 f" — recommended mode: {self.recommended_mode()}, predicted "
                 f"{self.predicted_step_s * 1e3:.2f} ms/sync"
+                + ("" if self.validated_via == "device_sim"
+                   else f"  [{self.validated_via}]")
                 + ("" if self.validated else "  [NOT fully validated]"))
         cols = (f"{'bucket':>6}  {'MiB':>9}  {'mode':<15} {'chunks':>6}  "
                 f"{'codec':<5}  {'pred ms':>9}  {'pred c2c':>9}  "
@@ -429,8 +440,13 @@ def _price_flat(topo: HetTopology, coll: str, nbytes: int,
         return t, 0.0
     if mechanism == "native":
         alpha = max(c.alpha_native_s for c in topo.clusters)
-        c2c = cost_model.c2c_step_time(topo, coll, nbytes, alpha, 1)
-        est = cost_model.estimate_hier_collective(topo, coll, nbytes, 1)
+        # folded walks: exact for the root-free collectives priced here
+        # (cost_model._fold_cluster_indices), and the flat candidate is
+        # priced identically by the vectorized and scalar planner paths
+        c2c = cost_model.c2c_step_time(topo, coll, nbytes, alpha, 1,
+                                       fold=True)
+        est = cost_model.estimate_hier_collective(topo, coll, nbytes, 1,
+                                                  fold=True)
         return est.start_s + c2c + est.end_s, c2c
     full = cost_model.flat_host_forwarding_time(topo, coll, nbytes)
     # the host C2C leg alone (mirrors flat_host_forwarding_time's inner loop)
@@ -447,26 +463,66 @@ def _price_flat(topo: HetTopology, coll: str, nbytes: int,
 # Event-driven cross-validation
 # ---------------------------------------------------------------------------
 
+# Above this rank count plan(sim_level="auto") downgrades the
+# cross-validation from per-border-rank event queues to the
+# cluster-aggregated simulator: the device-level sim walks every border
+# pair (256 per pod pair on a TPU multipod), which is O(n_ranks) per
+# validated transfer and dominates plan() wall-clock past a few hundred
+# devices, while the cluster level is exact for the symmetric intra
+# phases (transport_sim.simulate_schedule docstring) and prices ≤2
+# distinct NIC shares per pair instead of all of them.
+_DEVICE_SIM_MAX_RANKS = 512
+
+
+def _resolve_sim_level(topo: HetTopology, sim_level: str) -> str:
+    """'auto' picks the per-device event sim up to
+    ``_DEVICE_SIM_MAX_RANKS`` total ranks and the cluster-aggregated sim
+    beyond; explicit 'device'/'cluster' are honored as given."""
+    if sim_level == "auto":
+        return "device" if topo.n_ranks <= _DEVICE_SIM_MAX_RANKS else "cluster"
+    if sim_level not in ("device", "cluster"):
+        raise ValueError(f"unknown sim_level: {sim_level!r}")
+    return sim_level
+
+
 def _simulate_c2c(topo: HetTopology, coll: str, wire_nbytes: int,
                   mechanism: str, chunk_bytes: int,
-                  _cache: dict | None = None) -> float:
+                  _cache: dict | None = None,
+                  level: str = "device") -> float:
     """Event-driven time of the synchronous C2C step: each cluster
     drains its Table-7 border volume to its ring successor through
     ``simulate_c2c_cpy``; the step ends when the slowest cluster does
-    (the same completion rule as ``cost_model.c2c_step_time``)."""
-    key = (id(topo), coll, wire_nbytes, mechanism)
+    (the same completion rule as ``cost_model.c2c_step_time``).
+
+    ``level='cluster'`` folds the ring walk over symmetry: two ring
+    edges whose (cluster, successor) fingerprints match are identical
+    exchanges (c2c_volume depends only on per-cluster NIC capacity, and
+    the pair simulation only on the two endpoint specs), so each
+    distinct fingerprint pair is simulated once and the per-pair
+    simulation itself dedups its identical NIC-share pipelines — exact,
+    not approximate, per DESIGN.md §14.  The memo key is the topology
+    *fingerprint* (not ``id()``), so fingerprint-equal topologies share
+    entries and recycled ids can never alias stale times."""
+    key = (topo.fingerprint(), coll, wire_nbytes, mechanism, level)
     if _cache is not None and key in _cache:
         return _cache[key]
     C = topo.n_clusters
+    folded = level == "cluster"
+    seen_pairs: set[tuple] = set()
     t = 0.0
     for ci, c in enumerate(topo.clusters):
+        nxt = topo.clusters[(ci + 1) % C]
+        if folded:
+            pair = (c.fingerprint(), nxt.fingerprint())
+            if pair in seen_pairs:
+                continue
+            seen_pairs.add(pair)
         send, recv = cost_model.c2c_volume(coll, wire_nbytes, topo, ci)
         vol = max(send, recv)
         if vol == 0:
             continue
-        nxt = topo.clusters[(ci + 1) % C]
         t = max(t, transport_sim.simulate_c2c_cpy(c, nxt, vol, mechanism,
-                                                  chunk_bytes))
+                                                  chunk_bytes, level=level))
     if _cache is not None:
         _cache[key] = t
     return t
@@ -495,7 +551,24 @@ def _candidate_schedules(coll: str, max_chunks: int,
     flat native baseline, the ``flat_a2a`` reference (one global
     exchange, priced through the same Table-7 volume path as the
     hierarchical schedule), and the §5 ``hier_a2a`` decomposition per
-    lossless/bf16 codec, chunk-pipelined."""
+    lossless/bf16 codec, chunk-pipelined.
+
+    The grid is deduplicated structurally before pricing: candidates
+    whose ``(coll, steps)`` tuples are equal price identically on every
+    topology (the step tuple is everything the interpreters see), so
+    only the first is kept — e.g. ``hier_pipelined`` at k=1 emits the
+    same steps as ``hier`` and is dropped, one per codec.  Keeping the
+    first occurrence matches the scalar oracle's stable tie-break.
+    Memoized: the grid depends only on ``(coll, max_chunks,
+    compressions)`` and is re-enumerated per bucket otherwise."""
+    return list(_candidate_schedules_cached(coll, int(max_chunks),
+                                            tuple(compressions)))
+
+
+@functools.lru_cache(maxsize=128)
+def _candidate_schedules_cached(
+        coll: str, max_chunks: int,
+        compressions: tuple) -> tuple[schedule_ir.Schedule, ...]:
     if coll == "all_to_all":
         out = [schedule_ir.build_schedule(coll, "flat"),
                schedule_ir.build_schedule(coll, "flat_a2a")]
@@ -505,7 +578,7 @@ def _candidate_schedules(coll: str, max_chunks: int,
             for k in _chunk_candidates(max_chunks):
                 out.append(schedule_ir.build_schedule(coll, "hier_a2a",
                                                       k, comp))
-        return out
+        return _dedup_structural(out)
     out = [schedule_ir.build_schedule(coll, "flat")]
     for comp in compressions:
         out.append(schedule_ir.build_schedule(coll, "hier", 1, comp))
@@ -515,7 +588,21 @@ def _candidate_schedules(coll: str, max_chunks: int,
         for k in _chunk_candidates(max_chunks):
             out.append(schedule_ir.build_schedule(coll, "hier_pipelined",
                                                   k, comp))
-    return out
+    return _dedup_structural(out)
+
+
+def _dedup_structural(
+        scheds: list[schedule_ir.Schedule]
+) -> tuple[schedule_ir.Schedule, ...]:
+    seen: set[tuple] = set()
+    out = []
+    for s in scheds:
+        key = (s.coll, s.steps)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(s)
+    return tuple(out)
 
 
 _COMP_RANK = {None: 0, "bf16": 1, "int8": 2}   # wire-codec aggressiveness
@@ -539,25 +626,64 @@ def _model_leg(topo: HetTopology, coll: str, mech: str, wire: int) -> float:
         return _price_flat(topo, coll, wire, "host")[1]
     alpha = (max(c.alpha_native_s for c in topo.clusters)
              if mech == "native" else _hetccl_alpha(topo))
-    return cost_model.c2c_step_time(topo, coll, wire, alpha, 1)
+    return cost_model.c2c_step_time(topo, coll, wire, alpha, 1, fold=True)
 
 
 def _price_candidates(topo: HetTopology, coll: str, nbytes: int,
                       max_chunks: int, compressions,
                       flat_mechanism: str,
-                      packed: bool = False) -> list[tuple[float, Candidate]]:
-    priced: list[tuple[float, Candidate]] = []
-    for sched in _candidate_schedules(coll, max_chunks, compressions):
-        t, _ = _price_schedule(topo, sched, nbytes, flat_mechanism,
-                               packed=packed)
-        priced.append((t, Candidate.of(sched)))
-    return priced
+                      packed: bool = False,
+                      vectorized: bool = True) -> list[tuple[float, Candidate]]:
+    """Price the full candidate grid for one bucket.
+
+    ``vectorized=True`` (default) routes every non-flat candidate
+    through ``cost_model.price_schedule_grid`` — one batched numpy
+    evaluation over the (mode × chunks × codec) grid with symmetry
+    folding over ``topo.fold_groups()`` — instead of one
+    ``estimate_schedule`` Python loop per candidate.  The grid path
+    replicates the scalar path's IEEE operation order exactly, so the
+    two modes return bit-identical prices (differentially tested in
+    tests/test_planner.py); ``vectorized=False`` is kept as the oracle.
+    Flat candidates (1–2 per grid) are priced scalar in both modes —
+    their mechanism-specific pricing is O(n_clusters) and does not
+    belong in the α–β grid."""
+    scheds = _candidate_schedules(coll, max_chunks, compressions)
+    if not vectorized:
+        priced: list[tuple[float, Candidate]] = []
+        for sched in scheds:
+            t, _ = _price_schedule(topo, sched, nbytes, flat_mechanism,
+                                   packed=packed)
+            priced.append((t, Candidate.of(sched)))
+        return priced
+    out: list[tuple[float, Candidate] | None] = [None] * len(scheds)
+    grid_idx: list[int] = []
+    grid_scheds: list[schedule_ir.Schedule] = []
+    pack_extra = (cost_model.packed_overhead_time(topo, nbytes)
+                  if packed else 0.0)
+    for i, sched in enumerate(scheds):
+        if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
+            t, _ = _price_flat(topo, sched.coll, nbytes, flat_mechanism)
+            out[i] = (t + pack_extra, Candidate.of(sched))
+        else:
+            grid_idx.append(i)
+            grid_scheds.append(schedule_ir.with_packing(sched) if packed
+                               else sched)
+    if grid_scheds:
+        grid = cost_model.price_schedule_grid(topo, grid_scheds, nbytes)
+        for i, sched, (t, _c2c) in zip(grid_idx,
+                                       (scheds[j] for j in grid_idx), grid):
+            # Candidate.of the ORIGINAL schedule — with_packing preserves
+            # (mode, n_chunks, compression) but the original is what the
+            # scalar path hands to Candidate.of too
+            out[i] = (t, Candidate.of(sched))
+    return [p for p in out if p is not None]
 
 
 def _first_validated(topo: HetTopology, coll: str, nbytes: int,
                      ranked: list[tuple[float, Candidate]], tol: float,
                      flat_mechanism: str, chunk_bytes: int,
-                     _sim_cache: dict | None) -> BucketPlan:
+                     _sim_cache: dict | None,
+                     sim_level: str = "device") -> BucketPlan:
     """Walk candidates in rank order, cross-validating each against the
     event simulator; the first within ``tol`` wins.  If none agrees
     (e.g. an α-dominated tiny bucket), the least-divergent candidate is
@@ -567,7 +693,8 @@ def _first_validated(topo: HetTopology, coll: str, nbytes: int,
     for t, cand in ranked:
         mech, wire = _transfer_leg(cand, nbytes, flat_mechanism)
         c2c = _model_leg(topo, coll, mech, wire)
-        sim = _simulate_c2c(topo, coll, wire, mech, chunk_bytes, _sim_cache)
+        sim = _simulate_c2c(topo, coll, wire, mech, chunk_bytes, _sim_cache,
+                            level=sim_level)
         bp = BucketPlan(nbytes, cand, t, c2c, sim,
                         validated=(sim <= 0.0
                                    or abs(c2c - sim) / sim <= tol))
@@ -586,14 +713,18 @@ def plan_bucket(topo: HetTopology, coll: str, nbytes: int, *,
                 flat_mechanism: str = "host",
                 chunk_bytes: int = 4 << 20,
                 packed: bool = False,
+                vectorized: bool = True,
+                sim_level: str = "auto",
                 _sim_cache: dict | None = None) -> BucketPlan:
     """Choose the best validated schedule for one bucket on one topology
     (sequential objective: minimize the bucket's own sync time)."""
+    level = _resolve_sim_level(topo, sim_level)
     priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
-                               flat_mechanism, packed=packed)
+                               flat_mechanism, packed=packed,
+                               vectorized=vectorized)
     priced.sort(key=lambda x: x[0])
     return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
-                            chunk_bytes, _sim_cache)
+                            chunk_bytes, _sim_cache, sim_level=level)
 
 
 def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
@@ -604,6 +735,8 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
                         flat_mechanism: str = "host",
                         chunk_bytes: int = 4 << 20,
                         packed: bool = False,
+                        vectorized: bool = True,
+                        sim_level: str = "auto",
                         _sim_cache: dict | None = None) -> BucketPlan:
     """Choose the schedule minimizing the bucket's *exposed* time.
 
@@ -614,6 +747,7 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
     codec buys nothing when the comm is already free) and then the
     shortest occupancy, which frees the channel for later buckets.
     """
+    level = _resolve_sim_level(topo, sim_level)
     start = max(ready_s, free_s)
     prev_exposed = max(0.0, free_s - backward_s)
 
@@ -623,10 +757,11 @@ def plan_bucket_overlap(topo: HetTopology, coll: str, nbytes: int, *,
         return (inc, _COMP_RANK[cand.compression], t)
 
     priced = _price_candidates(topo, coll, nbytes, max_chunks, compressions,
-                               flat_mechanism, packed=packed)
+                               flat_mechanism, packed=packed,
+                               vectorized=vectorized)
     priced.sort(key=key)
     return _first_validated(topo, coll, nbytes, priced, tol, flat_mechanism,
-                            chunk_bytes, _sim_cache)
+                            chunk_bytes, _sim_cache, sim_level=level)
 
 
 # The margin the modeled per-message α saving must clear over the
@@ -664,6 +799,48 @@ def _per_leaf_time(topo: HetTopology, coll: str, sizes: Sequence[int],
     return t
 
 
+# Default process-wide plan memo (plan(cache="default")).  Launchers
+# needing persistence across processes (hillclimb's dryrun subprocesses)
+# construct their own PlanCache(path=...) and pass it explicitly;
+# cache=None disables memoization (benchmarks measuring cold planning).
+_PLAN_CACHE = PlanCache()
+
+
+def default_plan_cache() -> PlanCache:
+    """The process-wide cache behind ``plan(cache='default')``."""
+    return _PLAN_CACHE
+
+
+def invalidate_plan_cache(fingerprint: Any | None = None) -> int:
+    """Drop memoized plans — all of them, or only the given topology
+    fingerprint's (the elastic-replanning hook: when a pod departs, the
+    departed topology's plans are garbage but every other line is still
+    valid).  Returns the number of entries dropped."""
+    return _PLAN_CACHE.invalidate(fingerprint)
+
+
+def _plan_key(topo: HetTopology, sizes, coll, pod_axis, intra_axis,
+              max_chunks, compressions, tol, flat_mechanism, try_balanced,
+              chunk_bytes, backward_compute_s, packed, n_leaves,
+              vectorized, level) -> tuple:
+    """Cache key: topology fingerprint + grad layout + every knob that
+    changes the candidate search.  Skew fields (``skew`` /
+    ``skew_compute_s``) are deliberately EXCLUDED: the split shifts every
+    candidate's straggler score by the same per-topology constant
+    ``max(compute_s)``, so it never changes which candidate (or which of
+    as-given vs balanced) wins — the planner strips them from the stored
+    plan and re-attaches the caller's values on hit, which is what lets
+    ``skew.optimize``'s per-split re-plans collapse onto one cache line.
+    ``backward_compute_s`` stays IN the key: it genuinely reshapes the
+    overlap timeline and the chosen schedules."""
+    return (topo.fingerprint(), tuple(sizes), coll, pod_axis, intra_axis,
+            int(max_chunks), tuple(compressions), float(tol),
+            flat_mechanism, bool(try_balanced), int(chunk_bytes),
+            (None if backward_compute_s is None else float(backward_compute_s)),
+            bool(packed), (None if n_leaves is None else int(n_leaves)),
+            bool(vectorized), level)
+
+
 def plan(topo: HetTopology, bucket_sizes, *,
          coll: str = "all_reduce",
          pod_axis: str | None = "pod", intra_axis: str = "data",
@@ -678,6 +855,9 @@ def plan(topo: HetTopology, bucket_sizes, *,
          skew_compute_s: Sequence[float] | None = None,
          packed: bool = False,
          n_leaves: int | None = None,
+         vectorized: bool = True,
+         sim_level: str = "auto",
+         cache: Any = "default",
          _sim_cache: dict | None = None) -> CommPlan:
     """Plan the communication schedule for a list of gradient buckets.
 
@@ -736,6 +916,25 @@ def plan(topo: HetTopology, bucket_sizes, *,
         exposed comm term (DESIGN.md §10) — and the plan carries the
         split's per-pod gradient weights so every ``config_for`` result
         executes the weighted reduction.
+      vectorized: price candidate grids through the batched numpy
+        evaluator (``cost_model.price_schedule_grid``); False falls back
+        to the per-candidate scalar loop.  Bit-identical results either
+        way (DESIGN.md §14) — the flag exists for differential testing
+        and benchmarking, not for accuracy trade-offs.
+      sim_level: which event simulator cross-validates the winning
+        candidates — 'device' (per-border-rank queues), 'cluster' (the
+        aggregated queues; exact for symmetric intra phases), or 'auto'
+        (device up to ``_DEVICE_SIM_MAX_RANKS`` total ranks, cluster
+        beyond).  Validation is never skipped: large topologies
+        downgrade to the cluster sim instead, and the plan records
+        which level ran in ``validated_via``.
+      cache: 'default' memoizes through the process-wide ``PlanCache``,
+        an explicit ``PlanCache`` uses that instance (hillclimb passes a
+        disk-backed one so its subprocesses share plans), None disables.
+        Cached plans are stored skew-stripped and the caller's skew
+        fields re-attached on hit (see ``_plan_key``); a hit planned on
+        a fingerprint-equal topology returns that plan's (price-
+        identical) topology object.
       _sim_cache: event-simulator memo shared across calls — launchers
         that plan twice (overlap buckets, then a monolithic fallback)
         pass one dict so identical C2C transfers are simulated once.
@@ -746,19 +945,34 @@ def plan(topo: HetTopology, bucket_sizes, *,
     sizes = [int(s) for s in bucket_sizes]
     if not sizes:
         raise ValueError("bucket_sizes must be non-empty")
-    topologies = [(topo, False)]
-    if try_balanced:
-        bal = topo.balanced_subgroups()
-        if bal.n_clusters != topo.n_clusters:
-            topologies.append((bal, True))
-
-    kw = dict(max_chunks=max_chunks, compressions=compressions, tol=tol,
-              flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes,
-              packed=packed)
+    level = _resolve_sim_level(topo, sim_level)
     skew_fields = dict(
         skew=skew,
         compute_s=tuple(float(x) for x in (skew_compute_s or ())),
         cluster_weights=(tuple(skew.weights) if skew is not None else None))
+    use_cache: PlanCache | None = (_PLAN_CACHE if cache == "default"
+                                   else cache)
+    key = None
+    if use_cache is not None:
+        key = _plan_key(topo, sizes, coll, pod_axis, intra_axis, max_chunks,
+                        compressions, tol, flat_mechanism, try_balanced,
+                        chunk_bytes, backward_compute_s, packed, n_leaves,
+                        vectorized, level)
+        hit = use_cache.get(key)
+        if hit is not None:
+            return dataclasses.replace(hit, **skew_fields)
+    topologies = [(topo, False)]
+    if try_balanced:
+        bal = topo.balanced_subgroups()
+        # fingerprint comparison, not cluster count: a re-grouping that
+        # lands on a fingerprint-equal topology prices identically and
+        # would only double the search
+        if bal.fingerprint() != topo.fingerprint():
+            topologies.append((bal, True))
+
+    kw = dict(max_chunks=max_chunks, compressions=compressions, tol=tol,
+              flat_mechanism=flat_mechanism, chunk_bytes=chunk_bytes,
+              packed=packed, vectorized=vectorized, sim_level=level)
     best: CommPlan | None = None
     best_score: tuple | None = None
     sim_cache: dict = {} if _sim_cache is None else _sim_cache
@@ -769,7 +983,8 @@ def plan(topo: HetTopology, bucket_sizes, *,
                 plan_bucket(t, coll, n, _sim_cache=sim_cache, **kw)
                 for n in sizes)
             cand = CommPlan(t, balanced, coll, pod_axis, intra_axis, buckets,
-                            bucket_order=order, **skew_fields)
+                            bucket_order=order, validated_via=level + "_sim",
+                            **skew_fields)
             # prefer fully validated plans; break ties on the straggler
             # objective (== predicted time when no skew compute is given)
             score = (cand.validated, -cand.predicted_straggler_s,
@@ -821,7 +1036,8 @@ def plan(topo: HetTopology, bucket_sizes, *,
                 monolithic_comm_s=mono.predicted_s)
             cand = CommPlan(t, balanced, coll, pod_axis, intra_axis,
                             tuple(buckets_l), bucket_order=order,
-                            overlap=report, **skew_fields)
+                            overlap=report, validated_via=level + "_sim",
+                            **skew_fields)
             # the straggler objective (= exposed time + any per-cluster
             # compute) drives the choice; total time breaks ties
             score = (cand.validated, -cand.predicted_straggler_s,
@@ -854,6 +1070,12 @@ def plan(topo: HetTopology, bucket_sizes, *,
             data_path=("packed"
                        if alpha_saving >= pack_overhead * PACKED_WIN_MARGIN
                        else "per_leaf"))
+    if use_cache is not None and key is not None:
+        # stored skew-stripped: the split never changes the choice (see
+        # _plan_key), so one line serves every SkewSplit the optimizer
+        # prices on this topology/knob combination
+        use_cache.put(key, dataclasses.replace(
+            best, skew=None, compute_s=(), cluster_weights=None))
     return best
 
 

@@ -17,6 +17,7 @@ the role of the cross-cluster RDMA channels.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Sequence
 
@@ -70,14 +71,12 @@ class Cluster:
     def border_ranks(self) -> tuple[int, ...]:
         """Local indices of border ranks: one rank per NIC, chosen as the
         ranks with minimum NUMA distance (here: round-robin over the
-        node's devices, matching one-NIC-per-NUMA-domain placement)."""
-        out = []
-        for node in range(self.n_nodes):
-            base = node * self.devs_per_node
-            stride = max(1, self.devs_per_node // max(1, self.nics_per_node))
-            for nic in range(min(self.nics_per_node, self.devs_per_node)):
-                out.append(base + nic * stride)
-        return tuple(out)
+        node's devices, matching one-NIC-per-NUMA-domain placement).
+        Memoized on the (n_nodes, devs_per_node, nics_per_node) triple —
+        at 100k devices this tuple is consulted per simulated transfer
+        and rebuilding it per access dominated the event sim."""
+        return _border_ranks(self.n_nodes, self.devs_per_node,
+                             self.nics_per_node)
 
     @property
     def n_border(self) -> int:
@@ -87,6 +86,31 @@ class Cluster:
     def cross_Bps(self) -> float:
         """Total cross-cluster bandwidth (all NICs)."""
         return self.n_nodes * self.nics_per_node * self.nic_Bps
+
+    def fingerprint(self) -> tuple:
+        """Canonical pricing identity of this cluster: every field the
+        cost model, the event simulator, and the planner read —
+        excluding the display ``name``, so renaming a pod never changes
+        its prices.  Two clusters with equal fingerprints are
+        indistinguishable to every interpreter, which is what lets the
+        planner fold k identical pods into one representative."""
+        return (self.n_nodes, self.devs_per_node, self.nics_per_node,
+                self.nic_Bps, self.intra_Bps, self.tflops, self.d2d_Bps,
+                self.h2d_Bps, self.h2d_pageable_Bps, self.tcp_wire_eff,
+                self.alpha_native_s, self.alpha_hetccl_s,
+                self.alpha_host_s)
+
+
+@functools.lru_cache(maxsize=4096)
+def _border_ranks(n_nodes: int, devs_per_node: int,
+                  nics_per_node: int) -> tuple[int, ...]:
+    out = []
+    for node in range(n_nodes):
+        base = node * devs_per_node
+        stride = max(1, devs_per_node // max(1, nics_per_node))
+        for nic in range(min(nics_per_node, devs_per_node)):
+            out.append(base + nic * stride)
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,8 +123,11 @@ class HetTopology:
     def n_clusters(self) -> int:
         return len(self.clusters)
 
-    @property
+    @functools.cached_property
     def n_ranks(self) -> int:
+        # cached: c2c_volume reads this per cluster per pricing call, and
+        # recomputing the O(n_clusters) sum there turns every closed-form
+        # evaluation into O(n_clusters^2) at 100k devices
         return sum(c.n_ranks for c in self.clusters)
 
     def cluster_of_rank(self, rank: int) -> tuple[int, int]:
@@ -122,6 +149,28 @@ class HetTopology:
         total NIC bandwidth among clusters (paper §4.4)."""
         return min(c.cross_Bps for c in self.clusters)
 
+    def fingerprint(self) -> tuple:
+        """Canonical topology fingerprint: the *sorted multiset* of the
+        per-cluster fingerprints.  Cluster order and cluster names do
+        not appear — permuting or renaming clusters yields an equal
+        fingerprint.  That canonicalization is sound because the C2C
+        capability matrix is fully determined by the per-cluster NIC
+        specs (the cluster ring's pairwise wire bandwidth is
+        ``min(src.nic_Bps, dst.nic_Bps)`` and every closed-form C2C
+        term is a max over per-cluster drains), so topologies equal
+        under permutation price identically.  This is the key the
+        planner's ``PlanCache`` and symmetry folding are built on."""
+        return _topo_fingerprint(self)
+
+    def fold_groups(self) -> tuple[tuple[int, int], ...]:
+        """Symmetry folding: ``(representative cluster index, count)``
+        per *distinct* cluster fingerprint, in first-occurrence order.
+        Pricing k identical pods computes the representative once — the
+        closed forms aggregate clusters with ``max``, so multiplicity
+        never changes the result (exactness argument in DESIGN.md §14).
+        A homogeneous 100k-device multipod folds to a single group."""
+        return _topo_fold_groups(self)
+
     def balanced_subgroups(self, tol: float = 0.34) -> "HetTopology":
         """§4.4: divide larger vendor groups into subgroups with roughly
         equal total cross-cluster bandwidth, so no cluster idles while
@@ -142,6 +191,26 @@ class HetTopology:
         return HetTopology(tuple(new))
 
 
+@functools.lru_cache(maxsize=1024)
+def _topo_fingerprint(topo: "HetTopology") -> tuple:
+    return tuple(sorted(c.fingerprint() for c in topo.clusters))
+
+
+@functools.lru_cache(maxsize=1024)
+def _topo_fold_groups(topo: "HetTopology") -> tuple[tuple[int, int], ...]:
+    index: dict[tuple, int] = {}
+    groups: list[list[int]] = []
+    for i, c in enumerate(topo.clusters):
+        fp = c.fingerprint()
+        gi = index.get(fp)
+        if gi is None:
+            index[fp] = len(groups)
+            groups.append([i, 1])
+        else:
+            groups[gi][1] += 1
+    return tuple((rep, count) for rep, count in groups)
+
+
 def proportional_split(total_bytes: int, bandwidths: Sequence[float],
                        granularity: int = 1) -> list[int]:
     """Divide a C2C transfer across border ranks proportionally to their
@@ -151,7 +220,26 @@ def proportional_split(total_bytes: int, bandwidths: Sequence[float],
 
     Raises ``ValueError`` when every link has zero bandwidth and there
     are bytes to place (there is no proportion to split by); zero bytes
-    short-circuit to an all-zero split whatever the bandwidths."""
+    short-circuit to an all-zero split whatever the bandwidths.
+
+    Memoized on ``(total_bytes, tuple(bandwidths), granularity)``: the
+    C2C simulator calls this per transfer with the same NIC vector at
+    every cluster of a large topology, and the result is deterministic.
+    ``_proportional_split_impl`` is the uncached computation the
+    memoized path is regression-tested bit-identical against."""
+    return list(_proportional_split_cached(
+        int(total_bytes), tuple(bandwidths), int(granularity)))
+
+
+@functools.lru_cache(maxsize=8192)
+def _proportional_split_cached(total_bytes: int, bandwidths: tuple,
+                               granularity: int) -> tuple[int, ...]:
+    return tuple(_proportional_split_impl(total_bytes, bandwidths,
+                                          granularity))
+
+
+def _proportional_split_impl(total_bytes: int, bandwidths: Sequence[float],
+                             granularity: int = 1) -> list[int]:
     assert total_bytes >= 0 and len(bandwidths) > 0
     if total_bytes == 0:
         return [0] * len(bandwidths)
@@ -185,7 +273,23 @@ def integer_split(total: int, weights: Sequence[float],
     less) and ``sum(result) == total``.
 
     Raises ``ValueError`` when ``total`` cannot cover the floors or all
-    weights are zero."""
+    weights are zero.
+
+    Memoized on ``(total, tuple(weights), floor)`` exactly like
+    :func:`proportional_split` (same per-bucket repeat pattern at large
+    cluster counts); ``_integer_split_impl`` is the uncached oracle."""
+    return list(_integer_split_cached(int(total), tuple(weights),
+                                      int(floor)))
+
+
+@functools.lru_cache(maxsize=8192)
+def _integer_split_cached(total: int, weights: tuple,
+                          floor: int) -> tuple[int, ...]:
+    return tuple(_integer_split_impl(total, weights, floor))
+
+
+def _integer_split_impl(total: int, weights: Sequence[float],
+                        floor: int = 0) -> list[int]:
     k = len(weights)
     assert k > 0 and total >= 0
     if total < floor * k:

@@ -112,11 +112,23 @@ def simulate_p2p(src: Cluster, dst: Cluster, nbytes: int, mechanism: str,
 
 def simulate_c2c_cpy(src: Cluster, dst: Cluster, total_bytes: int,
                      mechanism: str = "hetccl", chunk_bytes: int = 4 << 20,
-                     nics_in_use: int | None = None) -> float:
+                     nics_in_use: int | None = None,
+                     level: str = "device") -> float:
     """c2cCpy (paper Fig. 7): the cluster-to-cluster volume is divided
     proportionally to NIC bandwidth over the destination border ranks;
     each (src border, dst border) pair runs an independent chunk
-    pipeline; the primitive completes when the slowest pair drains."""
+    pipeline; the primitive completes when the slowest pair drains.
+
+    ``level="cluster"`` is the cluster-aggregated queue model
+    (DESIGN.md §14): the border pairs of one cluster pair are
+    independent event pipelines over the same (src, dst) rates, so the
+    completion time depends only on a pair's byte share — the aggregate
+    model simulates one pipeline per *distinct* share instead of one
+    per border rank.  For the symmetric intra phases we emit the shares
+    take at most two distinct values (a granularity boundary), so this
+    is exact, not approximate: max over distinct shares == max over all
+    pairs.  A 256-chip all-border TPU pod drops from 256 event loops to
+    at most 2."""
     n_src = src.n_border if nics_in_use is None else min(nics_in_use * src.n_nodes, src.n_border)
     n_dst = dst.n_border if nics_in_use is None else min(nics_in_use * dst.n_nodes, dst.n_border)
     pairs = min(n_src, n_dst)
@@ -124,8 +136,9 @@ def simulate_c2c_cpy(src: Cluster, dst: Cluster, total_bytes: int,
         return float("inf")
     bws = [min(src.nic_Bps, dst.nic_Bps)] * pairs
     split = proportional_split(total_bytes, bws, granularity=256)
+    parts = sorted(set(split), reverse=True) if level == "cluster" else split
     t = 0.0
-    for part in split:
+    for part in parts:
         if part == 0:
             continue
         tr = simulate_p2p(src, dst, part, mechanism, chunk_bytes)
@@ -134,20 +147,29 @@ def simulate_c2c_cpy(src: Cluster, dst: Cluster, total_bytes: int,
 
 
 def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
-                   mechanism: str, chunk_bytes: int) -> float:
+                   mechanism: str, chunk_bytes: int,
+                   level: str = "device") -> float:
     """Duration of one schedule step for a (chunk of) per-rank payload
     ``nbytes``: intra steps use the closed-form ring times (the intra
     fabric is not what this simulator models); C2C steps drain each
     cluster's Table-7 volume to its ring successor through the
-    event-driven chunk pipeline (``simulate_c2c_cpy``)."""
+    event-driven chunk pipeline (``simulate_c2c_cpy``).
+
+    ``level="cluster"`` folds both loops by cluster fingerprint: intra
+    maxima over the distinct representatives (identical clusters yield
+    identical floats, so the max is unchanged) and one simulated
+    transfer per distinct (src, dst) cluster-fingerprint pair."""
     from . import cost_model  # local: keeps the module importable alone
+    folded = level == "cluster"
     if isinstance(step, (schedule_ir.IntraReduceScatter,
                          schedule_ir.IntraAllGather, schedule_ir.IntraBcast,
                          schedule_ir.IntraAll2All, schedule_ir.BorderGather,
                          schedule_ir.Pack, schedule_ir.Unpack,
                          schedule_ir.Compress, schedule_ir.Decompress)):
+        cis = ([rep for rep, _ in topo.fold_groups()] if folded
+               else range(topo.n_clusters))
         return max(cost_model._intra_step_time(step, topo, ci, nbytes)
-                   for ci in range(topo.n_clusters))
+                   for ci in cis)
     if isinstance(step, (schedule_ir.C2CRed, schedule_ir.C2CCpy,
                          schedule_ir.BorderExchange, schedule_ir.Flat)):
         mech = "host" if isinstance(step, schedule_ir.Flat) else mechanism
@@ -156,20 +178,28 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
         wire = max(1, int(nbytes * wire_ratio))
         C = topo.n_clusters
         t = 0.0
+        seen: set[tuple] = set()
         for ci, c in enumerate(topo.clusters):
+            nxt = topo.clusters[(ci + 1) % C]
+            if folded:
+                pair = (c.fingerprint(), nxt.fingerprint())
+                if pair in seen:
+                    continue
+                seen.add(pair)
             send, recv = cost_model.c2c_volume(step.coll, wire, topo, ci)
             vol = int(max(send, recv) * vol_ratio)
             if vol == 0:
                 continue
-            nxt = topo.clusters[(ci + 1) % C]
-            t = max(t, simulate_c2c_cpy(c, nxt, vol, mech, chunk_bytes))
+            t = max(t, simulate_c2c_cpy(c, nxt, vol, mech, chunk_bytes,
+                                        level=level))
         return t
     return 0.0  # Scale: nb-sized multiply folded into the codec, free
 
 
 def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
                       nbytes_per_rank: int, mechanism: str = "hetccl",
-                      chunk_bytes: int = 4 << 20) -> float:
+                      chunk_bytes: int = 4 << 20,
+                      level: str = "device") -> float:
     """Simulation interpreter of the schedule IR (DESIGN.md §9): walk
     the same steps the executor runs and the cost model prices through
     the event queue.  Each step is a pipeline stage with a resource
@@ -177,7 +207,17 @@ def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
     steady state drains at the bottleneck stage exactly as the paper's
     Fig. 9 pipeline does — but with the per-chunk WR-posting and
     buffer-pool effects the α–β closed form cannot see.  Returns
-    seconds."""
+    seconds.
+
+    ``level`` selects the event-queue granularity (DESIGN.md §14):
+    ``"device"`` walks every border-rank pair and every cluster;
+    ``"cluster"`` models per-cluster aggregate queues, folding
+    fingerprint-identical clusters and border pairs.  Because the
+    per-device queues this simulator builds are independent and
+    identical within a fold group, the cluster level is *exact* for
+    every schedule we emit (asserted against the device level in
+    tests), while scaling with the number of distinct cluster specs
+    instead of the device count."""
     steps, k = sched.unrolled()
     k = max(1, min(k, nbytes_per_rank))   # never more chunks than bytes
     per = max(1, nbytes_per_rank // k)
@@ -192,9 +232,11 @@ def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
                 # the chunk loop — charge the full payload on the first
                 # chunk only (mirrors the pricer's single pass)
                 dur = (0.0 if chunk else _sim_step_time(
-                    step, topo, nbytes_per_rank, mechanism, chunk_bytes))
+                    step, topo, nbytes_per_rank, mechanism, chunk_bytes,
+                    level))
             else:
-                dur = _sim_step_time(step, topo, n_c, mechanism, chunk_bytes)
+                dur = _sim_step_time(step, topo, n_c, mechanism,
+                                     chunk_bytes, level)
             start = max(t, stage_free[si])
             t = start + dur
             stage_free[si] = t

@@ -80,10 +80,18 @@ def moe_a2a_bytes(cfg: ModelConfig, shape: ShapeConfig | None,
 def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
               allow_int8: bool = False, shape_name: str | None = None,
               skew: str = "none", packed: bool = True,
-              border_scarce: bool = False):
+              border_scarce: bool = False,
+              plan_cache_path: str | None = None):
     """--plan auto: run the cost-model planner for this cell's
     production topology and gradient volume; returns
-    (CommPlan, chosen Candidate, a2a CommPlan | None).
+    (CommPlan, chosen Candidate, a2a CommPlan | None, cache stats dict).
+
+    Planning goes through a ``core.plan_cache.PlanCache``: the
+    process-wide default, or — with ``plan_cache_path`` — a disk-backed
+    one, which is what lets hillclimb's dryrun *subprocesses* share
+    plans across iterations (same topology fingerprint + knobs → one
+    cached search).  The returned stats dict (hits/misses/entries)
+    lands in the result JSON for the hillclimb report to aggregate.
 
     The ZeRO-1 gradient sync rides reduce_scatter (no end AllGather in
     the synced step), so its plan is priced on that collective.  Lossy
@@ -130,7 +138,10 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
             topology.tpu_multipod(n_pods, chips_per_pod))
     cfg = get_config(arch)
     grad_bytes = max(1, cfg.param_count() * 4 // tp_size)
+    pc = (planner.PlanCache(path=plan_cache_path) if plan_cache_path
+          else planner.default_plan_cache())
     plan_kw = dict(
+        cache=pc,
         coll="reduce_scatter" if comm_mode == "hier_zero1" else "all_reduce",
         pod_axis="pod" if multi_pod else None, intra_axis="data",
         compressions=(None, "bf16", "int8") if allow_int8 else (None, "bf16"),
@@ -190,8 +201,8 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
             coll="all_to_all",
             pod_axis="pod" if multi_pod else None, intra_axis="data",
             compressions=(None, "bf16"), flat_mechanism="native",
-            try_balanced=False, _sim_cache=sim_cache)
-    return plan, big.candidate, a2a_plan
+            try_balanced=False, cache=pc, _sim_cache=sim_cache)
+    return plan, big.candidate, a2a_plan, pc.stats()
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
@@ -373,6 +384,12 @@ def main():
                          "multipod topology (one scale-up domain per "
                          "pod, few DCN uplinks) instead of the "
                          "every-chip-a-border-rank default")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="disk-backed plan cache shared across dryrun "
+                         "processes (hillclimb passes one file so "
+                         "repeated --plan auto invocations hit instead "
+                         "of re-searching); stats land in the result "
+                         "JSON under 'plan_cache'")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -381,15 +398,19 @@ def main():
     mode, chunks, comp, plan = (args.mode or "fsdp", args.chunks,
                                 args.compression, None)
     moe_a2a_mode = "flat"
+    cache_stats = None
     try:
         if args.plan == "auto":
-            plan, chosen, a2a_plan = auto_plan(
+            plan, chosen, a2a_plan, cache_stats = auto_plan(
                 args.arch, multi_pod=args.mesh == "multi",
                 comm_mode=args.mode or "hier",
                 allow_int8=args.compression == "int8",
                 shape_name=args.shape, skew=args.skew,
                 packed=not args.no_packed,
-                border_scarce=args.border_scarce)
+                border_scarce=args.border_scarce,
+                plan_cache_path=args.plan_cache)
+            print(f"[plan] cache: {cache_stats['hits']} hit(s), "
+                  f"{cache_stats['misses']} miss(es)", flush=True)
             if a2a_plan is not None:
                 moe_a2a_mode = a2a_plan.recommended_mode()
                 print(f"[plan] MoE dispatch/combine All2All -> "
@@ -431,6 +452,8 @@ def main():
                          remat_policy=args.remat_policy, plan=plan,
                          packed=use_packed,
                          moe_a2a_mode=moe_a2a_mode)
+        if cache_stats is not None:
+            res["plan_cache"] = cache_stats
     except Exception as e:  # noqa: BLE001
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "comm_mode": mode, "status": "error",

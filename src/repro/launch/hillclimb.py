@@ -73,25 +73,41 @@ CELLS = {
 def main():
     out_dir = pathlib.Path("results/perf")
     out_dir.mkdir(parents=True, exist_ok=True)
+    # one disk-backed plan cache for every --plan auto iteration: the
+    # dryrun subprocesses share topology + planner knobs, so all but the
+    # first hit instead of re-searching (core/plan_cache.py)
+    plan_cache = out_dir / "plan_cache.pkl"
+    cache_hits = cache_misses = 0
     for (arch, shape, mesh), iters in CELLS.items():
         for tag, extra in iters:
             out = out_dir / f"{arch}__{shape}__{mesh}__{tag}.json"
             if out.exists() and json.loads(out.read_text()).get("status") == "ok":
                 print(f"skip {out.name}")
                 continue
+            if "--plan" in extra:
+                extra = [*extra, "--plan-cache", str(plan_cache)]
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape, "--mesh", mesh,
                    "--out", str(out), *extra]
             t0 = time.time()
             proc = subprocess.run(cmd, capture_output=True, text=True,
                                   timeout=2400)
-            st = "?"
+            st, pcs = "?", None
             if out.exists():
-                st = json.loads(out.read_text()).get("status")
+                res = json.loads(out.read_text())
+                st, pcs = res.get("status"), res.get("plan_cache")
+            note = ""
+            if pcs is not None:
+                cache_hits += pcs.get("hits", 0)
+                cache_misses += pcs.get("misses", 0)
+                note = (f", plan cache {pcs.get('hits', 0)}h/"
+                        f"{pcs.get('misses', 0)}m")
             print(f"[{time.strftime('%H:%M:%S')}] {arch} {shape} {mesh} "
-                  f"{tag}: {st} ({time.time()-t0:.0f}s)", flush=True)
+                  f"{tag}: {st} ({time.time()-t0:.0f}s{note})", flush=True)
             if st != "ok":
                 print((proc.stderr or proc.stdout)[-1500:])
+    print(f"plan cache across iterations: {cache_hits} hit(s), "
+          f"{cache_misses} miss(es) ({plan_cache})", flush=True)
 
 
 if __name__ == "__main__":

@@ -71,6 +71,11 @@ def main(argv=None):
     ap.add_argument("--no-packed", action="store_true",
                     help="disable the zero-copy packed gradient data "
                          "path (legacy per-step re-flatten; A/B axis)")
+    ap.add_argument("--plan-cache", default=None, metavar="PATH",
+                    help="disk-backed plan cache (core.plan_cache): "
+                         "repeated --plan auto launches on the same "
+                         "topology/knobs reuse the cached search "
+                         "instead of re-planning")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -109,7 +114,10 @@ def main(argv=None):
         topo = topology.tpu_multipod(max(1, n_pods), chips_per_pod)
         grad_bytes = max(1, cfg.param_count() * 4 // sizes.get("model", 1))
         allowed = (None, args.compression) if args.compression else (None, "bf16")
+        plan_cache = (planner.PlanCache(path=args.plan_cache)
+                      if args.plan_cache else planner.default_plan_cache())
         plan_kw = dict(
+            cache=plan_cache,
             # the ZeRO-1 sync is a reduce_scatter (the end AllGather moves
             # to the param update); everything else rides all_reduce
             coll=("reduce_scatter" if args.mode == "hier_zero1"
@@ -225,7 +233,7 @@ def main(argv=None):
                 coll="all_to_all",
                 pod_axis="pod" if n_pods > 1 else None, intra_axis="data",
                 compressions=(None, "bf16"), flat_mechanism="native",
-                try_balanced=False, _sim_cache=sim_cache)
+                try_balanced=False, cache=plan_cache, _sim_cache=sim_cache)
             moe_a2a_mode = a2a_plan.recommended_mode()
             # skew split -> expert capacity: slow clusters host fewer
             # hot-expert slots.  Capacity allocation never weights
@@ -235,6 +243,9 @@ def main(argv=None):
             print(f"[plan] MoE dispatch/combine All2All -> {moe_a2a_mode} "
                   f"({a2a_bytes / 2 ** 20:.1f} MiB/layer)", flush=True)
             print(a2a_plan.describe(), flush=True)
+        st = plan_cache.stats()
+        print(f"[plan] cache: {st['hits']} hit(s), {st['misses']} miss(es)",
+              flush=True)
 
     if cfg.n_experts and (moe_a2a_mode != rt.moe_a2a_mode
                           or moe_weights != rt.moe_cluster_weights):

@@ -190,13 +190,13 @@ def test_dryrun_auto_plan_border_scarce_picks_hier_a2a():
     launch.dryrun sets the 512-virtual-device XLA flag)."""
     code = (
         "from repro.launch import dryrun\n"
-        "p, c, a = dryrun.auto_plan('qwen3-moe-30b-a3b', multi_pod=True,"
+        "p, c, a, s = dryrun.auto_plan('qwen3-moe-30b-a3b', multi_pod=True,"
         " border_scarce=True)\n"
         "assert a is not None\n"
         "print('A2A_SCARCE', a.recommended_mode())\n"
-        "p, c, a = dryrun.auto_plan('qwen3-moe-30b-a3b', multi_pod=True)\n"
+        "p, c, a, s = dryrun.auto_plan('qwen3-moe-30b-a3b', multi_pod=True)\n"
         "print('A2A_RICH', a.recommended_mode())\n"
-        "p, c, a = dryrun.auto_plan('qwen2.5-3b', multi_pod=True)\n"
+        "p, c, a, s = dryrun.auto_plan('qwen2.5-3b', multi_pod=True)\n"
         "assert a is None\n"                       # dense: no a2a plan
         "print('DENSE_NONE')\n")
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")

@@ -191,6 +191,146 @@ def test_plan_without_backward_unchanged():
     assert p.summary()["overlap"] is None
 
 
+# ---------------------------------------------------------------------------
+# Planner at scale (DESIGN.md §14): vectorized pricing, symmetry folding,
+# PlanCache, cluster-aggregated validation
+# ---------------------------------------------------------------------------
+
+def test_vectorized_pricing_bit_identical_to_scalar():
+    """The batched numpy grid must reproduce the per-candidate scalar
+    oracle EXACTLY — same candidates, same float predictions — across
+    flat mechanisms and the packed data path."""
+    sizes = [1 * MiB, 64 * MiB]
+    cases = [
+        (topology.paper_testbed(), "host", False),
+        (topology.tpu_multipod(2, 256), "native", False),
+        (topology.tpu_multipod(2, 256), "native", True),
+    ]
+    for topo, mech, packed in cases:
+        kw = dict(flat_mechanism=mech, try_balanced=False, cache=None,
+                  packed=packed, sim_level="device")
+        pv = planner.plan(topo, sizes, vectorized=True, **kw)
+        ps = planner.plan(topo, sizes, vectorized=False, **kw)
+        assert pv.summary() == ps.summary(), (mech, packed)
+
+
+def test_plan_invariant_under_cluster_permutation():
+    """Permuting cluster order changes nothing the planner can price
+    (the ring is symmetric, aggregations are maxes), so the plan —
+    and its cache key — must be identical."""
+    topo = topology.paper_testbed()
+    perm = topology.HetTopology(tuple(reversed(topo.clusters)))
+    kw = dict(try_balanced=False, cache=None)
+    a = planner.plan(topo, [1 * MiB, 64 * MiB], **kw)
+    b = planner.plan(perm, [1 * MiB, 64 * MiB], **kw)
+    assert a.summary() == b.summary()
+    assert topo.fingerprint() == perm.fingerprint()
+
+
+def test_cluster_sim_matches_device_sim():
+    """The cluster-aggregated event sim is exact, not approximate: for
+    every schedule the planner searches, level='cluster' returns the
+    same float as the per-border-rank device walk."""
+    from repro.core import transport_sim
+
+    topo = topology.tpu_multipod(2, 64)
+    scheds = planner._candidate_schedules("all_reduce", 8,
+                                          (None, "bf16", "int8"))
+    assert len(scheds) > 5
+    for sched in scheds:
+        t_dev = transport_sim.simulate_schedule(sched, topo, 16 * MiB,
+                                                level="device")
+        t_clu = transport_sim.simulate_schedule(sched, topo, 16 * MiB,
+                                                level="cluster")
+        assert t_clu == t_dev, sched
+
+
+def test_large_topology_validates_via_cluster_sim():
+    """Regression for the silent-skip bug: past the device-sim rank
+    budget the planner must DOWNGRADE cross-validation to the cluster
+    sim — validated stays True and validated_via records the level,
+    never 'skipped'."""
+    topo = topology.tpu_multipod(4, 256)   # 1024 devices > the 512 budget
+    p = planner.plan(topo, [16 * MiB, 256 * MiB], flat_mechanism="native",
+                     try_balanced=False, cache=None)
+    assert topo.n_ranks > planner._DEVICE_SIM_MAX_RANKS
+    assert p.validated
+    assert p.validated_via == "cluster_sim"
+    for b in p.buckets:
+        assert b.validated and b.simulated_c2c_s > 0
+    assert p.summary()["validated_via"] == "cluster_sim"
+    # small topologies keep the full device walk
+    small = planner.plan(topology.tpu_multipod(2, 64), [16 * MiB],
+                         flat_mechanism="native", try_balanced=False,
+                         cache=None)
+    assert small.validated_via == "device_sim"
+
+
+def test_plan_cache_hit_miss_invalidate():
+    topo = topology.paper_testbed()
+    pc = planner.PlanCache()
+    kw = dict(try_balanced=False, cache=pc)
+    p1 = planner.plan(topo, [4 * MiB], **kw)
+    assert (pc.hits, pc.misses, len(pc)) == (0, 1, 1)
+    p2 = planner.plan(topo, [4 * MiB], **kw)
+    assert (pc.hits, pc.misses) == (1, 1)
+    assert p2.summary() == p1.summary()
+    # different knobs -> different line
+    planner.plan(topo, [4 * MiB], compressions=(None,), **kw)
+    assert len(pc) == 2
+    # per-fingerprint invalidation drops only that topology's lines
+    other = topology.tpu_multipod(2, 64)
+    planner.plan(other, [4 * MiB], flat_mechanism="native", **kw)
+    assert len(pc) == 3
+    assert pc.invalidate(topo.fingerprint()) == 2
+    assert len(pc) == 1
+    assert pc.invalidate() == 1 and len(pc) == 0
+
+
+def test_plan_cache_disk_persistence(tmp_path):
+    """The pickle-backed cache is what hillclimb's subprocess dryruns
+    share: a fresh instance on the same path hits without replanning."""
+    path = str(tmp_path / "plans.pkl")
+    topo = topology.tpu_multipod(2, 64)
+    kw = dict(flat_mechanism="native", try_balanced=False)
+    pc1 = planner.PlanCache(path=path)
+    p1 = planner.plan(topo, [4 * MiB], cache=pc1, **kw)
+    assert pc1.misses == 1
+    pc2 = planner.PlanCache(path=path)
+    p2 = planner.plan(topo, [4 * MiB], cache=pc2, **kw)
+    assert (pc2.hits, pc2.misses) == (1, 0)
+    assert p2.summary() == p1.summary()
+    # a corrupt file degrades to a cold cache, never an exception
+    with open(path, "wb") as f:
+        f.write(b"not a pickle")
+    pc3 = planner.PlanCache(path=path)
+    assert len(pc3) == 0
+
+
+def test_skew_plans_share_cache_lines():
+    """Skew never changes the candidate choice (it shifts every score by
+    the same constant), so plans are stored skew-stripped: a skewed
+    re-plan HITS the skew-free line and re-attaches its own split."""
+    from repro.core.skew import SkewSplit
+
+    topo = topology.tpu_multipod(2, 64)
+    pc = planner.PlanCache()
+    kw = dict(flat_mechanism="native", try_balanced=False, cache=pc)
+    base = planner.plan(topo, [16 * MiB], **kw)
+    split = SkewSplit((3, 1))
+    skewed = planner.plan(topo, [16 * MiB], skew=split,
+                          skew_compute_s=(0.08, 0.02), **kw)
+    assert (pc.hits, pc.misses) == (1, 1)
+    assert skewed.skew is split
+    assert skewed.compute_s == (0.08, 0.02)
+    assert skewed.cluster_weights == split.weights
+    assert ([b.candidate for b in skewed.buckets]
+            == [b.candidate for b in base.buckets])
+    # the stored line stays skew-free for the next caller
+    third = planner.plan(topo, [16 * MiB], **kw)
+    assert third.skew is None and third.compute_s == ()
+
+
 def test_dryrun_auto_plan_helper():
     """launch.dryrun --plan auto path: returns a plan + chosen candidate
     for the qwen2.5-3b multi-pod cell without touching jax devices."""
@@ -207,9 +347,11 @@ def test_dryrun_auto_plan_helper():
     else:
         os.environ["XLA_FLAGS"] = old_flags
 
-    plan, chosen, a2a_plan = auto_plan("qwen2.5-3b", multi_pod=True)
+    plan, chosen, a2a_plan, cache_stats = auto_plan("qwen2.5-3b",
+                                                    multi_pod=True)
     assert plan.buckets[0].candidate == chosen
     assert chosen.mode in ("flat", "hier", "hier_pipelined",
                            "hier_border_rs")
     assert plan.predicted_step_s > 0
     assert a2a_plan is None            # dense model: no MoE a2a plan
+    assert {"hits", "misses", "entries"} <= set(cache_stats)

@@ -1,5 +1,7 @@
 """Topology abstraction + cost model unit & property tests."""
 
+import dataclasses
+
 from _hypothesis_compat import hypothesis, st
 import pytest
 
@@ -127,6 +129,91 @@ def test_tpu_multipod_all_border():
     topo = topology.tpu_multipod(2, 256)
     for c in topo.clusters:
         assert c.n_border == c.n_ranks  # every chip has a DCN uplink
+
+
+# ---------------------------------------------------------------------------
+# Symmetry fingerprints + memoized splits (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_ignores_names_and_order():
+    """The canonical fingerprint is a sorted multiset of per-cluster
+    specs: renaming or permuting clusters never changes it, while
+    changing any priced field does."""
+    topo = topology.paper_testbed()
+    renamed = HetTopology(tuple(
+        dataclasses.replace(c, name=f"pod{i}")
+        for i, c in enumerate(topo.clusters)))
+    permuted = HetTopology(tuple(reversed(topo.clusters)))
+    assert renamed.fingerprint() == topo.fingerprint()
+    assert permuted.fingerprint() == topo.fingerprint()
+    bumped = HetTopology(
+        (dataclasses.replace(topo.clusters[0],
+                             nic_Bps=topo.clusters[0].nic_Bps * 2),
+         *topo.clusters[1:]))
+    assert bumped.fingerprint() != topo.fingerprint()
+    # per-cluster: the name is the ONE field outside the fingerprint
+    a, b = topo.clusters[0], dataclasses.replace(topo.clusters[0],
+                                                 name="other")
+    assert a.fingerprint() == b.fingerprint() and a != b
+
+
+def test_fold_groups_duplicate_pods():
+    """k copies of one pod spec are distinct clusters but a single fold
+    group — pricing one representative covers all k."""
+    base = topology.tpu_multipod(1, 64).clusters[0]
+    k = 5
+    topo = HetTopology(tuple(dataclasses.replace(base, name=f"pod{i}")
+                             for i in range(k)))
+    assert topo.fold_groups() == ((0, k),)
+    # heterogeneous testbed: representatives are pairwise distinct and
+    # the multiplicities cover every cluster
+    het = topology.paper_testbed()
+    groups = het.fold_groups()
+    assert sum(n for _, n in groups) == het.n_clusters
+    reps = [het.clusters[i].fingerprint() for i, _ in groups]
+    assert len(set(reps)) == len(reps)
+
+
+@hypothesis.given(
+    total=st.integers(0, 10 ** 9),
+    bws=st.lists(st.floats(1.0, 1e12), min_size=1, max_size=16),
+    gran=st.sampled_from([1, 256, 4096]))
+def test_proportional_split_matches_uncached_oracle(total, bws, gran):
+    """The memoized path must be bit-identical to the uncached
+    computation it wraps (same ints, same order)."""
+    assert (proportional_split(total, bws, granularity=gran)
+            == topology._proportional_split_impl(total, bws, gran))
+
+
+@hypothesis.given(
+    total=st.integers(0, 10 ** 6),
+    ws=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=12),
+    floor=st.sampled_from([0, 1]))
+def test_integer_split_matches_uncached_oracle(total, ws, floor):
+    try:
+        expect = topology._integer_split_impl(total, ws, floor)
+    except ValueError:
+        with pytest.raises(ValueError):
+            topology.integer_split(total, ws, floor=floor)
+        return
+    assert topology.integer_split(total, ws, floor=floor) == expect
+
+
+def test_splits_scale_to_1k_clusters():
+    """1000-link splits stay exact, conserve totals, and agree with the
+    uncached oracles; the repeat call (a memo hit) returns the same
+    value."""
+    bws = [100e9, 200e9, 400e9, 100e9] * 250
+    total = 123456789
+    parts = proportional_split(total, bws, granularity=256)
+    assert sum(parts) == total and min(parts) >= 0
+    assert parts == topology._proportional_split_impl(total, bws, 256)
+    assert proportional_split(total, bws, granularity=256) == parts
+    ws = [1.0, 2.0] * 500
+    mb = topology.integer_split(4000, ws, floor=1)
+    assert sum(mb) == 4000 and min(mb) >= 1
+    assert mb == topology._integer_split_impl(4000, ws, 1)
+    assert topology.integer_split(4000, ws, floor=1) == mb
 
 
 # ---------------------------------------------------------------------------

@@ -13,13 +13,17 @@ When a ``BENCH_step.json`` perf trajectory is passed as the third
 argument (the packed gradient data-path benchmark,
 ``benchmarks/bench_step.py``), a non-blocking perf-smoke section with
 the per-mode step-time / GB/s deltas (packed vs per-leaf vs legacy) is
-appended too.  There is deliberately NO repo-root default: the
-committed ``BENCH_step.json`` snapshot must not masquerade as fresh CI
-data — only the ``perf-smoke`` job, which just ran the bench, renders
-the table (via ``bench_section``).
+appended too.  A fourth argument naming a ``BENCH_plan.json``
+(``benchmarks/bench_plan.py``) adds the planner-at-scale section, with
+the 100k-device plan latency delta'd against the committed
+``plan_100k_s`` baseline right next to the test-count deltas.  There
+is deliberately NO repo-root default for either bench file: the
+committed snapshots must not masquerade as fresh CI data — only the
+``perf-smoke`` job, which just ran the benches, renders the tables
+(via ``bench_section`` / ``plan_bench_section``).
 
 Run:  python tools/ci_fast_tier_report.py <junit.xml> [baseline.json]
-          [BENCH_step.json]
+          [BENCH_step.json] [BENCH_plan.json]
 """
 
 from __future__ import annotations
@@ -99,6 +103,65 @@ def bench_section(bench_path: pathlib.Path) -> None:
               f"in every mode — {inv.get('values')}")
 
 
+def plan_bench_section(bench_path: pathlib.Path,
+                       baseline: dict | None = None) -> None:
+    """Planner-at-scale table from ``benchmarks/bench_plan.py``.  Plan
+    latency is pure host-CPU numpy, so unlike the emulated step
+    timings the absolute numbers ARE comparable run-to-run: the
+    100k-device latency is delta'd against the committed
+    ``plan_100k_s`` baseline, same as the test-count/duration deltas.
+    Gating happens in the perf-smoke job's dedicated step (it asserts
+    ``meta.acceptance.pass`` from the regenerated JSON); this section
+    only renders what that step decided on."""
+    if not bench_path.is_file():
+        return
+    try:
+        bench = json.loads(bench_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"\n> :warning: unreadable bench file {bench_path}: {e}")
+        return
+    meta = bench.get("meta", {})
+    acc = dict(meta.get("acceptance", {}))
+    scales = bench.get("scales", {})
+    print()
+    print("### Perf smoke — planner at scale (gated)")
+    print()
+    print(meta.get("measured", ""))
+    print()
+    print("| scale | devices | vectorized ms | scalar ms | speedup "
+          "| cache hit ms | validated via |")
+    print("|---|---|---|---|---|---|---|")
+    for tag, row in scales.items():
+        vec = row.get("vectorized_s")
+        sca = row.get("scalar_s")
+        spd = row.get("speedup")
+        print(f"| {tag} | {row.get('n_devices', '?')} "
+              f"| {f'{vec * 1e3:.1f}' if vec is not None else '-'} "
+              f"| {f'{sca * 1e3:.1f}' if sca is not None else '-'} "
+              f"| {f'{spd}x' if spd is not None else '-'} "
+              f"| {row.get('cache_hit_ms', '-')} "
+              f"| {row.get('validated_via', '-')} |")
+    overall = acc.pop("pass", None)
+    if acc:
+        print()
+        for name, c in acc.items():
+            mark = (":white_check_mark:" if c.get("pass")
+                    else ":warning:")
+            detail = {k: v for k, v in c.items()
+                      if k not in ("pass", "rule")}
+            print(f"> {mark} {name} {json.dumps(detail)}")
+        mark = ":white_check_mark:" if overall else ":warning:"
+        print(f"> {mark} acceptance overall: "
+              f"{'PASS' if overall else 'FAIL'}")
+    base_100k = (baseline or {}).get("plan_100k_s")
+    now_100k = scales.get("100k", {}).get("vectorized_s")
+    if base_100k is not None and now_100k is not None:
+        print()
+        print(f"> 100k-device plan latency: {now_100k * 1e3:.1f} ms "
+              f"(baseline {base_100k * 1e3:.1f} ms, "
+              f"{(now_100k - base_100k) * 1e3:+.1f} ms)")
+
+
 def main() -> int:
     if len(sys.argv) < 2:
         print(__doc__)
@@ -107,6 +170,7 @@ def main() -> int:
     baseline_path = (pathlib.Path(sys.argv[2]) if len(sys.argv) > 2
                      else DEFAULT_BASELINE)
     bench_path = pathlib.Path(sys.argv[3]) if len(sys.argv) > 3 else None
+    plan_path = pathlib.Path(sys.argv[4]) if len(sys.argv) > 4 else None
     tot = junit_totals(junit)
     base = None
     if baseline_path.is_file():
@@ -132,6 +196,8 @@ def main() -> int:
               "check for collection errors or accidental deselection.")
     if bench_path is not None:
         bench_section(bench_path)
+    if plan_path is not None:
+        plan_bench_section(plan_path, baseline=base)
     return 0
 
 
