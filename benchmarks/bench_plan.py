@@ -16,7 +16,10 @@ three scales — ~1k, ~10k and ~100k devices — for two configurations:
 
 Both configurations run with ``cache=None`` so every measurement is a
 cold search; the ``PlanCache`` hit path is timed separately
-(``cache_hit_ms``).  All times are min-of-N wall seconds on the host
+(``cache_hit_ms``), and so is the elastic re-plan cycle — invalidate
+the dead topology's cache lines, cold-plan the pod-loss survivor
+(``replan_ms``; the ``ElasticController._replan`` path whose latency
+bounds the live resume, DESIGN.md §15).  All times are min-of-N wall seconds on the host
 CPU — the planner is pure Python/numpy, no devices involved.
 
 Correctness is asserted, not sampled: at every scale where the oracle
@@ -127,6 +130,28 @@ def main():
         row["cache_hit_ms"] = round(t_hit * 1e3, 4)
         row["cache_stats"] = pc.stats()
 
+        # elastic replan latency: invalidate the dead topology's cache
+        # lines + cold-plan the pod-loss survivor — the live re-plan
+        # path ElasticController._replan runs (runtime/elastic.py).
+        # Each rep seeds a fresh cache so the survivor search never
+        # accidentally hits a previous rep's line.
+        survivor = topo.drop_cluster(pods - 1)
+
+        def _replan_once(t=topo, s=survivor):
+            pc_r = PlanCache()
+            planner.plan(t, sizes, **{**PLAN_KW, "cache": pc_r})
+            t0 = time.perf_counter()
+            n = pc_r.invalidate(t.fingerprint())
+            planner.plan(s, sizes, **{**PLAN_KW, "cache": pc_r})
+            return time.perf_counter() - t0, n
+
+        t_replan, n_inv = float("inf"), 0
+        for _ in range(reps):
+            dt, n_inv = _replan_once()
+            t_replan = min(t_replan, dt)
+        row["replan_ms"] = round(t_replan * 1e3, 3)
+        row["replan_invalidated"] = n_inv
+
         results[tag] = row
         print(f"{tag:>5}: {row['n_devices']} devices  "
               f"vectorized {t_vec * 1e3:8.1f} ms"
@@ -135,6 +160,7 @@ def main():
                  f"  identical={row['identical_to_oracle']}"
                  if oracle_ok else "  (scalar oracle infeasible)")
               + f"  cache hit {row['cache_hit_ms']:.2f} ms"
+              f"  replan {row['replan_ms']:.1f} ms"
               f"  [{row['validated_via']}]", flush=True)
 
     checks = {
@@ -157,6 +183,14 @@ def main():
                     "cross-validation downgrades, never skips",
             "pass": all(r["validated"] and r["validated_via"]
                         in ("device_sim", "cluster_sim")
+                        for r in results.values())},
+        "replan_within_cold_plan_envelope": {
+            "rule": "invalidate + survivor re-plan costs at most one "
+                    "cold plan (2x + 50 ms envelope) at every scale — "
+                    "the elastic resume bound rides on this",
+            "values_ms": {t: r["replan_ms"] for t, r in results.items()},
+            "pass": all(r["replan_ms"] / 1e3
+                        <= 2.0 * r["vectorized_s"] + 0.05
                         for r in results.values())},
     }
     ok = all(c["pass"] for c in checks.values())

@@ -46,6 +46,8 @@ class PlanCache:
         self.maxsize = max(1, int(maxsize))
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0      # invalidate() calls (elastic replans)
+        self.invalidated_entries = 0  # cache lines those calls dropped
         self._store: dict[Any, Any] = {}
         if path:
             self._load()
@@ -104,12 +106,17 @@ class PlanCache:
             for k in doomed:
                 self._store.pop(k)
             n = len(doomed)
+        self.invalidations += 1
+        self.invalidated_entries += n
         self._save()
         return n
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._store), "path": self.path}
+                "entries": len(self._store),
+                "invalidations": self.invalidations,
+                "invalidated_entries": self.invalidated_entries,
+                "path": self.path}
 
     def __len__(self) -> int:
         return len(self._store)

@@ -171,6 +171,42 @@ class HetTopology:
         A homogeneous 100k-device multipod folds to a single group."""
         return _topo_fold_groups(self)
 
+    def drop_cluster(self, index: int) -> "HetTopology":
+        """Survivor topology after losing cluster ``index`` whole (pod
+        failure).  The result has a new ``fingerprint()`` — the elastic
+        controller invalidates the old one's ``PlanCache`` lines and
+        re-plans against this."""
+        if not 0 <= index < self.n_clusters:
+            raise ValueError(
+                f"drop_cluster: index {index} out of range "
+                f"[0, {self.n_clusters})")
+        if self.n_clusters == 1:
+            raise ValueError(
+                "drop_cluster: cannot drop the only cluster — there is "
+                "no survivor topology")
+        return HetTopology(self.clusters[:index] + self.clusters[index + 1:])
+
+    def shrink_cluster(self, index: int, n_nodes: int) -> "HetTopology":
+        """Survivor topology after evicting hosts *inside* cluster
+        ``index`` (persistent straggler / host loss): the same cluster
+        with ``n_nodes`` remaining nodes.  Unlike :meth:`drop_cluster`
+        this changes the intra-cluster world size, so the ZeRO-1 master
+        layout must be remapped (``packing.remap_shard_ops``)."""
+        if not 0 <= index < self.n_clusters:
+            raise ValueError(
+                f"shrink_cluster: index {index} out of range "
+                f"[0, {self.n_clusters})")
+        c = self.clusters[index]
+        if not 0 < n_nodes <= c.n_nodes:
+            raise ValueError(
+                f"shrink_cluster: {c.name} has {c.n_nodes} nodes, "
+                f"cannot keep {n_nodes}")
+        if n_nodes == c.n_nodes:
+            return self
+        survivor = dataclasses.replace(c, n_nodes=int(n_nodes))
+        return HetTopology(self.clusters[:index] + (survivor,)
+                           + self.clusters[index + 1:])
+
     def balanced_subgroups(self, tol: float = 0.34) -> "HetTopology":
         """§4.4: divide larger vendor groups into subgroups with roughly
         equal total cross-cluster bandwidth, so no cluster idles while

@@ -205,6 +205,57 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     return plan, big.candidate, a2a_plan, pc.stats()
 
 
+def elastic_replan_report(arch: str, *, multi_pod: bool,
+                          comm_mode: str = "hier",
+                          border_scarce: bool = False,
+                          plan_cache_path: str | None = None):
+    """--elastic: simulate a topology loss against this cell's
+    production topology and run the detect -> re-plan transition
+    (``runtime.elastic.ElasticController``).  Multi-pod cells lose
+    their last pod (``drop_cluster``); single-pod cells confirm a
+    persistent straggler and evict half the hosts
+    (``shrink_cluster``).  Returns the ``ReplanReport`` — the result
+    JSON carries it under ``"replan"`` with the plan-cache
+    invalidation observable in ``"plan_cache"`` stats."""
+    from repro.core import planner, topology
+    from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
+    from repro.runtime.elastic import ElasticConfig, ElasticController
+
+    n_pods, _, tp_size = PRODUCTION_MULTI_SHAPE
+    if not multi_pod:
+        n_pods = 1
+    chips_per_pod = PRODUCTION_MULTI_SHAPE[1] * PRODUCTION_MULTI_SHAPE[2]
+    topo = (topology.tpu_multipod_scarce(n_pods, chips_per_pod)
+            if border_scarce else
+            topology.tpu_multipod(n_pods, chips_per_pod))
+    cfg = get_config(arch)
+    grad_bytes = max(1, cfg.param_count() * 4 // tp_size)
+    pc = (planner.PlanCache(path=plan_cache_path) if plan_cache_path
+          else planner.default_plan_cache())
+    plan_kw = dict(
+        coll="reduce_scatter" if comm_mode == "hier_zero1" else "all_reduce",
+        pod_axis="pod" if multi_pod else None, intra_axis="data",
+        compressions=(None, "bf16"), flat_mechanism="native",
+        try_balanced=False)
+    # make sure the doomed fingerprint has a cache line to invalidate
+    planner.plan(topo, [grad_bytes], cache=pc, **plan_kw)
+    ctl = ElasticController(
+        topo, [grad_bytes], plan_cache=pc,
+        config=ElasticConfig(
+            on_straggler=lambda t: t.shrink_cluster(
+                0, max(1, t.clusters[0].n_nodes // 2))),
+        plan_kw=plan_kw)
+    if topo.n_clusters > 1:
+        rep = ctl.report_pod_failure(0, topo.n_clusters - 1)
+    else:
+        rep = None
+        for s in range(ctl.cfg.straggler_patience):
+            rep = ctl.observe_step(s, slow=True)
+        assert rep is not None
+    # a dry run lowers but never steps, so nothing is resharded
+    return ctl.resumed(rep.step_detected, remap_path="none (dry run)")
+
+
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                comm_mode: str = "fsdp", sp: bool = False,
                use_pallas: bool = False, n_chunks: int = 4,
@@ -257,31 +308,19 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         build, _ = make_train_step(model, tcfg, mesh=mesh, donate=False)
         step, _ = build(pshape)
         if tcfg.comm_mode == "hier_zero1":
-            from repro.core import packing
+            from repro.runtime import elastic as elastic_lib
             from repro.train import optimizer as opt_lib
             # the flat master is built from LOCAL (TP-sharded) leaves per
             # model column, scattered over data: global dim = local shard
             # x (data x model).  The master layout is the packed
             # per-wire-dtype one (collectives._zero1_layout), so the
-            # padded size comes from the same planner the step executes.
+            # padded size comes from the same planner the step executes
+            # (host-side twin: elastic.zero1_master_layout, shared with
+            # the elastic remap path).
             isize, tpsize = sizes["data"], sizes.get("model", 1)
             specs = model.param_specs(pshape)
-            local_metas = []
-            for leaf, spec in zip(jax.tree.leaves(pshape),
-                                  jax.tree.leaves(specs)):
-                n = 1
-                for d, s in enumerate(leaf.shape):
-                    names = (tuple(spec)[d]
-                             if d < len(tuple(spec)) else None)
-                    div = 1
-                    if names is not None:
-                        for nm in (names if isinstance(names, tuple)
-                                   else (names,)):
-                            div *= sizes[nm]
-                    n *= s // div
-                local_metas.append((str(leaf.dtype), (n,), n))
-            layout = packing.plan_layout(local_metas, world=isize,
-                                         block=packing.DEFAULT_BLOCK)
+            layout = elastic_lib.zero1_master_layout(pshape, specs, sizes,
+                                                     intra_axis="data")
             padded_local = layout.padded_total
             shard_n = padded_local // isize
             gdim = shard_n * isize * tpsize
@@ -390,6 +429,13 @@ def main():
                          "repeated --plan auto invocations hit instead "
                          "of re-searching); stats land in the result "
                          "JSON under 'plan_cache'")
+    ap.add_argument("--elastic", action="store_true",
+                    help="after lowering, simulate a topology loss "
+                         "(multi-pod: drop the last pod; single: evict "
+                         "half the hosts on a confirmed straggler) and "
+                         "run the elastic re-plan; the transition's "
+                         "ReplanReport lands in the result JSON under "
+                         "'replan'")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -452,6 +498,13 @@ def main():
                          remat_policy=args.remat_policy, plan=plan,
                          packed=use_packed,
                          moe_a2a_mode=moe_a2a_mode)
+        if args.elastic:
+            rep = elastic_replan_report(
+                args.arch, multi_pod=args.mesh == "multi", comm_mode=mode,
+                border_scarce=args.border_scarce,
+                plan_cache_path=args.plan_cache)
+            res["replan"] = rep.summary()
+            print(rep.describe(), flush=True)
         if cache_stats is not None:
             res["plan_cache"] = cache_stats
     except Exception as e:  # noqa: BLE001

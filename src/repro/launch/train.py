@@ -76,6 +76,23 @@ def main(argv=None):
                          "repeated --plan auto launches on the same "
                          "topology/knobs reuse the cached search "
                          "instead of re-planning")
+    ap.add_argument("--elastic", action="store_true",
+                    help="enable the elastic re-planning controller "
+                         "(runtime/elastic.py): on a pod failure the old "
+                         "topology's plan-cache lines are invalidated, "
+                         "the planner re-runs against the survivors, the "
+                         "ZeRO-1 master is remapped online through the "
+                         "packed slot map, and training resumes on the "
+                         "survivor mesh; the transition's ReplanReport "
+                         "is printed at resume.  Straggler verdicts are "
+                         "fed to the controller too (host eviction is "
+                         "the scheduler's call, so confirmed stragglers "
+                         "are surfaced, not acted on)")
+    ap.add_argument("--inject-pod-failure", type=int, default=None,
+                    metavar="STEP",
+                    help="with --elastic on a multi-pod mesh: report the "
+                         "last pod as failed just before STEP executes "
+                         "(emulated fault injection)")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -101,6 +118,7 @@ def main(argv=None):
                                          mesh.devices.shape))["data"])
 
     plan = None
+    plan_cache = None
     cluster_weights = None
     moe_a2a_mode = rt.moe_a2a_mode
     moe_weights = None
@@ -300,18 +318,161 @@ def main(argv=None):
 
     watchdog = NaNWatchdog()
     straggler = StragglerMonitor()
+
+    elastic_ctl = None
+    if args.elastic and mesh is not None:
+        from repro.core import planner as planner_lib
+        from repro.core import topology as topology_lib
+        from repro.runtime import elastic as elastic_lib
+
+        e_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        e_pods = e_sizes.get("pod", 1)
+        e_topo = topology_lib.tpu_multipod(
+            max(1, e_pods),
+            int(np.prod(list(mesh.devices.shape))) // max(1, e_pods))
+        e_grad = max(1, cfg.param_count() * 4 // e_sizes.get("model", 1))
+        e_cache = (plan_cache if plan_cache is not None
+                   else planner_lib.default_plan_cache())
+        e_kw = dict(
+            coll=("reduce_scatter" if args.mode == "hier_zero1"
+                  else "all_reduce"),
+            pod_axis="pod" if e_pods > 1 else None, intra_axis="data",
+            compressions=((None, args.compression) if args.compression
+                          else (None, "bf16")),
+            flat_mechanism="native", try_balanced=False)
+        # make sure the running topology has a cache line — the line a
+        # pod failure must invalidate
+        planner_lib.plan(e_topo, [e_grad], cache=e_cache, **e_kw)
+        elastic_ctl = elastic_lib.ElasticController(
+            e_topo, [e_grad], plan_cache=e_cache, straggler=straggler,
+            plan_kw=e_kw)
+
+    def _pod_failover(at_step, mesh, model, tcfg, params, opt):
+        """Kill the last pod: re-plan against the survivors, rebuild
+        the step on the survivor mesh, and cross params + optimizer
+        state online (ZeRO-1 master via the packed slot-map remap;
+        checkpoint-restore fallback when the layouts are not
+        remappable)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.runtime import elastic as elastic_lib
+
+        old_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        rep = elastic_ctl.report_pod_failure(
+            at_step, elastic_ctl.topo.n_clusters - 1)
+        print(f"[elastic] {rep.trigger}: {rep.detail}; re-planned "
+              f"{rep.old_fingerprint} -> {rep.new_fingerprint} in "
+              f"{rep.replan_latency_s * 1e3:.1f} ms "
+              f"({rep.invalidated_entries} cache line(s) invalidated)",
+              flush=True)
+        new_mesh = elastic_lib.survivor_mesh(mesh, "pod",
+                                             old_sizes["pod"] - 1)
+        new_sizes = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+        new_rt = runtime_for_mesh(new_mesh, fsdp=args.mode == "fsdp",
+                                  use_pallas=args.pallas)
+        new_model = Model(cfg, new_rt)
+        if args.mode == "fsdp":
+            new_model = new_model.with_fsdp(new_sizes["data"])
+        new_tcfg = dataclasses.replace(
+            tcfg, plan=elastic_ctl.plan if tcfg.plan is not None else None)
+        build2, _ = make_train_step(new_model, new_tcfg, mesh=new_mesh)
+        step2, boot2 = build2(pshape)
+        specs_old = model.param_specs(pshape)
+        specs_new = new_model.param_specs(pshape)
+        p_shard = [NamedSharding(new_mesh, sp)
+                   for sp in jax.tree.leaves(specs_new)]
+        new_params = jax.tree.unflatten(
+            jax.tree.structure(params),
+            [jax.device_put(np.asarray(jax.device_get(x)), s)
+             for x, s in zip(jax.tree.leaves(params), p_shard)])
+        remap_path = "slot_map"
+        rsh = NamedSharding(new_mesh, P())
+        if args.mode == "hier_zero1":
+            old_layout = elastic_lib.zero1_master_layout(
+                pshape, specs_old, old_sizes)
+            new_layout = elastic_lib.zero1_master_layout(
+                pshape, specs_new, new_sizes)
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                opt)
+            zspec = (P(("data", "model")) if "model" in new_sizes
+                     else P("data"))
+            zsh = NamedSharding(new_mesh, zspec)
+            try:
+                remapped = elastic_lib.remap_zero_state(
+                    host, old_layout, new_layout,
+                    old_world=old_sizes["data"],
+                    new_world=new_sizes["data"],
+                    n_columns=new_sizes.get("model", 1))
+                new_opt = type(opt)(
+                    jax.device_put(remapped.flat_param, zsh),
+                    jax.device_put(remapped.mu, zsh),
+                    jax.device_put(remapped.nu, zsh),
+                    jax.device_put(np.asarray(remapped.step), rsh))
+            except ValueError as e:
+                # mesh shrank below the layout's divisibility (or the
+                # leaf contents changed): restore with new shardings
+                remap_path = "restore_fallback"
+                print(f"[elastic] slot-map remap not applicable ({e}); "
+                      "falling back to checkpoint restore", flush=True)
+                new_opt = None
+                if ckpt is not None and ckpt.latest_step() is not None:
+                    try:
+                        _, (new_params, new_opt), _ = ckpt.restore(
+                            (new_params, boot2(new_params)),
+                            shardings=(jax.tree.unflatten(
+                                jax.tree.structure(params), p_shard),
+                                type(opt)(zsh, zsh, zsh, rsh)))
+                    except Exception as e2:  # noqa: BLE001
+                        # the checkpointed master flat rode the OLD
+                        # world's layout, so even the restore cannot
+                        # reshape it onto the survivors
+                        print(f"[elastic] restore not layout-"
+                              f"compatible either ({e2})", flush=True)
+                        new_opt = None
+                if new_opt is None:
+                    print("[elastic] re-bootstrapping the optimizer "
+                          "from the resharded params (moments reset)",
+                          flush=True)
+                    new_opt = boot2(new_params)
+        else:
+            psh_tree = jax.tree.unflatten(jax.tree.structure(params),
+                                          p_shard)
+            osh_tree = type(opt)(psh_tree, psh_tree, rsh)
+            new_opt = jax.tree.map(
+                lambda x, s: jax.device_put(
+                    np.asarray(jax.device_get(x)), s),
+                opt, osh_tree)
+        return new_mesh, new_model, new_tcfg, step2, new_params, new_opt, \
+            remap_path
+
     pre = Prefetcher(dcfg, start_step=start)
     losses = []
+    injected_failure = False
+    elastic_remap_path = "slot_map"
     try:
         t_start = time.time()
         step = start
         while step < args.steps:
+            if (elastic_ctl is not None and not injected_failure
+                    and args.inject_pod_failure is not None
+                    and step >= args.inject_pod_failure
+                    and elastic_ctl.topo.n_clusters > 1):
+                injected_failure = True
+                (mesh, model, tcfg, step_fn, params, opt,
+                 elastic_remap_path) = _pod_failover(
+                     step, mesh, model, tcfg, params, opt)
             sid, batch = pre.get(timeout=30.0)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             straggler.start()
             new_params, new_opt, m = step_fn(params, opt, batch)
             loss = float(m["loss"])
             slow = straggler.stop()
+            if elastic_ctl is not None:
+                # confirmed persistent stragglers are surfaced (host
+                # eviction is the scheduler's call; on_straggler is
+                # unset here, so the controller records but never acts)
+                elastic_ctl.observe_step(step, slow=slow)
             verdict = watchdog.observe(loss)
             if verdict == "rollback" and ckpt and ckpt.latest_step() is not None:
                 step, (params, opt), _ = ckpt.restore((params, opt))
@@ -322,6 +483,10 @@ def main(argv=None):
                 step += 1
                 continue
             params, opt = new_params, new_opt
+            if elastic_ctl is not None and elastic_ctl.state == "replanned":
+                print(elastic_ctl.resumed(
+                    step, remap_path=elastic_remap_path).describe(),
+                    flush=True)
             losses.append(loss)
             if step % args.log_every == 0:
                 dt = (time.time() - t_start) / max(1, len(losses))

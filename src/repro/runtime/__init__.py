@@ -1,2 +1,5 @@
 from .checkpoint import CheckpointManager  # noqa: F401
+from .elastic import (  # noqa: F401
+    ElasticConfig, ElasticController, ReplanReport, fingerprint_digest,
+    remap_flat, remap_zero_state, reshard_tree, survivor_mesh)
 from .health import NaNWatchdog, StragglerMonitor, WatchdogConfig  # noqa: F401

@@ -17,6 +17,7 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import threading
@@ -25,6 +26,38 @@ from typing import Any
 
 import jax
 import numpy as np
+
+# Test seam for crash injection: when set, called with a tag string at
+# the crash-sensitive points of ``_write`` (see ``_crashpoint``).  The
+# atomicity tests install a hook that raises, emulating a process kill
+# between the unpublish and the publish rename.
+_CRASH_HOOK = None
+
+
+def _crashpoint(tag: str) -> None:
+    if _CRASH_HOOK is not None:
+        _CRASH_HOOK(tag)
+
+
+def _fsync_file(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    """fsync a directory so the rename/creat entries inside it are
+    durable — flushing file *contents* alone does not persist the
+    directory entry that names them."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platforms without O_RDONLY directory fds
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _flatten_with_names(tree: Any):
@@ -41,6 +74,21 @@ class CheckpointManager:
         self.keep = keep
         self._thread: threading.Thread | None = None
         self.last_error: Exception | None = None
+        self._recover()
+
+    def _recover(self) -> None:
+        """Finish interrupted publishes.  ``_write`` moves an existing
+        ``step_N`` aside to a unique ``step_N.old.<pid>.<ns>`` before
+        renaming the new tmp into place; a crash between the two renames
+        leaves the step with only the ``.old`` copy.  On startup, any
+        orphaned valid ``.old`` whose final is missing is renamed back —
+        so there is never a step with zero valid checkpoints."""
+        for old in sorted(self.dir.glob("step_*.old.*")):
+            final = self.dir / old.name.split(".old.")[0]
+            if not final.exists() and (old / "manifest.json").exists():
+                old.rename(final)
+            else:
+                shutil.rmtree(old, ignore_errors=True)
 
     # ----------------------------------------------------------- save --
     def save(self, step: int, tree: Any, extra: dict | None = None):
@@ -83,16 +131,31 @@ class CheckpointManager:
             if a.dtype.kind == "V" or "bfloat16" in str(a.dtype):
                 a = a.view(np.uint16)  # npz-safe raw storage for bf16
             arrays[f"a{i}"] = a
-        np.savez(tmp / "arrays.npz", **arrays)
+        with open(tmp / "arrays.npz", "wb") as f:
+            np.savez(f, **arrays)
+            _fsync_file(f)
         manifest = {"step": step, "names": names, "time": time.time(),
                     "extra": extra, "dtypes": dtypes,
                     "shapes": [list(a.shape) for a in arrays.values()]}
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
-            f.flush()
+            _fsync_file(f)          # manifest durable before any rename
+        _fsync_dir(tmp)
         if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)           # atomic publish
+            # never rmtree the live checkpoint before the replacement is
+            # in place: move it aside under a unique recoverable name,
+            # publish, then drop it.  A crash between the two renames
+            # leaves either the old or the new copy on disk (never
+            # neither); _recover() renames an orphaned .old back.
+            old = self.dir / f"step_{step}.old.{os.getpid()}.{time.time_ns()}"
+            final.rename(old)
+            _crashpoint("publish")
+            tmp.rename(final)       # atomic publish
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            _crashpoint("publish")
+            tmp.rename(final)       # atomic publish
+        _fsync_dir(self.dir)        # the publish rename itself durable
         self._gc()
 
     def _gc(self):
@@ -104,7 +167,8 @@ class CheckpointManager:
     def steps(self) -> list[int]:
         out = []
         for p in self.dir.glob("step_*"):
-            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+            if (p.suffix == ".tmp" or ".old." in p.name
+                    or not (p / "manifest.json").exists()):
                 continue
             try:
                 out.append(int(p.name.split("_")[1]))
@@ -130,6 +194,14 @@ class CheckpointManager:
         names_like, leaves_like, treedef = _flatten_with_names(like)
         by_name = dict(zip(manifest["names"],
                            [data[f"a{i}"] for i in range(len(manifest["names"]))]))
+        missing = [nm for nm in names_like if nm not in by_name]
+        extra_leaves = sorted(set(manifest["names"]) - set(names_like))
+        if missing or extra_leaves:
+            raise ValueError(
+                f"checkpoint step {step} does not match the target tree "
+                f"structure: {len(missing)} leaf/leaves missing from the "
+                f"checkpoint {missing}; {len(extra_leaves)} present only "
+                f"in the checkpoint {extra_leaves}")
         shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                         else [None] * len(leaves_like))
         dtype_by_name = dict(zip(manifest["names"], manifest["dtypes"]))

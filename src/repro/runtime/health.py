@@ -36,7 +36,7 @@ class NaNWatchdog:
         if not math.isfinite(loss):
             self.bad_streak += 1
             if self.bad_streak >= self.cfg.max_bad_steps:
-                self.bad_streak = 0
+                self._rollback()
                 return "rollback"
             return "skip"
         med = (float(np.median(self.history[-self.cfg.window:]))
@@ -46,11 +46,20 @@ class NaNWatchdog:
                 and len(self.history) > 8:
             self.bad_streak += 1
             if self.bad_streak >= self.cfg.max_bad_steps:
-                self.bad_streak = 0
+                self._rollback()
                 return "rollback"
             return "skip"
         self.bad_streak = 0
         return "ok"
+
+    def _rollback(self) -> None:
+        # the caller restores an older checkpoint, so the pre-blowup
+        # history no longer describes the stream it will observe next:
+        # keeping it made healthy post-rewind losses re-flag as spikes
+        # against a stale median (and the spike branch above had already
+        # appended the blowup values themselves)
+        self.bad_streak = 0
+        self.history.clear()
 
 
 class StragglerMonitor:
@@ -70,7 +79,24 @@ class StragglerMonitor:
         self._t0 = time.monotonic()
 
     def stop(self) -> bool:
-        return self.observe(time.monotonic() - self._t0)
+        if self._t0 is None:
+            # stop() without a matching start() (e.g. the first loop
+            # iteration after a replan reset, or an exception path that
+            # skipped start) is a no-observation, not a TypeError
+            return False
+        t0, self._t0 = self._t0, None
+        return self.observe(time.monotonic() - t0)
+
+    def reset(self) -> None:
+        """Forget the timing history and flags.  Called after elastic
+        recovery (host replaced / topology re-planned): the trailing
+        median belongs to the old fleet, so a replacement host must not
+        inherit the straggler's baseline — nor be judged against it.
+        ``_step`` keeps counting so flag indices stay aligned with the
+        global training step."""
+        self.times.clear()
+        self.flagged.clear()
+        self._t0 = None
 
     def observe(self, dt: float) -> bool:
         """Record one step duration (seconds) directly — the testable

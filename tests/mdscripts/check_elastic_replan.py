@@ -1,0 +1,267 @@
+"""Elastic re-planning e2e on the 8-virtual-device fabric: survive a
+pod failure AND a straggler-confirmed shrink live (DESIGN.md §15).
+
+Leg A (pod failure, TP kept): train hier_zero1 on the (2,2,2) mesh,
+kill pod 1 via the ElasticController (PlanCache.invalidate observed,
+survivor plan sim-validated), remap the ZeRO-1 master onto the (2,2)
+survivor mesh through the slot map — with ``packing.pack`` poisoned
+during the remap to prove no re-flatten happens — and resume.  The
+post-failure loss trajectory must match, bit for bit, a from-scratch
+survivor-mesh run restored from the checkpoint taken at the failure
+step.
+
+Leg B (straggler shrink, true slice remap): train hier_zero1 on a
+data-only (4,) mesh, confirm a persistent straggler (3 consecutive
+slow steps), shrink to (2,) — the intra world really changes, so the
+remap moves elements between ranks.  The remapped master/moments must
+equal an independent gather->slice->repad reference bit for bit, and
+the resumed trajectory must match the reference-state run bit for bit.
+"""
+
+import os
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import packing, planner, topology  # noqa: E402
+from repro.core.plan_cache import PlanCache  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.parallel.sharding import Runtime  # noqa: E402
+from repro.data import DataConfig, synth_batch  # noqa: E402
+from repro.runtime import CheckpointManager, elastic  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+from repro.train.optimizer import OptConfig, ZeroState  # noqa: E402
+
+cfg = get_config("qwen2.5-3b", smoke=True)
+OPT = OptConfig(lr=5e-3, warmup_steps=1)
+DC = DataConfig(vocab_size=cfg.vocab_size, global_batch=4, seq_len=32, seed=9)
+TCFG = TrainConfig(comm_mode="hier_zero1", opt=OPT)
+
+
+def to_batch(step):
+    return {k: jnp.asarray(v) for k, v in synth_batch(DC, step).items()}
+
+
+def host(tree):
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def run_steps(step_fn, params, opt, lo, hi):
+    losses = []
+    for i in range(lo, hi):
+        params, opt, m = step_fn(params, opt, to_batch(i))
+        losses.append(float(m["loss"]))
+    return params, opt, losses
+
+
+def poisoned_remap(state, old_lay, new_lay, **kw):
+    """remap_zero_state with packing.pack raising — proving the online
+    crossing is a pure slice remap, never a re-flatten of the leaves."""
+    real_pack = packing.pack
+
+    def boom(*a, **k):
+        raise AssertionError("remap must not re-flatten (packing.pack)")
+
+    packing.pack = boom
+    try:
+        return elastic.remap_zero_state(state, old_lay, new_lay, **kw)
+    finally:
+        packing.pack = real_pack
+
+
+def put_zero(state, mesh, zspec):
+    zsh = NamedSharding(mesh, zspec)
+    rsh = NamedSharding(mesh, P())
+    return ZeroState(jax.device_put(state.flat_param, zsh),
+                     jax.device_put(state.mu, zsh),
+                     jax.device_put(state.nu, zsh),
+                     jax.device_put(np.asarray(state.step), rsh))
+
+
+def put_params(params, model, pshape, mesh):
+    specs = model.param_specs(pshape)
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(np.asarray(jax.device_get(x)),
+                                     NamedSharding(mesh, sp)),
+        params, specs)
+
+
+# ===========================================================================
+# Leg A: pod failure on the (2,2,2) mesh -> (2,2) survivor, identity remap
+# ===========================================================================
+mesh_a = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rt_a = Runtime(tp_axis="model", dp_axis="data", pod_axis="pod", tp_size=2)
+model_a = Model(cfg, rt_a)
+build_a, init = make_train_step(model_a, TCFG, mesh=mesh_a, donate=False)
+params, _ = init(jax.random.key(0))
+pshape = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+step_a, boot_a = build_a(pshape)
+opt = boot_a(params)
+
+cache = PlanCache()
+topo_a = topology.tpu_multipod(2, 4)
+kw = dict(coll="reduce_scatter", pod_axis="pod", intra_axis="data",
+          compressions=(None, "bf16"), flat_mechanism="native",
+          try_balanced=False, cache=cache)
+planner.plan(topo_a, [cfg.param_count() * 4 // 2], **kw)
+ctl = elastic.ElasticController(topo_a, [cfg.param_count() * 4 // 2],
+                                plan_cache=cache,
+                                plan_kw={k: v for k, v in kw.items()
+                                         if k != "cache"})
+
+params, opt, pre_losses = run_steps(step_a, params, opt, 0, 2)
+tmp = tempfile.mkdtemp()
+ckpt = CheckpointManager(tmp)
+ckpt.save(2, (params, opt))
+
+# -- detect + re-plan --------------------------------------------------------
+rep = ctl.report_pod_failure(2, 1)
+assert cache.stats()["invalidations"] == 1, cache.stats()
+assert rep.invalidated_entries >= 1
+assert rep.validated and rep.validated_via is not None, rep
+assert ctl.topo.n_clusters == 1
+print(f"replan: {rep.old_fingerprint} -> {rep.new_fingerprint} "
+      f"({rep.replan_latency_s * 1e3:.1f} ms, plan {rep.plan_mode} "
+      f"validated via {rep.validated_via})")
+
+# -- reshard onto the survivor mesh ------------------------------------------
+mesh_s = elastic.survivor_mesh(mesh_a, "pod", 1)
+assert mesh_s.axis_names == ("data", "model") and mesh_s.devices.shape == (2, 2)
+rt_s = Runtime(tp_axis="model", dp_axis="data", tp_size=2)
+model_s = Model(cfg, rt_s)
+build_s, _ = make_train_step(model_s, TCFG, mesh=mesh_s, donate=False)
+step_s, boot_s = build_s(pshape)
+
+old_sizes = {"pod": 2, "data": 2, "model": 2}
+new_sizes = {"data": 2, "model": 2}
+lay_old = elastic.zero1_master_layout(pshape, model_a.param_specs(pshape),
+                                      old_sizes)
+lay_new = elastic.zero1_master_layout(pshape, model_s.param_specs(pshape),
+                                      new_sizes)
+remapped = poisoned_remap(host(opt), lay_old, lay_new,
+                          old_world=2, new_world=2, n_columns=2)
+p_live = put_params(params, model_s, pshape, mesh_s)
+o_live = put_zero(remapped, mesh_s, P(("data", "model")))
+_, _, live_losses = run_steps(step_s, p_live, o_live, 2, 5)
+rep = ctl.resumed(2)
+assert rep.steps_lost == 0 and rep.within_bound
+
+# -- reference: from-scratch survivor run restored from the checkpoint -------
+p_like = put_params(params, model_s, pshape, mesh_s)
+o_like = boot_s(p_like)
+zsh = NamedSharding(mesh_s, P(("data", "model")))
+_, (p_ref, o_ref), _ = ckpt.restore(
+    (p_like, o_like),
+    shardings=(jax.tree.map(lambda sp: NamedSharding(mesh_s, sp),
+                            model_s.param_specs(pshape)),
+               ZeroState(zsh, zsh, zsh, NamedSharding(mesh_s, P()))))
+_, _, ref_losses = run_steps(step_s, p_ref, o_ref, 2, 5)
+
+assert live_losses == ref_losses, (live_losses, ref_losses)
+print("pod-failure losses:", ["%.6f" % l for l in pre_losses + live_losses],
+      "(post-failure bit-for-bit vs checkpoint-restored survivor run)")
+print("OK leg A: pod failure -> slot-map remap -> bit-for-bit resume")
+
+# ===========================================================================
+# Leg B: straggler shrink on a data-only mesh — the true slice remap
+# ===========================================================================
+devs = np.asarray(jax.devices())
+mesh4 = jax.sharding.Mesh(devs[:4], ("data",))
+mesh2 = jax.sharding.Mesh(devs[:2], ("data",))
+rt4 = Runtime(dp_axis="data")
+model4 = Model(cfg, rt4)
+build4, init4 = make_train_step(model4, TCFG, mesh=mesh4, donate=False)
+params4, _ = init4(jax.random.key(0))
+pshape4 = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                       params4)
+step4, boot4 = build4(pshape4)
+opt4 = boot4(params4)
+params4, opt4, pre_b = run_steps(step4, params4, opt4, 0, 2)
+
+cache_b = PlanCache()
+topo_b = topology.tpu_multipod(1, 4)
+kw_b = dict(coll="reduce_scatter", pod_axis=None, intra_axis="data",
+            compressions=(None, "bf16"), flat_mechanism="native",
+            try_balanced=False)
+planner.plan(topo_b, [cfg.param_count() * 4], cache=cache_b, **kw_b)
+ctl_b = elastic.ElasticController(
+    topo_b, [cfg.param_count() * 4], plan_cache=cache_b,
+    config=elastic.ElasticConfig(
+        straggler_patience=3,
+        on_straggler=lambda t: t.shrink_cluster(0, 2)),
+    plan_kw=kw_b)
+assert ctl_b.observe_step(2, slow=True) is None
+assert ctl_b.observe_step(3, slow=True) is None
+rep_b = ctl_b.observe_step(4, slow=True)
+assert rep_b is not None and rep_b.trigger == "straggler"
+assert cache_b.stats()["invalidations"] == 1
+assert ctl_b.topo.clusters[0].n_nodes == 2
+
+spec4 = jax.tree.map(lambda _: P(), pshape4)  # no TP: leaves unsharded
+lay4 = elastic.zero1_master_layout(pshape4, model4.param_specs(pshape4),
+                                   {"data": 4})
+lay2 = elastic.zero1_master_layout(pshape4, model4.param_specs(pshape4),
+                                   {"data": 2})
+assert lay4.padded_total % 4 == 0 and lay2.padded_total % 2 == 0
+
+host_opt = host(opt4)
+remap_b = poisoned_remap(host_opt, lay4, lay2, old_world=4, new_world=2)
+
+
+def slice_repad(flat, old_lay, new_lay, old_world, new_world):
+    """Independent ground truth: gather each dtype segment from the old
+    per-rank shards, repad to the new extent, re-slice per new rank."""
+    old_shards = np.asarray(flat).reshape(old_world, -1)
+    segs, base = {}, 0
+    for s in old_lay.segments:
+        per = s.padded // old_world
+        segs[s.dtype] = np.concatenate(
+            [old_shards[r][base:base + per] for r in range(old_world)])
+        base += per
+    out = []
+    for r in range(new_world):
+        parts = []
+        for so, sn in zip(old_lay.segments, new_lay.segments):
+            buf = np.zeros(sn.padded, old_shards.dtype)
+            n = min(so.padded, sn.padded)
+            buf[:n] = segs[so.dtype][:n]
+            per = sn.padded // new_world
+            parts.append(buf[r * per:(r + 1) * per])
+        out.append(np.concatenate(parts))
+    return np.concatenate(out)
+
+
+for name in ("flat_param", "mu", "nu"):
+    want = slice_repad(getattr(host_opt, name), lay4, lay2, 4, 2)
+    np.testing.assert_array_equal(getattr(remap_b, name), want, err_msg=name)
+print("OK leg B remap: master+moments == gather/slice/repad reference "
+      "(bit for bit, world 4 -> 2)")
+
+build2, _ = make_train_step(model4, TCFG, mesh=mesh2, donate=False)
+step2, _ = build2(pshape4)
+p2 = put_params(params4, model4, pshape4, mesh2)
+o2 = put_zero(remap_b, mesh2, P("data"))
+_, _, live_b = run_steps(step2, p2, o2, 2, 4)
+rep_b = ctl_b.resumed(2)
+assert rep_b.within_bound
+
+# reference state built independently of remap_shard_ops
+ref_state = ZeroState(
+    slice_repad(host_opt.flat_param, lay4, lay2, 4, 2),
+    slice_repad(host_opt.mu, lay4, lay2, 4, 2),
+    slice_repad(host_opt.nu, lay4, lay2, 4, 2), host_opt.step)
+p2r = put_params(params4, model4, pshape4, mesh2)
+o2r = put_zero(ref_state, mesh2, P("data"))
+_, _, ref_b = run_steps(step2, p2r, o2r, 2, 4)
+assert live_b == ref_b, (live_b, ref_b)
+assert live_b[-1] < pre_b[0], (pre_b, live_b)  # still descending
+print("straggler-shrink losses:", ["%.6f" % l for l in pre_b + live_b])
+print("OK leg B: straggler shrink -> true slice remap -> bit-for-bit resume")
+print("ALL-OK")

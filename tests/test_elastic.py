@@ -1,0 +1,243 @@
+"""Elastic re-planning controller + ZeRO-1 slot-map remap
+(runtime/elastic.py) — the fast-tier smoke: the full
+detect -> re-plan -> reshard -> resume loop on host arrays, no jit.
+The multi-device e2e (bit-for-bit loss after a pod failure) lives in
+tests/mdscripts/check_elastic_replan.py."""
+
+import numpy as np
+import pytest
+
+from repro.core import packing, planner, topology
+from repro.core.plan_cache import PlanCache
+from repro.runtime import elastic
+from repro.runtime.health import StragglerMonitor
+from repro.train.optimizer import ZeroState
+
+PLAN_KW = dict(coll="reduce_scatter", pod_axis="pod", intra_axis="data",
+               compressions=(None, "bf16"), flat_mechanism="native",
+               try_balanced=False)
+
+
+def _controller(n_pods=2, *, cache=None, straggler=None, config=None):
+    topo = topology.tpu_multipod(n_pods, 8)
+    cache = cache if cache is not None else PlanCache()
+    grad = 64 << 20
+    planner.plan(topo, [grad], cache=cache, **PLAN_KW)  # seed the old line
+    return elastic.ElasticController(
+        topo, [grad], plan_cache=cache, straggler=straggler, config=config,
+        plan_kw=PLAN_KW), cache
+
+
+# ---------------------------------------------------------------------------
+# Controller state machine
+# ---------------------------------------------------------------------------
+
+def test_pod_failure_replan_invalidates_and_validates():
+    ctl, cache = _controller(2)
+    old_fp = ctl.topo.fingerprint()
+    rep = ctl.report_pod_failure(7, 1)
+    assert rep.trigger == "pod_failure"
+    assert cache.stats()["invalidations"] == 1
+    assert rep.invalidated_entries >= 1
+    assert rep.old_fingerprint != rep.new_fingerprint
+    assert rep.old_fingerprint == elastic.fingerprint_digest(old_fp)
+    # the survivor plan is cross-validated like any other
+    assert rep.validated and rep.validated_via is not None
+    assert ctl.plan is not None
+    assert ctl.topo.n_clusters == 1
+    assert ctl.state == "replanned"
+    # ...and the new plan was priced without a pod axis (single cluster)
+    assert ctl.plan.recommended_mode() is not None
+    done = ctl.resumed(9)
+    assert done is rep
+    assert rep.steps_lost == 2 and rep.within_bound
+    assert rep.remap_path == "slot_map"
+    assert ctl.state == "healthy"
+    assert "pod_failure" in rep.describe()
+
+
+def test_resumed_without_pending_replan_raises():
+    ctl, _ = _controller(2)
+    with pytest.raises(RuntimeError, match="without a pending re-plan"):
+        ctl.resumed(3)
+
+
+def test_straggler_needs_consecutive_slow_steps():
+    cfg = elastic.ElasticConfig(
+        straggler_patience=3,
+        on_straggler=lambda t: t.shrink_cluster(
+            0, max(1, t.clusters[0].n_nodes // 2)))
+    ctl, cache = _controller(2, config=cfg)
+    # transient slowness (streak broken) never confirms
+    assert ctl.observe_step(0, slow=True) is None
+    assert ctl.observe_step(1, slow=True) is None
+    assert ctl.observe_step(2, slow=False) is None
+    assert ctl.observe_step(3, slow=True) is None
+    assert ctl.observe_step(4, slow=True) is None
+    rep = ctl.observe_step(5, slow=True)
+    assert rep is not None and rep.trigger == "straggler"
+    assert ctl.topo.clusters[0].n_nodes == 4  # shrunk from 8
+    assert cache.stats()["invalidations"] == 1
+    # transition in flight: verdicts are ignored until resumed()
+    assert ctl.observe_step(6, slow=True) is None
+    rep2 = ctl.resumed(6)
+    assert rep2.steps_lost == 1
+
+
+def test_straggler_without_action_only_surfaces():
+    ctl, cache = _controller(2)  # on_straggler unset (default config)
+    for s in range(10):
+        assert ctl.observe_step(s, slow=True) is None
+    assert ctl.state == "healthy"
+    assert cache.stats()["invalidations"] == 0
+
+
+def test_replan_resets_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(8):
+        mon.observe(0.1)
+    mon.observe(0.9)
+    assert mon.flagged
+    ctl, _ = _controller(2, straggler=mon)
+    ctl.report_pod_failure(1, 0)
+    assert mon.times == [] and mon.flagged == []
+
+
+def test_plan_cache_invalidation_counters():
+    cache = PlanCache()
+    topo = topology.tpu_multipod(2, 8)
+    planner.plan(topo, [1 << 20], cache=cache, **PLAN_KW)
+    st0 = cache.stats()
+    assert st0["invalidations"] == 0 and st0["invalidated_entries"] == 0
+    n = cache.invalidate(topo.fingerprint())
+    st1 = cache.stats()
+    assert st1["invalidations"] == 1
+    assert st1["invalidated_entries"] == n >= 1
+    # invalidating a fingerprint with no lines still counts the call
+    cache.invalidate(topo.fingerprint())
+    assert cache.stats()["invalidations"] == 2
+    assert cache.stats()["invalidated_entries"] == n
+
+
+# ---------------------------------------------------------------------------
+# remap_flat / remap_zero_state (host-side, the global-buffer wrappers
+# over packing.remap_shard_ops — slice semantics tested in test_packing)
+# ---------------------------------------------------------------------------
+
+def _layouts(metas, old_world, new_world):
+    return (packing.plan_layout(metas, world=old_world, block=1),
+            packing.plan_layout(metas, world=new_world, block=1))
+
+
+def test_remap_flat_shrink_preserves_payload():
+    metas = [("float32", (1000,), 1000), ("float32", (37,), 37)]
+    old, new = _layouts(metas, 4, 2)
+    rng = np.random.default_rng(3)
+    flat = rng.standard_normal(old.padded_total).astype(np.float32)
+    # zero the per-segment tails like the packed master does
+    base = 0
+    for s in old.segments:
+        flat[base + s.used:base + s.padded] = 0.0
+        base += s.padded
+    out = elastic.remap_flat(flat, old, new, old_world=4, new_world=2)
+    assert out.size == new.padded_total
+    # grow back: the roundtrip is the identity on the old buffer
+    back = elastic.remap_flat(out, new, old, old_world=2, new_world=4)
+    np.testing.assert_array_equal(back, flat)
+
+
+def test_remap_flat_identity_with_tp_columns():
+    metas = [("float32", (256,), 256)]
+    lay = packing.plan_layout(metas, world=2, block=1)
+    rng = np.random.default_rng(5)
+    flat = rng.standard_normal(2 * 2 * (lay.padded_total // 2)).astype(
+        np.float32)
+    out = elastic.remap_flat(flat, lay, lay, old_world=2, new_world=2,
+                             n_columns=2)
+    np.testing.assert_array_equal(out, flat)
+
+
+def test_remap_flat_rejects_wrong_buffer_size():
+    metas = [("float32", (64,), 64)]
+    old, new = _layouts(metas, 2, 1)
+    with pytest.raises(ValueError, match="elements"):
+        elastic.remap_flat(np.zeros(7, np.float32), old, new,
+                           old_world=2, new_world=1)
+
+
+def test_remap_zero_state_moments_ride_the_same_map():
+    metas = [("float32", (500,), 500)]
+    old, new = _layouts(metas, 4, 2)
+    rng = np.random.default_rng(9)
+
+    def buf():
+        a = rng.standard_normal(old.padded_total).astype(np.float32)
+        base = 0
+        for s in old.segments:
+            a[base + s.used:base + s.padded] = 0.0
+            base += s.padded
+        return a
+
+    st = ZeroState(buf(), buf(), buf(), np.int32(11))
+    out = elastic.remap_zero_state(st, old, new, old_world=4, new_world=2)
+    assert int(out.step) == 11
+    for name in ("flat_param", "mu", "nu"):
+        np.testing.assert_array_equal(
+            getattr(out, name),
+            elastic.remap_flat(getattr(st, name), old, new,
+                               old_world=4, new_world=2))
+
+
+def test_remap_fallback_signal_is_value_error():
+    """The controller contract: a non-remappable transition raises
+    ValueError (the driver's cue to restore from checkpoint)."""
+    old = packing.plan_layout([("float32", (64,), 64)], world=2, block=1)
+    new = packing.plan_layout([("float32", (65,), 65)], world=2, block=1)
+    st = ZeroState(np.zeros(old.padded_total, np.float32),
+                   np.zeros(old.padded_total, np.float32),
+                   np.zeros(old.padded_total, np.float32), np.int32(0))
+    with pytest.raises(ValueError):
+        elastic.remap_zero_state(st, old, new, old_world=2, new_world=2)
+
+
+# ---------------------------------------------------------------------------
+# zero1_master_layout (host-side twin of collectives._zero1_layout)
+# ---------------------------------------------------------------------------
+
+def test_zero1_master_layout_divides_tp_leaves():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    pshape = {"emb": jax.ShapeDtypeStruct((8, 16), np.float32),
+              "w": jax.ShapeDtypeStruct((16, 32), np.float32),
+              "b": jax.ShapeDtypeStruct((32,), np.float32)}
+    specs = {"emb": P(None, "model"), "w": P("model", None),
+             "b": P("model")}
+    sizes = {"pod": 2, "data": 2, "model": 2}
+    lay = elastic.zero1_master_layout(pshape, specs, sizes)
+    # every leaf contributes its TP-local size
+    assert lay.used_total == (8 * 16 + 16 * 32 + 32) // 2
+    assert lay.padded_total % sizes["data"] == 0
+    # a data-only mesh packs the full (unsharded) leaves
+    lay1 = elastic.zero1_master_layout(
+        pshape, {k: P() for k in pshape}, {"data": 4})
+    assert lay1.used_total == 8 * 16 + 16 * 32 + 32
+    assert lay1.padded_total % 4 == 0
+
+
+def test_survivor_mesh_squeezes_unit_axis():
+    import jax
+
+    devs = np.array(jax.devices()[:1] * 8).reshape(2, 2, 2)
+    mesh = jax.sharding.Mesh(devs, ("pod", "data", "model"))
+    out = elastic.survivor_mesh(mesh, "pod", 1)
+    assert out.axis_names == ("data", "model")
+    assert out.devices.shape == (2, 2)
+    np.testing.assert_array_equal(np.asarray(out.devices),
+                                  devs[0])
+    # dropping from a >2 axis keeps the axis
+    devs3 = np.array(jax.devices()[:1] * 12).reshape(3, 2, 2)
+    mesh3 = jax.sharding.Mesh(devs3, ("pod", "data", "model"))
+    out3 = elastic.survivor_mesh(mesh3, "pod", 0)
+    assert out3.axis_names == ("pod", "data", "model")
+    assert out3.devices.shape == (2, 2, 2)

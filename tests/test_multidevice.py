@@ -35,3 +35,13 @@ def test_elastic_restart_8dev():
     resume reproduces the uninterrupted loss trajectory.  End-to-end
     training x3 runs — slow tier."""
     _run("check_elastic.py")
+
+
+@pytest.mark.slow
+def test_elastic_replan_8dev():
+    """Live elastic re-planning: kill a pod (and confirm a straggler
+    shrink), re-plan with PlanCache invalidation, slot-map remap of the
+    ZeRO-1 master (packing.pack poisoned -> no re-flatten), resume
+    bit-for-bit vs a from-scratch survivor-topology run."""
+    out = _run("check_elastic_replan.py", timeout=1500)
+    assert "bit-for-bit resume" in out

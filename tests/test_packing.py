@@ -307,3 +307,97 @@ def test_comm_alignment_floor():
         a = packing.comm_alignment(world, k, block)
         assert a % math.lcm(world * k, block) == 0
         assert a % (world * k) == 0 and a % block == 0
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard remap (remap_shard_ops / apply_remap_ops)
+# ---------------------------------------------------------------------------
+
+def _segment_truth(lay, shards, world):
+    """Reassemble each dtype segment from per-rank shards — the
+    ground-truth inverse of collectives.zero1_local_shard's slicing."""
+    segs = {}
+    base = 0
+    for seg in lay.segments:
+        per = seg.padded // world
+        segs[seg.dtype] = np.concatenate(
+            [np.asarray(s)[base:base + per] for s in shards])
+        base += per
+    return segs
+
+
+def _shards_from_segments(lay, segs, world):
+    per_rank = lay.padded_total // world
+    out = []
+    for r in range(world):
+        parts = []
+        for seg in lay.segments:
+            per = seg.padded // world
+            parts.append(segs[seg.dtype][r * per:(r + 1) * per])
+        out.append(np.concatenate(parts))
+        assert out[-1].size == per_rank
+    return out
+
+
+@hypothesis.given(n_leaves=st.integers(1, 8),
+                  old_world=st.sampled_from((1, 2, 4, 8)),
+                  new_world=st.sampled_from((1, 2, 3, 4, 8)),
+                  seed=st.integers(0, 10 ** 6))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_remap_preserves_segment_contents(n_leaves, old_world, new_world,
+                                          seed):
+    """Every payload element keeps its (segment, in-segment offset)
+    identity across the remap: reassembling the segments from the NEW
+    shards gives back the old segments (up to each side's zero tail)."""
+    rng = np.random.default_rng(seed)
+    metas = []
+    for _ in range(n_leaves):
+        dt = _DTYPES[rng.integers(len(_DTYPES))]
+        n = int(rng.integers(1, 200))
+        metas.append((dt, (n,), n))
+    # block=1 keeps padding minimal so odd worlds stay divisible
+    old = packing.plan_layout(metas, world=old_world, block=1)
+    new = packing.plan_layout(metas, world=new_world, block=1)
+    segs = {s.dtype: rng.standard_normal(s.padded).astype(np.float32)
+            for s in old.segments}
+    # tails beyond `used` are zero in the real master (pack zero-inits)
+    for s in old.segments:
+        segs[s.dtype][s.used:] = 0.0
+    old_shards = _shards_from_segments(old, segs, old_world)
+    ops = packing.remap_shard_ops(old, new, old_world=old_world,
+                                  new_world=new_world)
+    new_shards = packing.apply_remap_ops(
+        ops, old_shards, new.padded_total // new_world)
+    back = _segment_truth(new, new_shards, new_world)
+    for s_old, s_new in zip(old.segments, new.segments):
+        n = min(s_old.padded, s_new.padded)
+        np.testing.assert_array_equal(back[s_new.dtype][:n],
+                                      segs[s_old.dtype][:n])
+        assert np.all(back[s_new.dtype][s_new.used:] == 0.0)
+
+
+def test_remap_identity_world():
+    metas = [("float32", (100,), 100), ("bfloat16", (64,), 64)]
+    lay = packing.plan_layout(metas, world=4, block=1)
+    rng = np.random.default_rng(0)
+    shards = [rng.standard_normal(lay.padded_total // 4).astype(np.float32)
+              for _ in range(4)]
+    ops = packing.remap_shard_ops(lay, lay, old_world=4, new_world=4)
+    out = packing.apply_remap_ops(ops, shards, lay.padded_total // 4)
+    for a, b in zip(out, shards):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_remap_rejects_different_leaf_contents():
+    a = packing.plan_layout([("float32", (100,), 100)], world=2, block=1)
+    b = packing.plan_layout([("float32", (101,), 101)], world=2, block=1)
+    with pytest.raises(ValueError, match="different leaf contents"):
+        packing.remap_shard_ops(a, b, old_world=2, new_world=2)
+
+
+def test_remap_rejects_indivisible_world():
+    lay = packing.plan_layout([("float32", (100,), 100)], world=2, block=1)
+    # padded for world=2 is even; world=7 won't divide it
+    assert lay.segments[0].padded % 7 != 0
+    with pytest.raises(ValueError, match="divisib"):
+        packing.remap_shard_ops(lay, lay, old_world=2, new_world=7)

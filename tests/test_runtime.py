@@ -142,3 +142,137 @@ def test_straggler_monitor_synthetic_skewed_trace():
     for _ in range(12):
         steady.observe(0.4)
     assert steady.flagged == []
+
+
+def test_watchdog_rollback_clears_history():
+    """Regression: rollback used to keep the pre-blowup history, so a
+    healthy loss after restoring an *earlier* checkpoint (higher loss,
+    by construction) re-flagged as a spike against the stale median —
+    and the spike branch had even appended the blowup values."""
+    wd = NaNWatchdog(WatchdogConfig(max_bad_steps=3))
+    for loss in (100, 50, 20, 10, 5, 2, 1, 0.5, 0.2, 0.1):
+        assert wd.observe(float(loss)) == "ok"
+    assert wd.observe(float("nan")) == "skip"
+    assert wd.observe(float("nan")) == "skip"
+    assert wd.observe(float("nan")) == "rollback"
+    assert wd.history == [] and wd.bad_streak == 0
+    # post-rewind stream restarts near the old checkpoint's loss: fine
+    assert wd.observe(100.0) == "ok"
+
+
+def test_watchdog_spike_rollback_resets_streak():
+    wd = NaNWatchdog(WatchdogConfig(max_bad_steps=2, loss_spike_factor=5.0))
+    for _ in range(10):
+        assert wd.observe(1.0) == "ok"
+    assert wd.observe(50.0) == "skip"
+    assert wd.observe(60.0) == "rollback"
+    # the blowup values must not linger in the median window
+    assert wd.history == [] and wd.bad_streak == 0
+    assert wd.observe(1.0) == "ok"
+
+
+def test_straggler_stop_without_start():
+    """Regression: stop() before any start() raised TypeError
+    (monotonic() - None).  It is a no-observation now — the first loop
+    iteration after an elastic reset hits exactly this."""
+    mon = StragglerMonitor()
+    assert mon.stop() is False
+    assert mon.times == []
+
+
+def test_straggler_reset():
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(8):
+        mon.observe(0.1)
+    assert mon.observe(0.4)
+    assert mon.flagged
+    mon.start()
+    mon.reset()
+    assert mon.times == [] and mon.flagged == []
+    assert mon.stop() is False        # pending start() was discarded
+    # _step keeps counting: later flags stay aligned with global step
+    before = mon._step
+    mon.observe(0.1)
+    assert mon._step == before + 1
+
+
+def test_checkpoint_crash_between_renames_recovers(tmp_path):
+    """Regression: _write used to rmtree the live checkpoint before
+    renaming the replacement in — a crash in between lost the step
+    entirely.  Now the old copy is moved aside first; _recover() on the
+    next manager renames an orphaned .old back."""
+    from repro.runtime import checkpoint as ckpt_mod
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(5, t, extra={"gen": 1})
+
+    def boom(tag):
+        raise RuntimeError(f"injected crash at {tag}")
+
+    ckpt_mod._CRASH_HOOK = boom
+    try:
+        with pytest.raises(RuntimeError, match="injected crash"):
+            mgr.save(5, jax.tree.map(lambda x: x * 0, t), extra={"gen": 2})
+    finally:
+        ckpt_mod._CRASH_HOOK = None
+    # crashed between the unpublish and publish renames: only the .old
+    # copy survives on disk
+    assert not (tmp_path / "step_5").exists()
+    assert list(tmp_path.glob("step_5.old.*"))
+    mgr2 = CheckpointManager(tmp_path)   # runs _recover()
+    assert mgr2.steps() == [5]
+    step, back, extra = mgr2.restore(t)
+    assert step == 5 and extra["gen"] == 1
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(t["w"]))
+    assert not list(tmp_path.glob("step_*.old.*"))
+
+
+def test_checkpoint_crash_on_first_publish_keeps_older_step(tmp_path):
+    from repro.runtime import checkpoint as ckpt_mod
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    ckpt_mod._CRASH_HOOK = lambda tag: (_ for _ in ()).throw(OSError("kill"))
+    try:
+        with pytest.raises(OSError):
+            mgr.save(2, t)
+    finally:
+        ckpt_mod._CRASH_HOOK = None
+    # step 2 never published (tmp only); step 1 still the latest
+    assert mgr.steps() == [1]
+    assert CheckpointManager(tmp_path).steps() == [1]
+
+
+def test_checkpoint_restore_names_mismatch_is_clear(tmp_path):
+    """Restoring into a tree whose leaf names differ must raise a
+    ValueError naming the missing/extra leaves — not an opaque
+    KeyError from the npz lookup."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones((2,)), "b": jnp.zeros((3,))})
+    with pytest.raises(ValueError) as ei:
+        mgr.restore({"w": jnp.ones((2,)), "scale": jnp.zeros((3,))})
+    msg = str(ei.value)
+    assert "scale" in msg and "b" in msg and "does not match" in msg
+
+
+def test_checkpoint_bf16_restore_to_new_sharding(tmp_path):
+    """bf16 leaves ride npz as a uint16 view; the view must roundtrip
+    through an elastic restore (explicit shardings for a different
+    'mesh') with dtype and bits intact."""
+    import ml_dtypes
+
+    mgr = CheckpointManager(tmp_path)
+    vals = np.arange(16, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    t = {"p": jnp.asarray(vals), "s": jnp.float32(3.0)}
+    mgr.save(2, t)
+    sh = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+    step, back, _ = mgr.restore(t, shardings=sh)
+    assert step == 2
+    assert back["p"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(back["p"]).view(np.uint16), vals.view(np.uint16))
+    assert back["p"].sharding == sh["p"]

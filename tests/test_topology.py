@@ -273,3 +273,52 @@ def test_p2p_mechanism_ordering():
     assert t_host > 3 * t_het  # paper: >6x bandwidth; conservative 3x
     t_native = cost_model.p2p_time(src, src, n, "native")
     assert t_native <= t_het * 1.2
+
+
+# ---------------------------------------------------------------------------
+# Elastic survivor derivation (runtime/elastic.py feeds on these)
+# ---------------------------------------------------------------------------
+
+def test_drop_cluster_survivor():
+    topo = topology.paper_testbed()
+    survivor = topo.drop_cluster(1)
+    assert survivor.n_clusters == topo.n_clusters - 1
+    assert [c.name for c in survivor.clusters] == \
+        [c.name for c in topo.clusters if c is not topo.clusters[1]]
+    assert survivor.fingerprint() != topo.fingerprint()
+    # the original is untouched (frozen dataclass semantics)
+    assert topo.n_clusters == 4
+
+
+def test_drop_cluster_errors():
+    topo = topology.tpu_multipod(2)
+    with pytest.raises(ValueError):
+        topo.drop_cluster(2)
+    with pytest.raises(ValueError):
+        topo.drop_cluster(-1)
+    only = topo.drop_cluster(0)
+    with pytest.raises(ValueError):
+        only.drop_cluster(0)  # no survivor topology
+
+
+def test_shrink_cluster_survivor():
+    topo = topology.paper_testbed()
+    c0 = topo.clusters[0]
+    survivor = topo.shrink_cluster(0, c0.n_nodes // 2)
+    assert survivor.n_clusters == topo.n_clusters
+    assert survivor.clusters[0].n_nodes == c0.n_nodes // 2
+    assert survivor.clusters[0].name == c0.name
+    assert survivor.n_ranks < topo.n_ranks
+    assert survivor.fingerprint() != topo.fingerprint()
+    # keeping every node is the identity
+    assert topo.shrink_cluster(0, c0.n_nodes) is topo
+
+
+def test_shrink_cluster_errors():
+    topo = topology.paper_testbed()
+    with pytest.raises(ValueError):
+        topo.shrink_cluster(0, 0)
+    with pytest.raises(ValueError):
+        topo.shrink_cluster(0, topo.clusters[0].n_nodes + 1)
+    with pytest.raises(ValueError):
+        topo.shrink_cluster(99, 1)

@@ -129,8 +129,8 @@ def plan_bench_section(bench_path: pathlib.Path,
     print(meta.get("measured", ""))
     print()
     print("| scale | devices | vectorized ms | scalar ms | speedup "
-          "| cache hit ms | validated via |")
-    print("|---|---|---|---|---|---|---|")
+          "| cache hit ms | replan ms | validated via |")
+    print("|---|---|---|---|---|---|---|---|")
     for tag, row in scales.items():
         vec = row.get("vectorized_s")
         sca = row.get("scalar_s")
@@ -140,6 +140,7 @@ def plan_bench_section(bench_path: pathlib.Path,
               f"| {f'{sca * 1e3:.1f}' if sca is not None else '-'} "
               f"| {f'{spd}x' if spd is not None else '-'} "
               f"| {row.get('cache_hit_ms', '-')} "
+              f"| {row.get('replan_ms', '-')} "
               f"| {row.get('validated_via', '-')} |")
     overall = acc.pop("pass", None)
     if acc:
