@@ -185,6 +185,7 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
     if isinstance(step, schedule_ir.IntraReduceScatter):
         if step.model_only:
             return buf
+        buf = primitives.apply_inject(buf, "intra_rs")
         return primitives.hom_reduce_scatter(buf, intra)
     if isinstance(step, (schedule_ir.IntraAllGather, schedule_ir.IntraBcast)):
         if getattr(step, "model_only", False):
@@ -193,6 +194,7 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
     if isinstance(step, schedule_ir.C2CRed):
         if pod is None:
             return buf
+        buf = primitives.apply_inject(buf, "c2c")
         w, ctx.weight = ctx.weight, None
         if step.scatter:
             # border-communicator leg 1: combining reduce-scatter over
@@ -216,6 +218,7 @@ def _exec_step(step: schedule_ir.Step, buf: jax.Array, cfg: CommConfig,
     if isinstance(step, schedule_ir.C2CCpy):
         if pod is None:
             return buf
+        buf = primitives.apply_inject(buf, "c2c")
         if step.gather:
             # border-communicator leg 2: ring-redistribute the owned,
             # fully reduced shards (values already codec-rounded, so the
@@ -264,11 +267,13 @@ def hier_psum(x: jax.Array, cfg: CommConfig) -> jax.Array:
     if cfg.cluster_weights is not None:
         sched = schedule_ir.with_cluster_scale(sched)
     if any(isinstance(s, schedule_ir.Flat) for s in sched.steps):
-        return lax.psum(_apply_cluster_weight(x, cfg), cfg.dp_axes)
+        return lax.psum(primitives.apply_inject(
+            _apply_cluster_weight(x, cfg), "flat"), cfg.dp_axes)
     if cfg.pod_axis is None and sched.pipelined:
         # Degenerate 1-cluster pipeline: there is no C2C phase to hide,
         # so the chunk loop would only add α costs.  Plain intra psum.
-        return lax.psum(_apply_cluster_weight(x, cfg), cfg.dp_axes)
+        return lax.psum(primitives.apply_inject(
+            _apply_cluster_weight(x, cfg), "flat"), cfg.dp_axes)
     isize = primitives.axis_size(cfg.intra_axis)
     flat, pad = _pad_to(x.astype(x.dtype), isize)
     out = _exec_steps(sched.steps, flat, cfg)

@@ -162,6 +162,13 @@ def pipelined_hier_psum(flat: jax.Array, cfg, use_ring: bool = False,
     shard_n = flat.size // isize
     chunk = shard_n // k
     encode, transfer = _codec_stages(cfg, flat, chunk, use_ring, weight)
+    # chaos seam: encoded chunks pass through the injection hook on their
+    # way onto the DCN — for int8 the hook sees the (q, scale) pair, so
+    # bit-flips land in real int8 blocks (identity when no hook installed)
+    _raw_transfer = transfer
+
+    def transfer(enc):
+        return _raw_transfer(primitives.apply_inject(enc, "chunk_c2c"))
     # One intra ReduceScatter / AllGather on the whole payload: on the
     # emulated backend splitting the ICI phases k-ways buys no overlap
     # (XLA executes the per-device program in order) and pays an extra

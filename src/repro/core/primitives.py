@@ -19,9 +19,55 @@ whose mesh carries the axis names being passed.  On the TPU mapping:
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection hook (chaos engine seam)
+# ---------------------------------------------------------------------------
+#
+# The collective executors (core/collectives.py, core/pipelined.py) pass
+# every payload about to enter a transport phase through
+# ``apply_inject(buf, phase)``.  With no hook installed this is the
+# identity and costs nothing at trace time.  The chaos engine
+# (runtime/faults.py) installs a hook to corrupt payloads (NaN
+# gradients, bit-flipped int8 blocks) *at trace time*: executors run
+# inside jit/shard_map, so a hook only takes effect on functions traced
+# while it is installed — the harness builds (and first-calls, which is
+# when tracing happens) a dedicated faulted step inside the
+# ``inject_hook`` context and uses it only on fault steps.
+#
+# Phases: "flat" (flat psum input), "intra_rs" (before the intra
+# ReduceScatter), "c2c" (before a C2C reduce/copy), "chunk_c2c" (the
+# encoded chunk entering the pipelined C2C transfer — for int8 this is
+# the (q, scale) pair, which is how bit-flips land in real int8 blocks).
+
+_INJECT_HOOK = None
+
+
+@contextlib.contextmanager
+def inject_hook(fn):
+    """Install ``fn(buf, phase) -> buf`` as the payload-injection hook
+    for the duration of the context.  Trace-time: see module note."""
+    global _INJECT_HOOK
+    prev = _INJECT_HOOK
+    _INJECT_HOOK = fn
+    try:
+        yield
+    finally:
+        _INJECT_HOOK = prev
+
+
+def apply_inject(buf, phase: str):
+    """Pass a payload through the installed injection hook (identity
+    when none is installed)."""
+    if _INJECT_HOOK is None:
+        return buf
+    return _INJECT_HOOK(buf, phase)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import math
 from typing import Sequence
 
 
@@ -205,6 +206,30 @@ class HetTopology:
             return self
         survivor = dataclasses.replace(c, n_nodes=int(n_nodes))
         return HetTopology(self.clusters[:index] + (survivor,)
+                           + self.clusters[index + 1:])
+
+    def derate_cluster(self, index: int, nic_Bps: float) -> "HetTopology":
+        """Topology with cluster ``index``'s per-NIC bandwidth replaced
+        by a *measured* value (degraded-link recovery): the same shape,
+        but every C2C term priced at what the link actually delivers.
+        ``nic_Bps`` is in the fingerprint, so the result has a new
+        ``fingerprint()`` — the elastic controller invalidates the old
+        one's ``PlanCache`` lines and re-plans against this, exactly as
+        for :meth:`drop_cluster`."""
+        if not 0 <= index < self.n_clusters:
+            raise ValueError(
+                f"derate_cluster: index {index} out of range "
+                f"[0, {self.n_clusters})")
+        if not (isinstance(nic_Bps, (int, float)) and nic_Bps > 0
+                and math.isfinite(nic_Bps)):
+            raise ValueError(
+                f"derate_cluster: nic_Bps must be finite and positive, "
+                f"got {nic_Bps!r}")
+        c = self.clusters[index]
+        if nic_Bps == c.nic_Bps:
+            return self
+        derated = dataclasses.replace(c, nic_Bps=float(nic_Bps))
+        return HetTopology(self.clusters[:index] + (derated,)
                            + self.clusters[index + 1:])
 
     def balanced_subgroups(self, tol: float = 0.34) -> "HetTopology":

@@ -196,10 +196,33 @@ def _sim_step_time(step: schedule_ir.Step, topo: HetTopology, nbytes: float,
     return 0.0  # Scale: nb-sized multiply folded into the codec, free
 
 
+def apply_link_scale(topo: HetTopology,
+                     link_scale: dict[int, float]) -> HetTopology:
+    """Fabric with each cluster ``ci``'s per-NIC bandwidth multiplied by
+    ``link_scale[ci]`` — how the simulator (and the planner, via
+    ``HetTopology.derate_cluster``) prices a *degraded* link: a fault
+    that inflates beta by k is a scale of 1/k.  Scales must be finite
+    and positive; a scale of 1.0 is a no-op for that cluster."""
+    out = topo
+    for ci, scale in sorted(link_scale.items()):
+        if not (scale > 0 and math.isfinite(scale)):
+            raise ValueError(
+                f"apply_link_scale: scale for cluster {ci} must be "
+                f"finite and positive, got {scale!r}")
+        if not 0 <= ci < out.n_clusters:
+            raise ValueError(
+                f"apply_link_scale: cluster index {ci} out of range "
+                f"[0, {out.n_clusters})")
+        if scale != 1.0:
+            out = out.derate_cluster(ci, out.clusters[ci].nic_Bps * scale)
+    return out
+
+
 def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
                       nbytes_per_rank: int, mechanism: str = "hetccl",
                       chunk_bytes: int = 4 << 20,
-                      level: str = "device") -> float:
+                      level: str = "device",
+                      link_scale: dict[int, float] | None = None) -> float:
     """Simulation interpreter of the schedule IR (DESIGN.md §9): walk
     the same steps the executor runs and the cost model prices through
     the event queue.  Each step is a pipeline stage with a resource
@@ -217,7 +240,14 @@ def simulate_schedule(sched: schedule_ir.Schedule, topo: HetTopology,
     identical within a fold group, the cluster level is *exact* for
     every schedule we emit (asserted against the device level in
     tests), while scaling with the number of distinct cluster specs
-    instead of the device count."""
+    instead of the device count.
+
+    ``link_scale`` prices a degraded fabric: ``{cluster_index: factor}``
+    NIC-bandwidth multipliers applied via :func:`apply_link_scale`
+    before the walk (the chaos engine uses this to ask "what does this
+    schedule cost once link ci runs at beta x k")."""
+    if link_scale:
+        topo = apply_link_scale(topo, link_scale)
     steps, k = sched.unrolled()
     k = max(1, min(k, nbytes_per_rank))   # never more chunks than bytes
     per = max(1, nbytes_per_rank // k)

@@ -205,6 +205,100 @@ def auto_plan(arch: str, *, multi_pod: bool, comm_mode: str = "hier",
     return plan, big.candidate, a2a_plan, pc.stats()
 
 
+def _dryrun_topology(multi_pod: bool, border_scarce: bool):
+    from repro.core import topology
+    from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
+
+    n_pods = PRODUCTION_MULTI_SHAPE[0] if multi_pod else 1
+    chips_per_pod = PRODUCTION_MULTI_SHAPE[1] * PRODUCTION_MULTI_SHAPE[2]
+    return (topology.tpu_multipod_scarce(n_pods, chips_per_pod)
+            if border_scarce else
+            topology.tpu_multipod(n_pods, chips_per_pod))
+
+
+def guard_section(plan, *, mode: str, chunks: int,
+                  compression: str | None, n_chips: int):
+    """--guard: the collective guard's pre-launch view of this cell —
+    the schedule digest every rank must agree on (desync detector) and
+    the comm deadline the guard would arm from the cost model's
+    prediction.  A dry run lowers one process, so all ranks digest
+    identically; the chaos harness perturbs one digest to prove the
+    detector fires."""
+    from repro.core.schedule import STRUCTURAL_MODES, build_schedule
+    from repro.runtime import guard as guard_lib
+
+    if plan is not None:
+        digest = guard_lib.schedule_digest(plan)
+        predicted = plan.predicted_step_s
+    else:
+        sched = build_schedule("all_reduce",
+                               STRUCTURAL_MODES.get(mode, mode),
+                               chunks, compression)
+        digest = guard_lib.schedule_digest(sched)
+        predicted = None
+    gcfg = guard_lib.GuardConfig()
+    ok, _, outliers = guard_lib.digest_agreement(
+        {r: digest for r in range(max(1, n_chips))})
+    return {"schedule_digest": digest, "ranks": int(max(1, n_chips)),
+            "agreement": bool(ok), "outliers": list(outliers),
+            "deadline_margin": gcfg.deadline_margin,
+            "deadline_s": (None if predicted is None else
+                           max(gcfg.min_deadline_s,
+                               gcfg.deadline_margin * predicted))}
+
+
+def chaos_section(seed: int, arch: str, *, multi_pod: bool,
+                  border_scarce: bool, plan, mode: str, chunks: int,
+                  compression: str | None, n_steps: int = 32):
+    """--chaos: the seeded fault plan this cell would face, plus the
+    degraded-fabric pricing — the gradient sync simulated on the
+    nominal topology vs. on the fault plan's worst active link
+    degradation (``simulate_schedule(link_scale=...)``), which is the
+    slowdown the guard's link-health EWMA must detect and the elastic
+    re-plan must price around."""
+    from repro.configs import get_config
+    from repro.core.schedule import STRUCTURAL_MODES, build_schedule
+    from repro.core.transport_sim import simulate_schedule
+    from repro.launch.mesh import PRODUCTION_MULTI_SHAPE
+    from repro.runtime.faults import FaultPlan
+
+    topo = _dryrun_topology(multi_pod, border_scarce)
+    fplan = FaultPlan.generate(seed, n_steps,
+                               n_clusters=topo.n_clusters,
+                               n_ranks=topo.n_ranks)
+    if plan is not None:
+        b = max(plan.buckets, key=lambda x: x.nbytes)
+        sched_mode, nch, comp = (b.candidate.mode, b.candidate.n_chunks,
+                                 b.candidate.compression)
+        nbytes = b.nbytes
+    else:
+        sched_mode, nch, comp = STRUCTURAL_MODES.get(mode, mode), chunks, \
+            compression
+        nbytes = max(1, get_config(arch).param_count() * 4
+                     // PRODUCTION_MULTI_SHAPE[2])
+    sched = build_schedule("all_reduce", sched_mode, nch, comp)
+    # worst concurrent degradation over the plan's timeline
+    worst: dict[int, float] = {}
+    for e in fplan.events:
+        if e.kind == "degraded_link":
+            for ci, s in fplan.link_scale(e.step).items():
+                worst[ci] = min(worst.get(ci, 1.0), s)
+    nominal_s = simulate_schedule(sched, topo, nbytes, level="cluster")
+    degraded_s = (simulate_schedule(sched, topo, nbytes, level="cluster",
+                                    link_scale=worst)
+                  if worst else nominal_s)
+    return {"seed": int(seed), "n_steps": int(n_steps),
+            "events": fplan.summary()["events"],
+            "schedule": {"mode": sched_mode, "n_chunks": nch,
+                         "compression": comp, "nbytes": int(nbytes)},
+            "degraded_links": {str(ci): round(1.0 / s, 3)
+                               for ci, s in sorted(worst.items())},
+            "nominal_sync_s": nominal_s,
+            "degraded_sync_s": degraded_s,
+            "slowdown": (degraded_s / nominal_s if nominal_s > 0
+                         else None)}
+
+
 def elastic_replan_report(arch: str, *, multi_pod: bool,
                           comm_mode: str = "hier",
                           border_scarce: bool = False,
@@ -436,11 +530,43 @@ def main():
                          "run the elastic re-plan; the transition's "
                          "ReplanReport lands in the result JSON under "
                          "'replan'")
+    ap.add_argument("--guard", action="store_true",
+                    help="emit the collective guard's pre-launch view "
+                         "in the result JSON under 'guard': the "
+                         "schedule digest every rank must agree on and "
+                         "the comm deadline armed from the cost model's "
+                         "prediction (runtime/guard.py)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="emit the seeded fault plan and the degraded-"
+                         "fabric pricing (nominal vs worst injected "
+                         "link degradation, simulate_schedule "
+                         "link_scale) in the result JSON under 'chaos'; "
+                         "implies --guard")
+    ap.add_argument("--watchdog-max-bad-steps", type=int, default=3,
+                    help="NaN watchdog knob (train.py executes it; the "
+                         "dry run records it in the run header)")
+    ap.add_argument("--watchdog-spike-factor", type=float, default=10.0,
+                    help="NaN watchdog spike ratio (run header)")
+    ap.add_argument("--watchdog-window", type=int, default=64,
+                    help="NaN watchdog median window (run header)")
+    ap.add_argument("--straggler-factor", type=float, default=3.0,
+                    help="straggler monitor factor (run header)")
+    ap.add_argument("--straggler-window", type=int, default=32,
+                    help="straggler monitor median window (run header)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     if args.skew == "auto" and args.plan != "auto":
         ap.error("--skew auto requires --plan auto")
+    use_guard = args.guard or args.chaos is not None
+    print(f"[run] watchdog(max_bad_steps={args.watchdog_max_bad_steps}, "
+          f"spike_factor={args.watchdog_spike_factor:g}, "
+          f"window={args.watchdog_window}) "
+          f"straggler(factor={args.straggler_factor:g}, "
+          f"window={args.straggler_window}) "
+          f"guard={'on' if use_guard else 'off'} "
+          f"chaos={args.chaos if args.chaos is not None else 'off'}",
+          flush=True)
     mode, chunks, comp, plan = (args.mode or "fsdp", args.chunks,
                                 args.compression, None)
     moe_a2a_mode = "flat"
@@ -505,6 +631,24 @@ def main():
                 plan_cache_path=args.plan_cache)
             res["replan"] = rep.summary()
             print(rep.describe(), flush=True)
+        if use_guard:
+            res["guard"] = guard_section(
+                plan, mode=mode, chunks=chunks, compression=comp,
+                n_chips=res.get("n_chips", 1))
+            print(f"[guard] schedule digest "
+                  f"{res['guard']['schedule_digest']} "
+                  f"({res['guard']['ranks']} rank(s) agree)", flush=True)
+        if args.chaos is not None:
+            res["chaos"] = chaos_section(
+                args.chaos, args.arch, multi_pod=args.mesh == "multi",
+                border_scarce=args.border_scarce, plan=plan, mode=mode,
+                chunks=chunks, compression=comp)
+            ch = res["chaos"]
+            print(f"[chaos] seed {args.chaos}: "
+                  f"{len(ch['events'])} fault(s); sync "
+                  f"{ch['nominal_sync_s'] * 1e3:.2f} ms nominal -> "
+                  f"{ch['degraded_sync_s'] * 1e3:.2f} ms degraded "
+                  f"(x{ch['slowdown']:.2f})", flush=True)
         if cache_stats is not None:
             res["plan_cache"] = cache_stats
     except Exception as e:  # noqa: BLE001

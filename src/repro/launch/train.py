@@ -41,7 +41,8 @@ from repro.data import DataConfig, Prefetcher  # noqa: E402
 from repro.launch.mesh import make_production_mesh, make_test_mesh, runtime_for_mesh  # noqa: E402
 from repro.models import Model  # noqa: E402
 from repro.parallel.sharding import Runtime  # noqa: E402
-from repro.runtime import CheckpointManager, NaNWatchdog, StragglerMonitor  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    CheckpointManager, NaNWatchdog, StragglerMonitor, WatchdogConfig)
 from repro.train import TrainConfig, make_train_step  # noqa: E402
 from repro.train.optimizer import OptConfig  # noqa: E402
 
@@ -101,7 +102,39 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the collective guard (runtime/guard.py): "
+                         "per-step comm deadline (cost-model prediction "
+                         "x margin, floored by wall-clock calibration), "
+                         "pre-launch schedule-digest agreement, payload "
+                         "checksums, bounded retry on transient transfer "
+                         "failures, and per-link bandwidth EWMAs whose "
+                         "confirmed degraded verdicts escalate to the "
+                         "elastic controller (re-plan needs --elastic)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="seeded chaos engine (runtime/faults.py): "
+                         "inject one fault per class (degraded link, "
+                         "transient transfer failure, rank hang, NaN "
+                         "payload, bit flip) at deterministic steps; "
+                         "implies --guard.  Requires a mesh (--mesh "
+                         "test|production)")
+    ap.add_argument("--watchdog-max-bad-steps", type=int, default=3,
+                    help="NaN watchdog: consecutive non-finite/spiking "
+                         "losses before rollback")
+    ap.add_argument("--watchdog-spike-factor", type=float, default=10.0,
+                    help="NaN watchdog: loss vs trailing median ratio "
+                         "flagged as a spike")
+    ap.add_argument("--watchdog-window", type=int, default=64,
+                    help="NaN watchdog: trailing median window (steps)")
+    ap.add_argument("--straggler-factor", type=float, default=3.0,
+                    help="straggler monitor: step slower than factor x "
+                         "trailing median is flagged")
+    ap.add_argument("--straggler-window", type=int, default=32,
+                    help="straggler monitor: trailing median window "
+                         "(steps)")
     args = ap.parse_args(argv)
+    if args.chaos is not None and args.mesh == "none":
+        ap.error("--chaos requires a mesh (--mesh test|production)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.mesh == "none":
@@ -316,8 +349,21 @@ def main(argv=None):
         start, (params, opt), extra = ckpt.restore((params, opt))
         print(f"resumed from step {start}")
 
-    watchdog = NaNWatchdog()
-    straggler = StragglerMonitor()
+    watchdog = NaNWatchdog(WatchdogConfig(
+        max_bad_steps=args.watchdog_max_bad_steps,
+        loss_spike_factor=args.watchdog_spike_factor,
+        window=args.watchdog_window))
+    straggler = StragglerMonitor(factor=args.straggler_factor,
+                                 window=args.straggler_window)
+    use_guard = args.guard or args.chaos is not None
+    print(f"[run] watchdog(max_bad_steps={args.watchdog_max_bad_steps}, "
+          f"spike_factor={args.watchdog_spike_factor:g}, "
+          f"window={args.watchdog_window}) "
+          f"straggler(factor={args.straggler_factor:g}, "
+          f"window={args.straggler_window}) "
+          f"guard={'on' if use_guard else 'off'} "
+          f"chaos={args.chaos if args.chaos is not None else 'off'}",
+          flush=True)
 
     elastic_ctl = None
     if args.elastic and mesh is not None:
@@ -346,6 +392,61 @@ def main(argv=None):
         elastic_ctl = elastic_lib.ElasticController(
             e_topo, [e_grad], plan_cache=e_cache, straggler=straggler,
             plan_kw=e_kw)
+
+    guard = None
+    injector = None
+    g_topo = None
+    g_n_ranks = 1
+    g_grad = 1
+    if use_guard:
+        from repro.core import topology as topology_lib
+        from repro.core.collectives import CommConfig
+        from repro.runtime import faults as faults_lib
+        from repro.runtime import guard as guard_lib
+
+        g_sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                   if mesh is not None else {})
+        g_n_ranks = (int(np.prod(list(mesh.devices.shape)))
+                     if mesh is not None else 1)
+        g_pods = g_sizes.get("pod", 1)
+        g_topo = topology_lib.tpu_multipod(
+            max(1, g_pods), max(1, g_n_ranks // max(1, g_pods)))
+        g_grad = max(1, cfg.param_count() * 4 // g_sizes.get("model", 1))
+        guard = guard_lib.CollectiveGuard(
+            guard_lib.GuardConfig(),
+            predicted_step_s=(plan.predicted_step_s
+                              if plan is not None else None),
+            nominal_Bps={i: c.nic_Bps
+                         for i, c in enumerate(g_topo.clusters)},
+            expected_ranks=range(g_n_ranks),
+            elastic=elastic_ctl)
+        # pre-launch desync check: every rank digests the schedule it is
+        # about to run (this single-process emulation computes one digest
+        # for all ranks; a real deployment gathers them over the control
+        # plane, and the chaos harness perturbs one to prove detection)
+        dsrc = plan if plan is not None else CommConfig(
+            mode=mode, pod_axis="pod" if g_pods > 1 else None,
+            intra_axis="data", n_chunks=tcfg.n_chunks,
+            compression=args.compression,
+            cluster_weights=(tuple(cluster_weights)
+                             if cluster_weights else None))
+        digest = guard_lib.schedule_digest(dsrc)
+        ev = guard.check_agreement(start,
+                                   {r: digest for r in range(g_n_ranks)})
+        print(f"[guard] schedule digest {digest} "
+              + (f"DESYNC: {ev.detail}" if ev is not None
+                 else f"({g_n_ranks} rank(s) agree)"), flush=True)
+        if args.chaos is not None:
+            fplan = faults_lib.FaultPlan.generate(
+                args.chaos, args.steps, n_clusters=g_topo.n_clusters,
+                n_ranks=g_n_ranks)
+            injector = faults_lib.FaultInjector(fplan)
+            print("\n".join(
+                f"[chaos] seed {args.chaos}: {e.kind} @ step {e.step}"
+                f" x{e.duration}"
+                + (f" cluster={e.cluster}" if e.cluster is not None else "")
+                + (f" rank={e.rank}" if e.rank is not None else "")
+                for e in fplan.events), flush=True)
 
     def _pod_failover(at_step, mesh, model, tcfg, params, opt):
         """Kill the last pod: re-plan against the survivors, rebuild
@@ -450,6 +551,7 @@ def main(argv=None):
     losses = []
     injected_failure = False
     elastic_remap_path = "slot_map"
+    fresh_trace = True  # step 0 compiles; its wall time is not a hang
     try:
         t_start = time.time()
         step = start
@@ -462,12 +564,100 @@ def main(argv=None):
                 (mesh, model, tcfg, step_fn, params, opt,
                  elastic_remap_path) = _pod_failover(
                      step, mesh, model, tcfg, params, opt)
+                fresh_trace = True
             sid, batch = pre.get(timeout=30.0)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            retraced, fresh_trace = fresh_trace, False
+            chaos_hook = None
+            stalled_s = 0.0
+            if injector is not None:
+                # a hung rank stalls past the guard's deadline (the
+                # in-band emulation of a silent rank in one process)
+                stalled_s = injector.stall(
+                    step, guard.deadline_s or guard.cfg.min_deadline_s)
+                chaos_hook = injector.corruption_hook(
+                    step, axes=mesh.axis_names)
             straggler.start()
-            new_params, new_opt, m = step_fn(params, opt, batch)
+            timing = {}
+
+            def _run(params=params, opt=opt, batch=batch, hook=chaos_hook):
+                t0 = time.monotonic()
+                if hook is not None:
+                    # trace-time corruption: build and FIRST-call a fresh
+                    # step under the hook (tracing happens at first call;
+                    # the regular step_fn stays clean for the next step)
+                    from repro.core import primitives
+                    with primitives.inject_hook(hook):
+                        f_step, _ = builder_or_step(pshape)
+                        out = f_step(params, opt, batch)
+                else:
+                    out = step_fn(params, opt, batch)
+                timing["dt"] = time.monotonic() - t0
+                return out
+
+            if guard is not None:
+                thunk = (_run if injector is None
+                         else injector.wrap_transfer(step, _run))
+                new_params, new_opt, m = guard.retry(step, thunk)
+            else:
+                new_params, new_opt, m = _run()
             loss = float(m["loss"])
             slow = straggler.stop()
+            if guard is not None:
+                hung = (injector.hung_ranks(step)
+                        if injector is not None else ())
+                for r in range(g_n_ranks):
+                    if r not in hung:
+                        guard.heartbeat(step, r)
+                if chaos_hook is None and not retraced:
+                    # a retrace step's wall time is dominated by
+                    # compilation, not the fabric — not a hang signal
+                    gev = guard.observe_step_time(
+                        step, timing.get("dt", 0.0) + stalled_s)
+                    if gev is not None:
+                        print(f"[guard] {gev.kind} @ step {step}: "
+                              f"{gev.detail} ({gev.attribution})",
+                              flush=True)
+                # the reduced metrics ride along: with the finite gate a
+                # NaN payload never reaches new_params — the synced
+                # grad_norm is where it surfaces
+                gev = guard.check_payload(
+                    step, {"grad_norm": m["grad_norm"],
+                           "loss": m["loss"], "params": new_params})
+                if gev is not None:
+                    print(f"[guard] {gev.kind} @ step {step}: "
+                          f"{gev.detail}", flush=True)
+                if g_topo is not None and g_topo.n_clusters > 1:
+                    # emulated link-health feed: the nominal C2C time
+                    # for this step's gradient payload (size varied so
+                    # the alpha-beta fit is well-posed), inflated by any
+                    # active degradation — exactly the observation a
+                    # slow wire produces on a real fabric
+                    nbytes = int(g_grad * (1.0 + 0.25 * (step % 4))) + 1
+                    for ci, cl in enumerate(g_topo.clusters):
+                        t_obs = nbytes / cl.nic_Bps
+                        if injector is not None:
+                            t_obs = injector.perturb_transfer_time(
+                                step, ci, t_obs)
+                        gev = guard.observe_transfer(step, ci, nbytes,
+                                                     t_obs)
+                        if gev is None:
+                            continue
+                        print(f"[guard] {gev.kind} @ step {step}: "
+                              f"{gev.detail} ({gev.attribution})",
+                              flush=True)
+                        if gev.replan is not None:
+                            # re-planned against the derated fabric:
+                            # rebuild the step with the new plan on the
+                            # unchanged mesh (no resharding needed)
+                            if tcfg.plan is not None:
+                                tcfg = dataclasses.replace(
+                                    tcfg, plan=elastic_ctl.plan)
+                                builder_or_step, _ = make_train_step(
+                                    model, tcfg, mesh=mesh)
+                                step_fn, _ = builder_or_step(pshape)
+                                fresh_trace = True
+                            elastic_remap_path = "none (same mesh)"
             if elastic_ctl is not None:
                 # confirmed persistent stragglers are surfaced (host
                 # eviction is the scheduler's call; on_straggler is
@@ -475,10 +665,17 @@ def main(argv=None):
                 elastic_ctl.observe_step(step, slow=slow)
             verdict = watchdog.observe(loss)
             if verdict == "rollback" and ckpt and ckpt.latest_step() is not None:
-                step, (params, opt), _ = ckpt.restore((params, opt))
+                # the step donated the old (params, opt) buffers; the
+                # returned ones are the live templates for the restore
+                step, (params, opt), _ = ckpt.restore(
+                    (new_params, new_opt))
                 print(f"[health] non-finite/spiking loss -> rolled back to {step}")
                 continue
             if verdict == "skip":
+                # with the finite gate the returned buffers hold the
+                # pre-update values on a poisoned step — adopting them
+                # IS the skip (the old buffers were donated)
+                params, opt = new_params, new_opt
                 print(f"[health] step {step}: loss {loss} skipped")
                 step += 1
                 continue
@@ -502,6 +699,16 @@ def main(argv=None):
             ckpt.wait()
     finally:
         pre.close()
+    if guard is not None:
+        grep = guard.report()
+        dl = grep["deadline_s"]
+        print(f"[guard] deadline "
+              f"{'unarmed' if dl is None else f'{dl:.3f}s'}; "
+              f"events: {grep['counts'] or 'none'}", flush=True)
+    if injector is not None:
+        print(f"[chaos] {len(injector.injected)} injected action(s): "
+              + (", ".join(sorted({i['kind'] for i in injector.injected}))
+                 or "none"), flush=True)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}) "
           f"over {len(losses)} steps")
     return losses

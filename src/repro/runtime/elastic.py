@@ -191,7 +191,7 @@ class ElasticConfig:
 class ReplanReport:
     """One elastic transition, as surfaced by ``--elastic``."""
 
-    trigger: str                  # "pod_failure" | "straggler"
+    trigger: str        # "pod_failure" | "straggler" | "degraded_link"
     detail: str
     step_detected: int
     old_fingerprint: str          # digests (fingerprint_digest)
@@ -282,6 +282,31 @@ class ElasticController:
         survivor = self.topo.drop_cluster(cluster_index)
         return self._replan(
             "pod_failure", f"lost cluster {cluster_index} ({lost})",
+            survivor, step)
+
+    def report_degraded_link(self, step: int, cluster_index: int,
+                             measured_Bps: float) -> ReplanReport | None:
+        """A link got slow — the ``CollectiveGuard``'s per-link
+        bandwidth EWMA confirmed cluster ``cluster_index``'s NIC
+        delivering ``measured_Bps`` instead of its nominal beta.  The
+        survivor topology is the same shape *derated* to the measured
+        bandwidth (``HetTopology.derate_cluster``), so the re-plan
+        prices every C2C term at what the fabric actually delivers —
+        PR 9's recovery extended from "pod died" to "link got slow".
+        No reshard is needed (the mesh is unchanged); the driver just
+        rebuilds the step with the new plan.  Returns ``None`` when the
+        measurement equals the current nominal (nothing to re-plan)."""
+        if self.state == "replanned":
+            return None  # transition in flight; waiting for resumed()
+        c = self.topo.clusters[cluster_index]
+        survivor = self.topo.derate_cluster(cluster_index,
+                                            float(measured_Bps))
+        if survivor.fingerprint() == self.topo.fingerprint():
+            return None
+        return self._replan(
+            "degraded_link",
+            f"cluster {cluster_index} ({c.name}) nic_Bps "
+            f"{c.nic_Bps:.3g} -> {float(measured_Bps):.3g}",
             survivor, step)
 
     # -- re-plan ------------------------------------------------------------

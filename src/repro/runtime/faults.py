@@ -1,0 +1,387 @@
+"""Seeded chaos engine: deterministic fault plans + the injector that
+lands them in the data path (DESIGN.md §16).
+
+HetCCL's premise is that mixed-vendor clusters fail in more ways than
+homogeneous ones — links degrade, transfers drop, ranks hang, payloads
+corrupt — so the recovery machinery (``runtime/guard.py`` +
+``runtime/elastic.py``) must be provable, not aspirational.  This
+module provides the *attack side*: a ``FaultPlan`` is a seeded,
+deterministic schedule of ``FaultEvent``s, and a ``FaultInjector``
+turns each event into a concrete perturbation:
+
+  * ``degraded_link``  — beta x k on one cluster's NIC.  Two landing
+    sites: the transport simulator prices it for real
+    (``transport_sim.simulate_schedule(link_scale=...)`` /
+    ``HetTopology.derate_cluster``), while on the emulated executor —
+    where nothing can physically slow the CPU "fabric" — the injector
+    perturbs the guard's *transfer-observation feed* (``t x k``), the
+    same emulation seam the synthetic straggler-trace tests use.
+  * ``transient``      — a transfer attempt raises
+    ``TransientTransferError``; the guard's bounded retry absorbs it.
+  * ``hang``           — a rank stalls: ``sleep_s(step)`` tells the
+    harness how long to stall before the step, tripping the guard's
+    comm deadline; heartbeats attribute the hang to the silent rank.
+  * ``nan_payload`` / ``bitflip`` — payload corruption via the
+    trace-time injection hook (``core.primitives.inject_hook``): NaN
+    into a float gradient buffer, or a flipped bit in the encoded
+    wire payload (for int8, inside a real quantized block).
+
+Determinism contract: ``FaultPlan.generate(seed, ...)`` is a pure
+function of its arguments (PCG64-seeded, no wall clock), and every
+injector decision is a pure function of (plan, step) — the same seed
+replays the identical fault sequence, which is what makes the chaos
+harness's bit-for-bit recovery assertions meaningful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+FAULT_KINDS = ("degraded_link", "transient", "hang", "nan_payload",
+               "bitflip")
+# payload-corruption kinds land through the trace-time inject hook
+CORRUPTION_KINDS = ("nan_payload", "bitflip")
+
+
+class TransientTransferError(RuntimeError):
+    """A C2C transfer attempt failed transiently (injected or real);
+    the guard's bounded retry is the expected handler."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``step`` is the first training step the
+    fault is active; ``duration`` how many consecutive steps it stays
+    active (1 for point faults; degraded links persist).  ``cluster``
+    attributes link faults, ``rank`` attributes rank faults.
+    ``factor`` is the beta inflation of a degraded link (k in
+    "beta x k") and the deadline multiple a hang stalls for."""
+
+    kind: str
+    step: int
+    duration: int = 1
+    cluster: int | None = None
+    rank: int | None = None
+    factor: float = 1.0
+    detail: str = ""
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(known: {FAULT_KINDS})")
+        if self.step < 0 or self.duration < 1:
+            raise ValueError(f"bad fault window step={self.step} "
+                             f"duration={self.duration}")
+
+    def active_at(self, step: int) -> bool:
+        return self.step <= step < self.step + self.duration
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic schedule of faults."""
+
+    seed: int
+    events: tuple[FaultEvent, ...]
+
+    @classmethod
+    def generate(cls, seed: int, n_steps: int, *,
+                 n_clusters: int = 2, n_ranks: int = 8,
+                 classes: Sequence[str] = FAULT_KINDS,
+                 first_step: int = 1,
+                 degrade_factor: float = 4.0,
+                 degrade_duration: int | None = None) -> "FaultPlan":
+        """One fault per requested class at distinct seeded steps in
+        ``[first_step, n_steps)``, targets (cluster/rank) drawn from the
+        same PCG64 stream.  Pure function of its arguments: identical
+        calls yield identical plans (property-tested).
+
+        ``first_step`` defaults past step 0 so the guard's calibration
+        window sees at least one clean step.  A degraded link persists
+        to the end of the run unless ``degrade_duration`` bounds it —
+        slow links don't heal themselves; recovery is the planner's
+        job."""
+        classes = tuple(classes)
+        unknown = [c for c in classes if c not in FAULT_KINDS]
+        if unknown:
+            raise ValueError(f"unknown fault classes {unknown} "
+                             f"(known: {FAULT_KINDS})")
+        span = n_steps - first_step
+        if span < len(classes):
+            raise ValueError(
+                f"cannot place {len(classes)} faults in steps "
+                f"[{first_step}, {n_steps})")
+        rng = np.random.Generator(np.random.PCG64(int(seed)))
+        steps = sorted(rng.choice(span, size=len(classes),
+                                  replace=False) + first_step)
+        order = list(classes)
+        rng.shuffle(order)
+        events = []
+        for kind, step in zip(order, steps):
+            step = int(step)
+            if kind == "degraded_link":
+                dur = (degrade_duration if degrade_duration is not None
+                       else n_steps - step)
+                events.append(FaultEvent(
+                    kind, step, duration=max(1, int(dur)),
+                    cluster=int(rng.integers(n_clusters)),
+                    factor=float(degrade_factor)))
+            elif kind == "hang":
+                events.append(FaultEvent(
+                    kind, step, rank=int(rng.integers(n_ranks)),
+                    factor=1.5))
+            elif kind == "transient":
+                events.append(FaultEvent(
+                    kind, step, cluster=int(rng.integers(n_clusters))))
+            else:  # nan_payload / bitflip
+                events.append(FaultEvent(
+                    kind, step, rank=int(rng.integers(n_ranks))))
+        return cls(seed=int(seed),
+                   events=tuple(sorted(events, key=lambda e: e.step)))
+
+    # -- queries -------------------------------------------------------------
+    def events_at(self, step: int) -> tuple[FaultEvent, ...]:
+        """Events whose active window covers ``step``."""
+        return tuple(e for e in self.events if e.active_at(step))
+
+    def starting_at(self, step: int) -> tuple[FaultEvent, ...]:
+        """Events that begin exactly at ``step``."""
+        return tuple(e for e in self.events if e.step == step)
+
+    def link_factors(self, step: int) -> dict[int, float]:
+        """Active beta-inflation per cluster: ``{cluster: k}`` for every
+        degraded link covering ``step`` (factors of overlapping events
+        on the same cluster multiply)."""
+        out: dict[int, float] = {}
+        for e in self.events_at(step):
+            if e.kind == "degraded_link" and e.cluster is not None:
+                out[e.cluster] = out.get(e.cluster, 1.0) * e.factor
+        return out
+
+    def link_scale(self, step: int) -> dict[int, float]:
+        """The ``transport_sim.simulate_schedule(link_scale=...)`` view
+        of the active degradations: bandwidth multipliers (1/k)."""
+        return {ci: 1.0 / k for ci, k in self.link_factors(step).items()}
+
+    def degrade_topology(self, topo: Any, step: int) -> Any:
+        """The fabric as it actually performs at ``step``: every active
+        degraded link's cluster derated to nominal/k."""
+        from repro.core.transport_sim import apply_link_scale
+        return apply_link_scale(topo, self.link_scale(step))
+
+    def summary(self) -> dict:
+        return {"seed": self.seed,
+                "events": [e.summary() for e in self.events]}
+
+
+# ---------------------------------------------------------------------------
+# Payload corruption (trace-time hook bodies)
+# ---------------------------------------------------------------------------
+
+def corrupt_nan(buf: Any) -> Any:
+    """Poison element 0 of a float buffer with NaN (a corrupted
+    gradient).  Non-float buffers pass through untouched — NaN is not
+    representable there; use :func:`corrupt_bitflip` for int payloads."""
+    import jax.numpy as jnp
+    if not jnp.issubdtype(buf.dtype, jnp.floating):
+        return buf
+    flat = buf.reshape(-1)
+    flat = flat.at[0].set(jnp.asarray(jnp.nan, buf.dtype))
+    return flat.reshape(buf.shape)
+
+
+def corrupt_bitflip(buf: Any, bit: int | None = None) -> Any:
+    """Flip one bit of element 0 — in the payload's *wire
+    representation*: ints (e.g. the int8 blocks of the quantized codec)
+    are XORed directly; floats are bitcast to the same-width unsigned
+    int, flipped, and bitcast back.  Defaults to a high mantissa /
+    mid-magnitude bit so the corruption is visible but finite."""
+    import jax.numpy as jnp
+    from jax import lax
+    if jnp.issubdtype(buf.dtype, jnp.floating):
+        nbits = buf.dtype.itemsize * 8
+        utype = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32,
+                 64: jnp.uint64}[nbits]
+        b = bit if bit is not None else nbits - 10  # high mantissa bit
+        u = lax.bitcast_convert_type(buf.reshape(-1), utype)
+        u = u.at[0].set(u[0] ^ jnp.asarray(1 << b, utype))
+        return lax.bitcast_convert_type(u, buf.dtype).reshape(buf.shape)
+    if jnp.issubdtype(buf.dtype, jnp.integer):
+        b = bit if bit is not None else buf.dtype.itemsize * 8 - 2
+        flat = buf.reshape(-1)
+        flat = flat.at[0].set(flat[0] ^ jnp.asarray(1 << b, buf.dtype))
+        return flat.reshape(buf.shape)
+    return buf
+
+
+def _global_rank(axes: Sequence[str]):
+    """Linearized global rank from mesh axis indices (major-first),
+    traceable inside shard_map."""
+    from jax import lax
+    r = None
+    for ax in axes:
+        idx, size = lax.axis_index(ax), lax.psum(1, ax)
+        r = idx if r is None else r * size + idx
+    return r
+
+
+def _corrupt_payload(buf: Any, kind: str) -> Any:
+    """Apply one corruption to a payload that may be a bare array or
+    the codec's encoded tuple — for int8 that is ``(q, scale)`` and the
+    flip lands in ``q``: a real bit-flipped int8 block."""
+    if isinstance(buf, tuple):
+        return (_corrupt_payload(buf[0], kind),) + tuple(buf[1:])
+    if kind == "nan_payload":
+        return corrupt_nan(buf)
+    return corrupt_bitflip(buf)
+
+
+# ---------------------------------------------------------------------------
+# The injector
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Turns a ``FaultPlan`` into concrete perturbations and keeps the
+    ground-truth log the chaos harness scores detections against.
+
+    Host-side faults (``sleep_s``, ``wrap_transfer``,
+    ``perturb_transfer_time``) act per step.  Payload corruption is
+    trace-time: ``corruption_hook(step)`` returns a hook for
+    ``core.primitives.inject_hook`` — the harness must build AND
+    first-call (tracing happens at first call) the faulted step inside
+    that context, and use it only on the fault step."""
+
+    def __init__(self, plan: FaultPlan, *,
+                 corrupt_phases: Iterable[str] = ("c2c", "chunk_c2c",
+                                                  "intra_rs", "flat")):
+        self.plan = plan
+        self.corrupt_phases = tuple(corrupt_phases)
+        self.injected: list[dict] = []
+
+    def _log(self, step: int, event: FaultEvent, action: str) -> None:
+        self.injected.append({"step": int(step), "kind": event.kind,
+                              "cluster": event.cluster,
+                              "rank": event.rank,
+                              "factor": event.factor, "action": action})
+
+    # -- hang ---------------------------------------------------------------
+    def sleep_s(self, step: int, deadline_s: float) -> float:
+        """Stall duration for a hang active at ``step``: the event's
+        ``factor`` x the guard's current deadline, so the stall is
+        guaranteed past the deadline regardless of calibration."""
+        total = 0.0
+        for e in self.plan.events_at(step):
+            if e.kind == "hang":
+                total += e.factor * deadline_s
+                self._log(step, e, f"stall {e.factor:.1f}x deadline")
+        return total
+
+    def stall(self, step: int, deadline_s: float) -> float:
+        """Actually sleep the hang duration (the harness's in-band way
+        to hang "a rank" in a single emulated process); returns the
+        seconds slept."""
+        s = self.sleep_s(step, deadline_s)
+        if s > 0:
+            time.sleep(s)
+        return s
+
+    def hung_ranks(self, step: int) -> tuple[int, ...]:
+        """Ground truth for heartbeat attribution: ranks hanging at
+        ``step`` (they will not heartbeat)."""
+        return tuple(e.rank for e in self.plan.events_at(step)
+                     if e.kind == "hang" and e.rank is not None)
+
+    # -- transient transfer failures ----------------------------------------
+    def transient_attempts(self, step: int) -> int:
+        """How many transfer attempts fail at ``step`` before one
+        succeeds (0 when no transient fault is active)."""
+        return sum(1 for e in self.plan.events_at(step)
+                   if e.kind == "transient")
+
+    def wrap_transfer(self, step: int, fn: Callable[..., Any]
+                      ) -> Callable[..., Any]:
+        """Wrap a transfer thunk so its first ``transient_attempts``
+        calls at ``step`` raise ``TransientTransferError`` — the guard's
+        ``retry`` absorbs exactly that many failures."""
+        fails = {"left": self.transient_attempts(step)}
+        evs = [e for e in self.plan.events_at(step) if e.kind == "transient"]
+
+        def wrapped(*a, **kw):
+            if fails["left"] > 0:
+                fails["left"] -= 1
+                for e in evs:
+                    self._log(step, e, "transfer attempt failed")
+                raise TransientTransferError(
+                    f"injected transient transfer failure at step {step}")
+            return fn(*a, **kw)
+        return wrapped
+
+    # -- degraded links ------------------------------------------------------
+    def perturb_transfer_time(self, step: int, cluster: int,
+                              t_s: float) -> float:
+        """The emulated-fabric landing site for link degradation: the
+        observed transfer time for ``cluster``'s link, inflated by the
+        active beta factor.  On a real fabric the slow wire inflates the
+        measurement itself; the emulated CPU fabric cannot slow down, so
+        the injector perturbs the observation feed — the guard's EWMA
+        sees exactly what a degraded link would produce."""
+        k = self.plan.link_factors(step).get(cluster, 1.0)
+        if k != 1.0:
+            for e in self.plan.events_at(step):
+                if e.kind == "degraded_link" and e.cluster == cluster:
+                    self._log(step, e, f"transfer time x{k:g}")
+        return t_s * k
+
+    # -- payload corruption (trace-time) -------------------------------------
+    def corruption_hook(self, step: int, axes: Sequence[str] | None = None
+                        ) -> Callable[[Any, str], Any] | None:
+        """Hook for ``core.primitives.inject_hook`` applying the
+        payload corruptions active at ``step`` (None when there are
+        none).  The hook corrupts the first matching phase it sees and
+        passes everything else through.
+
+        ``axes`` are the mesh axis names (major-first) that linearize
+        to the global rank: with them, corruption is gated to the
+        event's ``rank`` via ``lax.axis_index`` — shard_map traces one
+        program for every rank, so an ungated flip would corrupt ALL
+        ranks' payloads, and symmetric XORs can cancel exactly in the
+        combining reduction (two ranks whose int8 values differ in the
+        flipped bit sum to the same total).  One faulty sender is also
+        what a real corruption looks like.  Without ``axes`` the
+        corruption is unconditional (single-array unit tests)."""
+        evs = [e for e in self.plan.events_at(step)
+               if e.kind in CORRUPTION_KINDS]
+        if not evs:
+            return None
+        fired: set[str] = set()
+
+        def hook(buf, phase):
+            if phase not in self.corrupt_phases:
+                return buf
+            import jax
+            import jax.numpy as jnp
+            for e in evs:
+                if e.kind in fired:
+                    continue
+                fired.add(e.kind)
+                self._log(step, e, f"corrupted {phase} payload")
+                bad = _corrupt_payload(buf, e.kind)
+                if axes and e.rank is not None:
+                    on_rank = _global_rank(axes) == e.rank
+                    buf = jax.tree.map(
+                        lambda b, g: jnp.where(on_rank, b, g), bad, buf)
+                else:
+                    buf = bad
+            return buf
+        return hook
+
+    def summary(self) -> dict:
+        return {"plan": self.plan.summary(), "injected": list(self.injected)}

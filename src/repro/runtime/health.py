@@ -104,7 +104,18 @@ class StragglerMonitor:
         trailing median, so a steadily skewed fleet (every step paced by
         the slowest vendor group) is the new normal, not a straggler —
         compute skew is the partitioner's job (core/skew.py), not this
-        monitor's."""
+        monitor's.
+
+        Non-positive or non-finite durations (clock skew, a
+        monotonic-clock bug, a poisoned upstream timer) are dropped
+        without entering the median window — one NaN would otherwise
+        poison every subsequent median, and a zero/negative dt would
+        drag it toward flagging healthy steps.  ``_step`` still
+        advances so flag indices stay aligned with the training step
+        (same contract as ``reset``)."""
+        if not (math.isfinite(dt) and dt > 0.0):
+            self._step += 1
+            return False
         med = float(np.median(self.times[-self.window:])) if self.times else dt
         self.times.append(dt)
         slow = len(self.times) > 4 and dt > self.factor * med

@@ -82,6 +82,14 @@ class TrainConfig:
     # hand-picked fields above only steer the optimizer wiring
     # (hier_zero1/fsdp structure cannot be chosen per bucket).
     plan: Any = None
+    # donation-safe bad-step handling: when the synced loss or grad norm
+    # comes back non-finite (a NaN payload off the wire, a numerics
+    # blowup), the update is gated to a no-op *inside* the compiled step
+    # — the old values flow through into the donated output buffers, so
+    # the driver's watchdog "skip" verdict can adopt them without
+    # needing the (already-donated) previous state.  Healthy steps are
+    # bit-identical: where(True, new, old) selects new exactly.
+    finite_gate: bool = True
     opt: opt_lib.OptConfig = dataclasses.field(default_factory=opt_lib.OptConfig)
     aux_weight: float = 1e-2          # MoE load-balance loss weight
     z_loss: float = 0.0
@@ -236,6 +244,16 @@ def make_train_step(model: Model, tcfg: TrainConfig, mesh=None,
              "mean_logp": metrics["mean_logp"]}
         if dp_axes:
             m = {k: lax.pmean(v, dp_axes) for k, v in m.items()}
+        if tcfg.finite_gate:
+            # see TrainConfig.finite_gate: poisoned updates become
+            # no-ops so donated buffers still carry the usable state.
+            # The gate keys off the *reduced* scalars (a local-only NaN
+            # would gate one shard and desync the others).
+            ok = jnp.isfinite(m["loss"]) & jnp.isfinite(m["grad_norm"])
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
         return new_params, new_opt, m
 
     # ---------------- init ------------------------------------------------

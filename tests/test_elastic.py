@@ -241,3 +241,27 @@ def test_survivor_mesh_squeezes_unit_axis():
     out3 = elastic.survivor_mesh(mesh3, "pod", 0)
     assert out3.axis_names == ("pod", "data", "model")
     assert out3.devices.shape == (2, 2, 2)
+
+
+def test_degraded_link_replan_derates_without_reshard():
+    """A slow link (guard's EWMA verdict) re-plans against the *same
+    shape* derated to the measured bandwidth — no pod is dropped, no
+    reshard happens, the driver just rebuilds the step."""
+    ctl, cache = _controller(2)
+    old_fp = ctl.topo.fingerprint()
+    B = ctl.topo.clusters[1].nic_Bps
+    rep = ctl.report_degraded_link(5, 1, B / 4)
+    assert rep is not None and rep.trigger == "degraded_link"
+    assert rep.invalidated_entries >= 1
+    assert cache.stats()["invalidations"] == 1
+    assert rep.old_fingerprint == elastic.fingerprint_digest(old_fp)
+    assert rep.old_fingerprint != rep.new_fingerprint
+    assert ctl.topo.clusters[1].nic_Bps == pytest.approx(B / 4)
+    assert ctl.topo.n_clusters == 2          # same shape: no reshard
+    assert ctl.state == "replanned"
+    # transition in flight: further verdicts wait for resumed()
+    assert ctl.report_degraded_link(6, 1, B / 8) is None
+    ctl.resumed(6)
+    assert ctl.state == "healthy"
+    # re-reporting the now-nominal bandwidth is a no-op, not a re-plan
+    assert ctl.report_degraded_link(7, 1, B / 4) is None

@@ -1,0 +1,197 @@
+"""Chaos engine (runtime/faults.py): seeded fault-plan determinism,
+the corruption bodies, and the injector's host-side seams.  The e2e
+detect -> attribute -> recover proof on the 8-device fabric lives in
+tests/mdscripts/check_chaos.py."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core import primitives, topology
+from repro.runtime import faults
+from repro.runtime.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  TransientTransferError, corrupt_bitflip,
+                                  corrupt_nan)
+
+given, settings = hypothesis.given, hypothesis.settings
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan.generate: pure function of its arguments
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(st.integers(0, 1 << 16), st.integers(8, 64))
+def test_fault_plan_generation_is_deterministic(seed, n_steps):
+    a = FaultPlan.generate(seed, n_steps)
+    b = FaultPlan.generate(seed, n_steps)
+    assert a == b
+    # one fault per class, at distinct steps inside [1, n_steps)
+    steps = [e.step for e in a.events]
+    assert len(set(steps)) == len(steps) == len(faults.FAULT_KINDS)
+    assert all(1 <= s < n_steps for s in steps)
+    assert sorted(e.kind for e in a.events) == sorted(faults.FAULT_KINDS)
+
+
+@settings(max_examples=25)
+@given(st.integers(0, 1 << 16))
+def test_injector_replay_is_identical(seed):
+    """Same plan -> identical fault sequence on every replay: the
+    property that makes the chaos harness's bit-for-bit recovery
+    assertions meaningful."""
+    plan = FaultPlan.generate(seed, 24)
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(plan)
+        seq = []
+        for s in range(24):
+            seq.append((inj.sleep_s(s, 1.0), inj.transient_attempts(s),
+                        plan.link_factors(s), inj.hung_ranks(s)))
+        runs.append((seq, inj.injected))
+    assert runs[0] == runs[1]
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("solar_flare", 3)
+    with pytest.raises(ValueError):
+        FaultEvent("hang", -1)
+    with pytest.raises(ValueError):
+        FaultEvent("hang", 3, duration=0)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, 3)  # 5 classes cannot fit in [1, 3)
+    with pytest.raises(ValueError):
+        FaultPlan.generate(0, 64, classes=("hang", "gamma_ray"))
+
+
+def test_event_windows_and_degraded_persistence():
+    plan = FaultPlan.generate(11, 30)
+    deg = next(e for e in plan.events if e.kind == "degraded_link")
+    # a slow link does not heal itself: active to the end of the run
+    assert deg.step + deg.duration == 30
+    assert plan.link_factors(deg.step - 1) == {}
+    assert plan.link_factors(29).get(deg.cluster) == deg.factor
+    assert plan.link_scale(29)[deg.cluster] == pytest.approx(1 / deg.factor)
+    assert deg in plan.events_at(deg.step)
+    assert plan.starting_at(deg.step) == (deg,)
+    hang = next(e for e in plan.events if e.kind == "hang")
+    assert plan.events_at(hang.step + 1) == tuple(
+        e for e in plan.events if e.active_at(hang.step + 1))
+    assert hang.active_at(hang.step) and not hang.active_at(hang.step + 1)
+
+
+def test_degrade_topology_changes_fingerprint():
+    topo = topology.tpu_multipod(2, 8)
+    plan = FaultPlan.generate(5, 16)
+    deg = next(e for e in plan.events if e.kind == "degraded_link")
+    d = plan.degrade_topology(topo, deg.step)
+    assert d.fingerprint() != topo.fingerprint()
+    assert d.clusters[deg.cluster].nic_Bps == pytest.approx(
+        topo.clusters[deg.cluster].nic_Bps / deg.factor)
+    # before onset nothing is derated
+    assert plan.degrade_topology(topo, 0).fingerprint() == topo.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# Corruption bodies
+# ---------------------------------------------------------------------------
+
+def test_corrupt_nan_poisons_float_and_passes_int():
+    x = jnp.arange(8.0) + 1
+    y = np.asarray(corrupt_nan(x))
+    assert not np.isfinite(y[0]) and np.isfinite(y[1:]).all()
+    # NaN is not representable on an int8 wire: int payloads pass
+    # through (bitflip is the int-block fault)
+    q = jnp.arange(8, dtype=jnp.int8)
+    assert np.array_equal(np.asarray(corrupt_nan(q)), np.asarray(q))
+
+
+def test_corrupt_bitflip_flips_exactly_one_bit():
+    x = jnp.arange(8.0, dtype=jnp.float32) + 1
+    diff = np.asarray(x).view(np.uint32) ^ np.asarray(
+        corrupt_bitflip(x)).view(np.uint32)
+    assert bin(int(diff[0])).count("1") == 1 and not diff[1:].any()
+    q = jnp.arange(8, dtype=jnp.int8)
+    d = (np.asarray(q) ^ np.asarray(corrupt_bitflip(q))).view(np.uint8)
+    assert bin(int(d[0])).count("1") == 1 and not d[1:].any()
+
+
+def test_corrupt_payload_tuple_hits_wire_blocks():
+    # int8 codec payloads are (q, scale): the flip must land inside a
+    # real quantized block and leave the scale vector alone
+    q, scale = jnp.ones((2, 4), jnp.int8), jnp.ones((2, 1))
+    out = faults._corrupt_payload((q, scale), "bitflip")
+    assert not np.array_equal(np.asarray(out[0]), np.asarray(q))
+    assert np.array_equal(np.asarray(out[1]), np.asarray(scale))
+
+
+# ---------------------------------------------------------------------------
+# Injector seams
+# ---------------------------------------------------------------------------
+
+def test_hang_stalls_past_deadline():
+    plan = FaultPlan.generate(4, 20)
+    h = next(e for e in plan.events if e.kind == "hang")
+    inj = FaultInjector(plan)
+    assert inj.sleep_s(h.step, 0.1) == pytest.approx(h.factor * 0.1)
+    assert inj.sleep_s(0, 0.1) == 0.0
+    assert inj.hung_ranks(h.step) == (h.rank,)
+    assert inj.hung_ranks(0) == ()
+
+
+def test_wrap_transfer_fails_then_succeeds():
+    plan = FaultPlan.generate(2, 20)
+    t = next(e for e in plan.events if e.kind == "transient")
+    inj = FaultInjector(plan)
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        return "ok"
+
+    wrapped = inj.wrap_transfer(t.step, fn)
+    with pytest.raises(TransientTransferError):
+        wrapped()
+    assert wrapped() == "ok" and calls["n"] == 1
+    # fault-free steps never fail
+    assert inj.wrap_transfer(0, fn)() == "ok"
+    assert any(i["kind"] == "transient" for i in inj.injected)
+
+
+def test_perturb_transfer_time_inflates_degraded_cluster_only():
+    plan = FaultPlan.generate(11, 30)
+    deg = next(e for e in plan.events if e.kind == "degraded_link")
+    inj = FaultInjector(plan)
+    other = 1 - deg.cluster if deg.cluster in (0, 1) else 0
+    assert inj.perturb_transfer_time(deg.step, deg.cluster, 0.5) \
+        == pytest.approx(0.5 * deg.factor)
+    assert inj.perturb_transfer_time(deg.step, other, 0.5) \
+        == pytest.approx(0.5)
+    assert inj.perturb_transfer_time(0, deg.cluster, 0.5) \
+        == pytest.approx(0.5)
+
+
+def test_corruption_hook_phases_and_one_shot():
+    plan = FaultPlan(seed=0, events=(FaultEvent("bitflip", 3, rank=0),))
+    inj = FaultInjector(plan, corrupt_phases=("c2c",))
+    hook = inj.corruption_hook(3)
+    x = jnp.arange(4.0) + 1
+    # non-matching phase passes through
+    assert np.array_equal(np.asarray(hook(x, "intra_rs")), np.asarray(x))
+    # first matching phase corrupts...
+    assert not np.array_equal(np.asarray(hook(x, "c2c")), np.asarray(x))
+    # ...and the event is one-shot within the hook's lifetime
+    assert np.array_equal(np.asarray(hook(x, "c2c")), np.asarray(x))
+    # no corruption scheduled -> no hook at all
+    assert inj.corruption_hook(2) is None
+
+
+def test_inject_hook_nests_and_restores():
+    assert primitives.apply_inject(1, "c2c") == 1
+    with primitives.inject_hook(lambda b, p: b + 1):
+        assert primitives.apply_inject(1, "c2c") == 2
+        with primitives.inject_hook(lambda b, p: b + 10):
+            assert primitives.apply_inject(1, "c2c") == 11
+        assert primitives.apply_inject(1, "c2c") == 2
+    assert primitives.apply_inject(1, "c2c") == 1

@@ -1,0 +1,293 @@
+"""Collective guard (runtime/guard.py): deadline calibration + hang
+attribution, schedule-digest desync detection, payload integrity,
+bounded retry, link-health EWMA, and the degraded-link escalation into
+the elastic controller.  The live wiring is proven end-to-end by
+tests/mdscripts/check_chaos.py."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import planner, topology
+from repro.core.collectives import CommConfig
+from repro.core.plan_cache import PlanCache
+from repro.core.schedule import build_schedule
+from repro.runtime import elastic
+from repro.runtime.faults import TransientTransferError
+from repro.runtime.guard import (CollectiveGuard, GuardConfig, LinkHealth,
+                                 PersistentCommFailure, digest_agreement,
+                                 nonfinite_leaves, payload_checksum,
+                                 schedule_digest)
+
+PLAN_KW = dict(coll="all_reduce", pod_axis="pod", intra_axis="data",
+               compressions=(None, "bf16"), flat_mechanism="native",
+               try_balanced=False)
+
+
+# ---------------------------------------------------------------------------
+# Deadline (hang detector)
+# ---------------------------------------------------------------------------
+
+def test_deadline_unarmed_until_a_source_exists():
+    g = CollectiveGuard(GuardConfig(warmup_steps=3, min_deadline_s=0.0,
+                                    deadline_margin=2.0))
+    assert g.deadline_s is None
+    # a huge step during calibration is NOT flagged (zero false
+    # positives by construction while the deadline is unarmed)
+    assert g.observe_step_time(0, 99.0) is None
+
+
+def test_deadline_calibrates_from_warmup_median():
+    g = CollectiveGuard(GuardConfig(warmup_steps=3, min_deadline_s=0.0,
+                                    deadline_margin=2.0))
+    for s in range(3):
+        assert g.observe_step_time(s, 0.1) is None
+    assert g.deadline_s == pytest.approx(0.2)
+    # the prediction raises the base once calibrated, but can never
+    # substitute for calibration: predicted times describe the modeled
+    # fabric, not this substrate's wall clock
+    g2 = CollectiveGuard(GuardConfig(warmup_steps=3, min_deadline_s=0.0,
+                                     deadline_margin=2.0),
+                         predicted_step_s=1.0)
+    assert g2.deadline_s is None            # unarmed: no wall samples yet
+    for s in range(3):
+        assert g2.observe_step_time(s, 0.1) is None
+    assert g2.deadline_s == pytest.approx(2.0)   # prediction > median
+    g3 = CollectiveGuard(GuardConfig(warmup_steps=1, min_deadline_s=0.5,
+                                     deadline_margin=2.0),
+                         predicted_step_s=1e-4)
+    g3.observe_step_time(0, 1e-4)
+    assert g3.deadline_s == pytest.approx(0.5)   # floor still applies
+
+
+def test_hang_attributed_to_silent_ranks():
+    g = CollectiveGuard(GuardConfig(warmup_steps=1, min_deadline_s=0.0,
+                                    deadline_margin=2.0),
+                        expected_ranks=range(4))
+    g.observe_step_time(0, 0.1)
+    for r in (0, 1, 3):
+        g.heartbeat(5, r)
+    ev = g.observe_step_time(5, 1.0)
+    assert ev is not None and ev.kind == "hang"
+    assert ev.attribution == "rank 2"
+    assert ev.deadline_s == pytest.approx(0.2)
+    assert ev.measured == pytest.approx(1.0)
+    # back under the deadline: nothing fires
+    assert g.observe_step_time(6, 0.1) is None
+
+
+def test_no_false_positive_on_steady_steps():
+    g = CollectiveGuard(GuardConfig(warmup_steps=5, min_deadline_s=0.05))
+    evs = [g.observe_step_time(s, 0.01 + 0.001 * (s % 3))
+           for s in range(50)]
+    assert all(e is None for e in evs)
+    # bad samples (clock skew) are dropped, same contract as the
+    # straggler monitor
+    assert g.observe_step_time(50, float("nan")) is None
+    assert g.observe_step_time(51, -1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Desync (schedule digests)
+# ---------------------------------------------------------------------------
+
+def test_schedule_digest_ignores_timing_floats():
+    topo = topology.tpu_multipod(2, 8)
+    p1 = planner.plan(topo, [64 << 20], cache=PlanCache(), **PLAN_KW)
+    p2 = planner.plan(topo, [64 << 20], cache=PlanCache(), **PLAN_KW)
+    assert schedule_digest(p1) == schedule_digest(p2)
+    # perturbing a priced time must not change the digest: two ranks
+    # that priced the same plan differently still agree
+    b = p1.buckets[0]
+    p3 = dataclasses.replace(
+        p1, buckets=(dataclasses.replace(
+            b, simulated_c2c_s=(b.simulated_c2c_s or 0.0) * 7 + 1.0),)
+        + p1.buckets[1:])
+    assert schedule_digest(p3) == schedule_digest(p1)
+
+
+def test_schedule_digest_covers_all_ir_types():
+    s1 = build_schedule("all_reduce", "hier", 4, None)
+    s2 = build_schedule("all_reduce", "hier_pipelined", 4, None)
+    assert schedule_digest(s1) != schedule_digest(s2)
+    c1 = CommConfig(mode="hier", n_chunks=4)
+    c2 = CommConfig(mode="hier", n_chunks=8)
+    c3 = CommConfig(mode="hier", n_chunks=4,
+                    cluster_weights=(1.25, 0.75))
+    assert len({schedule_digest(c) for c in (c1, c2, c3)}) == 3
+    with pytest.raises(TypeError):
+        schedule_digest(object())
+
+
+def test_digest_agreement_majority_and_outliers():
+    ok, major, out = digest_agreement({0: "a", 1: "a", 2: "a", 3: "b"})
+    assert not ok and major == "a" and out == (3,)
+    ok, major, out = digest_agreement({r: "a" for r in range(8)})
+    assert ok and major == "a" and out == ()
+    # 2-2 tie: deterministic by digest value, outliers still named
+    ok, major, out = digest_agreement({0: "a", 1: "b", 2: "a", 3: "b"})
+    assert not ok and major in ("a", "b") and len(out) == 2
+    with pytest.raises(ValueError):
+        digest_agreement({})
+
+
+def test_guard_desync_event_names_outlier_ranks():
+    g = CollectiveGuard(expected_ranks=range(4))
+    assert g.check_agreement(3, {r: "x" for r in range(4)}) is None
+    ev = g.check_agreement(4, {0: "x", 1: "x", 2: "y", 3: "x"})
+    assert ev is not None and ev.kind == "desync"
+    assert ev.attribution == "rank 2"
+
+
+# ---------------------------------------------------------------------------
+# Payload integrity
+# ---------------------------------------------------------------------------
+
+def test_payload_checksum_catches_single_bit_flip():
+    tree = {"w": jnp.zeros((16,), jnp.float32),
+            "b": jnp.arange(4, dtype=jnp.int8)}
+    ref = payload_checksum(tree)
+    assert payload_checksum({"w": jnp.zeros((16,), jnp.float32),
+                             "b": jnp.arange(4, dtype=jnp.int8)}) == ref
+    from repro.runtime.faults import corrupt_bitflip
+    # even a flip invisible to value comparison under flush-to-zero
+    # (0.0 -> denormal) changes the byte-level checksum
+    assert payload_checksum({"w": corrupt_bitflip(tree["w"]),
+                             "b": tree["b"]}) != ref
+
+
+def test_check_payload_flags_nonfinite_leaves():
+    g = CollectiveGuard()
+    clean = {"a": jnp.ones((4,)), "q": jnp.ones((2,), jnp.int8)}
+    assert g.check_payload(1, clean) is None
+    assert g.checksum_at(1) is not None
+    bad = {"a": jnp.asarray([1.0, jnp.nan, 3.0, 4.0]),
+           "q": jnp.ones((2,), jnp.int8)}
+    ev = g.check_payload(2, bad)
+    assert ev is not None and ev.kind == "corrupt_payload"
+    assert "a" in ev.attribution
+    assert nonfinite_leaves(clean) == ()
+
+
+# ---------------------------------------------------------------------------
+# Bounded retry
+# ---------------------------------------------------------------------------
+
+def _failing(times):
+    n = {"left": times}
+
+    def fn():
+        if n["left"]:
+            n["left"] -= 1
+            raise TransientTransferError("injected")
+        return "payload"
+    return fn
+
+
+def test_retry_absorbs_transients_with_deterministic_backoff():
+    sleep_logs = []
+    for _ in range(2):
+        g = CollectiveGuard(GuardConfig(max_retries=3,
+                                        backoff_base_s=0.01, seed=5))
+        slept = []
+        assert g.retry(1, _failing(2), sleep=slept.append) == "payload"
+        assert g.events[-1].kind == "transient_retry"
+        assert g.events[-1].measured == 2.0
+        sleep_logs.append(slept)
+    # seeded jitter: identical backoff sequence on replay, exponential
+    assert sleep_logs[0] == sleep_logs[1]
+    assert len(sleep_logs[0]) == 2
+    assert sleep_logs[0][1] > sleep_logs[0][0]
+
+
+def test_retry_exhaustion_raises_persistent_failure():
+    g = CollectiveGuard(GuardConfig(max_retries=2, backoff_base_s=0.0))
+    with pytest.raises(PersistentCommFailure):
+        g.retry(3, _failing(99), sleep=lambda s: None)
+    assert g.events[-1].kind == "persistent_failure"
+    # a first-try success records nothing
+    g2 = CollectiveGuard()
+    assert g2.retry(0, _failing(0), sleep=lambda s: None) == "payload"
+    assert g2.events == []
+
+
+# ---------------------------------------------------------------------------
+# Link health
+# ---------------------------------------------------------------------------
+
+SIZES = (8 << 20, 12 << 20, 16 << 20, 24 << 20)
+
+
+def test_link_health_detects_sustained_degradation_only():
+    B = 100e9
+    lh = LinkHealth({0: B}, window=4, ewma_alpha=0.7,
+                    degraded_factor=2.0, patience=2)
+    for s in SIZES * 2:                       # nominal
+        lh.observe(0, s, s / B)
+        assert not lh.degraded(0)
+    # one slow transfer is a blip, not a verdict
+    lh.observe(0, SIZES[0], 4 * SIZES[0] / B)
+    assert not lh.degraded(0)
+    for s in SIZES * 4:                       # sustained 4x slowdown
+        lh.observe(0, s, 4 * s / B)
+    assert lh.ewma_Bps[0] < B / 2
+    assert lh.degraded(0)
+    assert not lh.degraded(0)                 # one-shot per link
+    # rebase re-arms against the new nominal
+    lh.rebase(0, lh.ewma_Bps[0])
+    for s in SIZES * 2:
+        lh.observe(0, s, 4 * s / B)           # steady at the new rate
+        assert not lh.degraded(0)
+
+
+def test_link_health_drops_bad_samples():
+    lh = LinkHealth({0: 1e9}, window=4)
+    assert lh.observe(0, 1 << 20, float("nan")) is None
+    assert lh.observe(0, 1 << 20, -1.0) is None
+    assert lh.observe(0, 0, 1.0) is None
+    assert lh.ewma_Bps == {}
+    with pytest.raises(ValueError):
+        LinkHealth({0: 1e9}, ewma_alpha=0.0)
+
+
+def test_degraded_link_escalates_to_elastic_replan():
+    topo = topology.tpu_multipod(2, 8)
+    cache = PlanCache()
+    grad = 64 << 20
+    planner.plan(topo, [grad], cache=cache, **PLAN_KW)
+    ctl = elastic.ElasticController(topo, [grad], plan_cache=cache,
+                                    plan_kw=PLAN_KW)
+    g = CollectiveGuard(
+        GuardConfig(link_window=4, ewma_alpha=0.7, degraded_factor=2.0,
+                    degraded_patience=2),
+        nominal_Bps={i: c.nic_Bps for i, c in enumerate(topo.clusters)},
+        elastic=ctl)
+    B = topo.clusters[1].nic_Bps
+    old_fp = elastic.fingerprint_digest(topo.fingerprint())
+    for step in range(8):
+        for s in SIZES:
+            g.observe_transfer(step, 1, s, 4 * s / B)
+    evs = [e for e in g.events if e.kind == "degraded_link"]
+    assert len(evs) == 1                      # escalates exactly once
+    rep = evs[0].replan
+    assert rep is not None and rep.trigger == "degraded_link"
+    assert rep.old_fingerprint == old_fp != rep.new_fingerprint
+    assert rep.invalidated_entries >= 1
+    assert ctl.state == "replanned"
+    assert ctl.topo.clusters[1].nic_Bps < B
+    # guard rebased onto the measured bandwidth: the derated link is
+    # the new normal, so continued slow samples don't re-fire
+    assert g.links.nominal[1] == pytest.approx(evs[0].measured)
+
+
+def test_guard_report_shape():
+    g = CollectiveGuard(GuardConfig(warmup_steps=1, min_deadline_s=0.0,
+                                    deadline_margin=2.0))
+    g.observe_step_time(0, 0.1)
+    g.observe_step_time(1, 1.0)
+    rep = g.report()
+    assert rep["counts"] == {"hang": 1}
+    assert rep["deadline_s"] == pytest.approx(0.2)
+    assert rep["events"][0]["kind"] == "hang"

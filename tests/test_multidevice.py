@@ -38,6 +38,19 @@ def test_elastic_restart_8dev():
 
 
 @pytest.mark.slow
+def test_chaos_guard_8dev():
+    """Chaos engine + collective guard: all five seeded fault classes
+    (hang, transient, NaN payload, bit-flip, degraded link) detected
+    within their deadlines, attributed to the right link/rank, and the
+    committed trajectory recovers bit-for-bit vs the fault-free
+    reference; zero false positives on the guarded fault-free matrix."""
+    out = _run("check_chaos.py", timeout=1500)
+    assert "0 guard events" in out
+    assert "bit-for-bit vs the fault-free reference" in out
+    assert '"false_positives": 0' in out
+
+
+@pytest.mark.slow
 def test_elastic_replan_8dev():
     """Live elastic re-planning: kill a pod (and confirm a straggler
     shrink), re-plan with PlanCache invalidation, slot-map remap of the

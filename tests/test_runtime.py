@@ -276,3 +276,26 @@ def test_checkpoint_bf16_restore_to_new_sharding(tmp_path):
     np.testing.assert_array_equal(
         np.asarray(back["p"]).view(np.uint16), vals.view(np.uint16))
     assert back["p"].sharding == sh["p"]
+
+
+def test_straggler_ignores_bad_durations():
+    """Regression: a NaN/inf/zero/negative dt (clock skew, a poisoned
+    upstream timer) used to enter the median window — one NaN poisoned
+    every subsequent median, and a zero dragged it toward flagging
+    healthy steps."""
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(6):
+        assert not mon.observe(0.1)
+    for bad in (float("nan"), float("inf"), 0.0, -0.5):
+        assert mon.observe(bad) is False
+    assert mon.times == [0.1] * 6       # window unpoisoned
+    # _step kept counting through the dropped samples, so the next
+    # flag lands at the right global index (6 good + 4 dropped = 10)
+    assert mon.observe(1.0)
+    assert mon.flagged == [10]
+    # the stop() path rides the same filter: a negative wall-clock
+    # delta (monotonic-clock bug) is a no-observation, not a poison
+    mon2 = StragglerMonitor(factor=3.0)
+    mon2._t0 = time.monotonic() + 100.0
+    assert mon2.stop() is False
+    assert mon2.times == []

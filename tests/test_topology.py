@@ -322,3 +322,20 @@ def test_shrink_cluster_errors():
         topo.shrink_cluster(0, topo.clusters[0].n_nodes + 1)
     with pytest.raises(ValueError):
         topo.shrink_cluster(99, 1)
+
+
+def test_derate_cluster_validation_and_fingerprint():
+    topo = topology.tpu_multipod(2, 8)
+    B = topo.clusters[1].nic_Bps
+    d = topo.derate_cluster(1, B / 4)
+    assert d.clusters[1].nic_Bps == pytest.approx(B / 4)
+    assert d.n_clusters == topo.n_clusters
+    assert d.fingerprint() != topo.fingerprint()
+    # measured == nominal: identity (the controller uses this to skip
+    # a pointless re-plan)
+    assert topo.derate_cluster(1, B) is topo
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError):
+            topo.derate_cluster(1, bad)
+    with pytest.raises(ValueError):
+        topo.derate_cluster(9, B)

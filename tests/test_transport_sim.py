@@ -135,3 +135,34 @@ def test_fit_alpha_beta_recovers_clean_line():
     alpha, beta = transport_sim.fit_alpha_beta(sizes, times)
     assert alpha == pytest.approx(alpha_true, rel=1e-9)
     assert beta == pytest.approx(bw, rel=1e-9)
+
+
+def test_apply_link_scale_prices_degradation():
+    """Degraded-fabric pricing (chaos engine): scaling a cluster's NIC
+    bandwidth down makes the simulated sync slower, a scale of 1.0 is
+    the identity, and bad scales are rejected loudly."""
+    from repro.core.schedule import build_schedule
+    topo = topology.tpu_multipod(2, 8)
+    sched = build_schedule("all_reduce", "hier", 4, None)
+    nbytes = 64 << 20
+    t0 = transport_sim.simulate_schedule(sched, topo, nbytes,
+                                         level="cluster")
+    t_id = transport_sim.simulate_schedule(sched, topo, nbytes,
+                                           level="cluster",
+                                           link_scale={1: 1.0})
+    assert t_id == pytest.approx(t0)
+    prev = t0
+    for scale in (0.5, 0.25, 0.125):
+        t = transport_sim.simulate_schedule(sched, topo, nbytes,
+                                            level="cluster",
+                                            link_scale={1: scale})
+        assert t > prev               # monotone in the degradation
+        prev = t
+    scaled = transport_sim.apply_link_scale(topo, {1: 0.25})
+    assert scaled.clusters[1].nic_Bps == pytest.approx(
+        topo.clusters[1].nic_Bps / 4)
+    assert scaled.clusters[0].nic_Bps == topo.clusters[0].nic_Bps
+    with pytest.raises(ValueError):
+        transport_sim.apply_link_scale(topo, {1: 0.0})
+    with pytest.raises(ValueError):
+        transport_sim.apply_link_scale(topo, {7: 0.5})

@@ -22,8 +22,14 @@ committed snapshots must not masquerade as fresh CI data — only the
 ``perf-smoke`` job, which just ran the benches, renders the tables
 (via ``bench_section`` / ``plan_bench_section``).
 
+A fifth argument naming a ``CHAOS_report.json``
+(``tests/mdscripts/check_chaos.py --out``) adds the chaos-smoke
+section: injected/detected/recovered totals and the per-fault
+detection/attribution/recovery rows (via ``chaos_section``, which the
+chaos-smoke job also calls directly).
+
 Run:  python tools/ci_fast_tier_report.py <junit.xml> [baseline.json]
-          [BENCH_step.json] [BENCH_plan.json]
+          [BENCH_step.json] [BENCH_plan.json] [CHAOS_report.json]
 """
 
 from __future__ import annotations
@@ -163,6 +169,45 @@ def plan_bench_section(bench_path: pathlib.Path,
               f"{(now_100k - base_100k) * 1e3:+.1f} ms)")
 
 
+def chaos_section(report_path: pathlib.Path) -> None:
+    """Chaos-smoke table from ``tests/mdscripts/check_chaos.py --out``:
+    the injected/detected/recovered totals plus the per-fault
+    detection/attribution/recovery rows.  Gating happens in the
+    chaos-smoke job's dedicated step (it asserts ``meta.pass`` from the
+    regenerated report); this section only renders what that step
+    decided on."""
+    if not report_path.is_file():
+        return
+    try:
+        rep = json.loads(report_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"\n> :warning: unreadable chaos report {report_path}: {e}")
+        return
+    meta = rep.get("meta", {})
+    mark = ":white_check_mark:" if meta.get("pass") else ":warning:"
+    print()
+    print("### Chaos smoke — collective guard vs seeded faults (gated)")
+    print()
+    print(f"seed {meta.get('seed', '?')}, {meta.get('n_steps', '?')} steps; "
+          f"injected {meta.get('injected', '?')} / detected "
+          f"{meta.get('detected', '?')} / recovered "
+          f"{meta.get('recovered', '?')}; "
+          f"{meta.get('false_positives', '?')} false positive(s)")
+    print()
+    print("| fault | injected step | detected step | attribution "
+          "| recovery | bit-identical |")
+    print("|---|---|---|---|---|---|")
+    for row in rep.get("faults", []):
+        print(f"| {row.get('kind', '?')} | {row.get('step', '?')} "
+              f"| {row.get('detected_step', '?')} "
+              f"| {row.get('attribution', '?')} "
+              f"| {row.get('recovery', '?')} "
+              f"| {'yes' if row.get('bit_identical') else 'NO'} |")
+    print()
+    print(f"> {mark} chaos acceptance: "
+          f"{'PASS' if meta.get('pass') else 'FAIL'}")
+
+
 def main() -> int:
     if len(sys.argv) < 2:
         print(__doc__)
@@ -172,6 +217,7 @@ def main() -> int:
                      else DEFAULT_BASELINE)
     bench_path = pathlib.Path(sys.argv[3]) if len(sys.argv) > 3 else None
     plan_path = pathlib.Path(sys.argv[4]) if len(sys.argv) > 4 else None
+    chaos_path = pathlib.Path(sys.argv[5]) if len(sys.argv) > 5 else None
     tot = junit_totals(junit)
     base = None
     if baseline_path.is_file():
@@ -199,6 +245,8 @@ def main() -> int:
         bench_section(bench_path)
     if plan_path is not None:
         plan_bench_section(plan_path, baseline=base)
+    if chaos_path is not None:
+        chaos_section(chaos_path)
     return 0
 
 
